@@ -1,0 +1,69 @@
+"""Kernel micro-benchmarks: interpret-mode correctness profile + analytic
+roofline estimates for the TPU target (wall-clock on CPU interpret mode is
+meaningless for TPU perf, so we report the modelled VMEM working set and
+arithmetic intensity per kernel tile instead)."""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def flash_attention_tiles() -> List[Row]:
+    rows: List[Row] = []
+    d = 128
+    for bq, bkv in ((256, 512), (512, 1024), (1024, 1024)):
+        vmem = (2 * bq * d + 2 * bkv * d) * 2 + bq * d * 4 + 2 * bq * 4
+        flops = 2 * bq * bkv * d * 2            # qk^T + pv
+        hbm = (bq * d + 2 * bkv * d) * 2        # per tile visit
+        rows.append((
+            f"kern/flash_q{bq}_kv{bkv}", vmem / 1024,
+            f"ai={flops/hbm:.0f}flops/B vmem={vmem/2**20:.2f}MiB "
+            f"mxu_aligned={'yes' if bq % 128 == 0 and d % 128 == 0 else 'no'}"))
+    return rows
+
+
+def ssd_tiles() -> List[Row]:
+    rows: List[Row] = []
+    for q, n, p in ((128, 64, 64), (256, 64, 64), (256, 128, 64)):
+        vmem = (q * p + 2 * q * n + 2 * q) * 4 + q * q * 4 + n * p * 4
+        flops = 2 * q * q * n + 2 * q * q * p + 2 * q * n * p
+        hbm = (q * p + 2 * q * n + n * p) * 4
+        rows.append((f"kern/ssd_q{q}_n{n}_p{p}", vmem / 1024,
+                     f"ai={flops/hbm:.0f}flops/B vmem={vmem/2**20:.2f}MiB"))
+    return rows
+
+
+def mlstm_tiles() -> List[Row]:
+    rows: List[Row] = []
+    for q, p in ((128, 64), (256, 64), (256, 128)):
+        vmem = 3 * q * p * 4 + 2 * q * 4 + 2 * q * q * 4 + p * p * 4
+        flops = 2 * q * q * p * 2 + 2 * q * p * p
+        hbm = (3 * q * p + p * p) * 4
+        rows.append((f"kern/mlstm_q{q}_p{p}", vmem / 1024,
+                     f"ai={flops/hbm:.0f}flops/B vmem={vmem/2**20:.2f}MiB"))
+    return rows
+
+
+def swiglu_tiles() -> List[Row]:
+    rows: List[Row] = []
+    for m, f, k in ((256, 512, 512), (512, 512, 1024)):
+        vmem = (m * k + 2 * k * f) * 2 + 2 * m * f * 4
+        flops = 2 * m * k * f * 2
+        # fused: x read once, h written once (no g/u round trip)
+        hbm_fused = (m * k + 2 * k * f + m * f) * 2
+        hbm_unfused = (2 * m * k + 2 * k * f + 5 * m * f) * 2
+        rows.append((
+            f"kern/swiglu_m{m}_f{f}_k{k}", vmem / 1024,
+            f"ai_fused={flops/hbm_fused:.0f} ai_unfused={flops/hbm_unfused:.0f} "
+            f"traffic_saved={1 - hbm_fused/hbm_unfused:.0%}"))
+    return rows
+
+
+ALL = {
+    "kern_flash": flash_attention_tiles,
+    "kern_ssd": ssd_tiles,
+    "kern_mlstm": mlstm_tiles,
+    "kern_swiglu": swiglu_tiles,
+}

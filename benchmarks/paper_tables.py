@@ -1,0 +1,172 @@
+"""Benchmarks reproducing the paper's tables/figures.
+
+table4   — component ideal-memory sizes vs the published numbers
+fig9     — peak memory: planned vs naive (tensor-basis) vs ideal, per case
+fig10    — training latency of the component cases (layer-basis executor
+           vs whole-graph jax.grad — the 'conventional framework' stand-in)
+fig11    — memory & throughput vs batch size (Model A-Linear)
+fig12    — application models: full training vs transfer-learning memory
+fig14    — Tacotron2-style unrolled decoder: memory & per-sample latency
+
+Each function returns a list of CSV rows: (name, us_per_call, derived).
+The memory numbers are exact planner outputs (bytes known before
+execution — the paper's headline property); latency numbers are measured
+on this host's CPU.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.execution_order import compute_execution_order
+from repro.core.ideal import PAPER_TABLE4_KIB, ideal_from_ordered
+from repro.core.planned_exec import (init_params, planned_loss_and_grads,
+                                     reference_loss_and_grads)
+from repro.core.planner import plan_memory
+from repro.core.zoo import ZOO
+
+Row = Tuple[str, float, str]
+
+
+def _shrunk(name: str, width: int = 256):
+    g = ZOO[name]()
+    for l in g.layers:
+        if l.attrs.get("in_features") == 150528:
+            l.attrs["in_features"] = width
+    if g.input_shape == (150528,):
+        object.__setattr__(g, "input_shape", (width,))
+    from repro.core.graph import infer_shapes
+    infer_shapes(g)
+    return g
+
+
+def table4() -> List[Row]:
+    rows: List[Row] = []
+    for name, paper_kib in PAPER_TABLE4_KIB.items():
+        ordered = compute_execution_order(ZOO[name](), 64)
+        ideal = ideal_from_ordered(ordered)
+        ratio = ideal.total_kib / paper_kib
+        rows.append((f"table4/{name}", ideal.total_kib,
+                     f"paper={paper_kib}KiB ratio={ratio:.4f}"))
+    return rows
+
+
+def fig9_peak_memory() -> List[Row]:
+    rows: List[Row] = []
+    for name in PAPER_TABLE4_KIB:
+        o1 = compute_execution_order(ZOO[name](), 64)
+        o2 = compute_execution_order(ZOO[name](), 64)
+        o3 = compute_execution_order(ZOO[name](), 64)
+        planned = plan_memory(o1, "sorting")
+        bestfit = plan_memory(o2, "bestfit")
+        naive = plan_memory(o3, "worstcase")
+        ideal = ideal_from_ordered(o1)
+        rows.append((
+            f"fig9/{name}", planned.total_bytes / 1024,
+            f"ideal={ideal.total_kib:.0f}KiB "
+            f"bestfit={bestfit.total_bytes/1024:.0f}KiB "
+            f"naive={naive.total_bytes/1024:.0f}KiB "
+            f"saving={1 - planned.total_bytes/naive.total_bytes:.1%}"))
+    return rows
+
+
+def _time_step(fn, *args, iters: int = 3) -> float:
+    fn(*args)  # warmup/compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def fig10_latency() -> List[Row]:
+    rows: List[Row] = []
+    cases = ["model_a_linear", "model_b_linear", "model_c_linear", "model_d",
+             "lenet5"]
+    for name in cases:
+        g = _shrunk(name)
+        params = init_params(g, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(32,) + tuple(g.input_shape))
+                        .astype(np.float32))
+        y = jnp.asarray(rng.normal(size=(32,) + tuple(g.label_shape))
+                        .astype(np.float32))
+        planned = jax.jit(lambda p, xx, yy, g=g:
+                          planned_loss_and_grads(g, p, xx, yy)[0])
+        conv = jax.jit(lambda p, xx, yy, g=g:
+                       reference_loss_and_grads(g, p, xx, yy)[0])
+        t_p = _time_step(planned, params, x, y)
+        t_c = _time_step(conv, params, x, y)
+        rows.append((f"fig10/{name}", t_p,
+                     f"conventional={t_c:.0f}us ratio={t_p/t_c:.2f}"))
+    return rows
+
+
+def fig11_batch_sweep() -> List[Row]:
+    rows: List[Row] = []
+    for batch in (8, 16, 32, 64, 128):
+        ordered = compute_execution_order(ZOO["model_a_linear"](), batch)
+        plan = plan_memory(ordered, "bestfit")
+        naive = plan_memory(
+            compute_execution_order(ZOO["model_a_linear"](), batch),
+            "worstcase")
+        rows.append((
+            f"fig11/batch{batch}", plan.total_bytes / 2**20,
+            f"naive={naive.total_bytes/2**20:.0f}MiB "
+            f"fits512MiB={'yes' if plan.total_bytes < 512*2**20 else 'no'}"
+            f"/naive={'yes' if naive.total_bytes < 512*2**20 else 'no'}"))
+    return rows
+
+
+def fig12_applications() -> List[Row]:
+    rows: List[Row] = []
+    for name in ("lenet5", "vgg16", "resnet18", "resnet18_transfer",
+                 "product_rating"):
+        o = compute_execution_order(ZOO[name](), 32)
+        plan = plan_memory(o, "bestfit")
+        naive = plan_memory(compute_execution_order(ZOO[name](), 32),
+                            "worstcase")
+        rows.append((f"fig12/{name}", plan.total_bytes / 2**20,
+                     f"naive={naive.total_bytes/2**20:.1f}MiB "
+                     f"saving={1 - plan.total_bytes/naive.total_bytes:.1%}"))
+    return rows
+
+
+def fig14_tacotron() -> List[Row]:
+    rows: List[Row] = []
+    from repro.core.zoo import tacotron2_decoder
+    for steps in (4, 8, 16):
+        g = tacotron2_decoder(time_steps=steps, mel_dim=16, prenet_dim=64,
+                              lstm_dim=64)
+        o = compute_execution_order(g, 16)
+        plan = plan_memory(o, "bestfit")
+        naive = plan_memory(compute_execution_order(
+            tacotron2_decoder(time_steps=steps, mel_dim=16, prenet_dim=64,
+                              lstm_dim=64), 16), "worstcase")
+        params = init_params(g, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
+        y = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
+        fn = jax.jit(lambda p, xx, yy, g=g:
+                     planned_loss_and_grads(g, p, xx, yy)[0])
+        t = _time_step(fn, params, x, y)
+        rows.append((f"fig14/unroll{steps}", t,
+                     f"planned={plan.total_bytes/2**20:.1f}MiB "
+                     f"naive={naive.total_bytes/2**20:.1f}MiB "
+                     f"saving={1 - plan.total_bytes/naive.total_bytes:.1%}"))
+    return rows
+
+
+ALL = {
+    "table4": table4,
+    "fig9": fig9_peak_memory,
+    "fig10": fig10_latency,
+    "fig11": fig11_batch_sweep,
+    "fig12": fig12_applications,
+    "fig14": fig14_tacotron,
+}

@@ -1,0 +1,36 @@
+"""Quickstart: train a small LM with the full stack (data pipeline ->
+sharded train step -> checkpoint -> restore), on whatever devices exist.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import tempfile
+
+import jax
+
+from repro.configs import ARCHS
+from repro.models.model import build_model, reduce_config
+from repro.train.trainer import quick_train
+
+
+def main() -> None:
+    cfg = reduce_config(ARCHS["llama3.2-3b"], n_layers=2, d_model=64,
+                        vocab=512)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        print(f"== training reduced {cfg.name} "
+              f"({build_model(cfg) and cfg.n_layers}L d={cfg.d_model}) ==")
+        out = quick_train(cfg, steps=30, seq_len=64, global_batch=8,
+                          ckpt_dir=ckpt_dir)
+        first = out["history"][0]["loss"]
+        print(f"loss: {first:.3f} -> {out['final_loss']:.3f}")
+        assert out["final_loss"] < first, "training did not reduce loss"
+
+        # resume from the checkpoint and keep training
+        print("== resuming from checkpoint ==")
+        out2 = quick_train(cfg, steps=40, seq_len=64, global_batch=8,
+                           ckpt_dir=ckpt_dir)
+        print(f"resumed loss: {out2['final_loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Tacotron2-style decoder personalization (paper §5.2, Fig. 14).
+
+The recurrent decoder (prenet -> 2 LSTM -> mel projection) is time-unrolled
+by the Recurrent realizer; unrolled copies share weights via Tensor-sharing
+mode E and accumulate gradients across time (Iteration lifespan) — the
+optimizer applies them once per iteration, exactly as the paper describes
+for Tacotron2 on NNTrainer.
+
+    PYTHONPATH=src python examples/tts_unroll.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.execution_order import compute_execution_order
+from repro.core.planner import plan_memory
+from repro.core.planned_exec import (init_params, planned_loss_and_grads,
+                                     sgd_update)
+from repro.core.zoo import tacotron2_decoder
+
+
+def main() -> None:
+    steps = 4
+    g = tacotron2_decoder(time_steps=steps, mel_dim=16, prenet_dim=48,
+                          lstm_dim=48)
+
+    # E-mode weight sharing: unrolled LSTM copies own NO extra weight memory
+    ordered = compute_execution_order(g, batch=16)
+    shared = [n for n, t in ordered.tensors.items()
+              if n.startswith("W:") and t.merged_into]
+    owned = [n for n, t in ordered.tensors.items()
+             if n.startswith("W:") and not t.merged_into]
+    plan = plan_memory(ordered)
+    print(f"{steps}x unrolled: {len(owned)} owned weight tensors, "
+          f"{len(shared)} E-shared views (zero extra bytes)")
+    print(f"planned peak: {plan.total_bytes/2**20:.2f} MiB")
+
+    # teacher-forced mel regression on a synthetic voice-like target
+    params = init_params(g, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    mel_in = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
+    target = jnp.tanh(mel_in * 0.7 + 0.2)            # fixed mapping to learn
+
+    losses = []
+    for it in range(300):
+        loss, grads = planned_loss_and_grads(g, params, mel_in, target)
+        # gradient clipping (paper: supported for the unrolled decoder)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                             for x in jax.tree_util.tree_leaves(grads)))
+        scale = jnp.minimum(1.0, 5.0 / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(lambda x: x * scale, grads)
+        params = sgd_update(params, grads, lr=0.5)
+        losses.append(float(loss))
+    print(f"teacher-forced training: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    # the tied-weight unrolled stack is a hard function class; the
+    # demo's point is the E-sharing mechanics (grads validated in tests)
+    assert losses[-1] < losses[0] * 0.9
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Generate markdown tables for EXPERIMENTS.md from results/ artifacts."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+RES = Path(__file__).resolve().parent
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = []
+    for p in sorted((RES / "dryrun").glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | — | — | — | — |")
+            continue
+        mem = r["memory_analysis"]
+        peak = mem.get("peak_memory_in_bytes", mem.get("temp_size_in_bytes", 0))
+        args = mem.get("argument_size_in_bytes", 0)
+        coll = r["collectives"]["per_op"]
+        csum = ", ".join(f"{k}:{v['count']}" for k, v in coll.items()
+                         if v["count"])
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | OK | {peak/2**30:.2f} | "
+            f"{args/2**30:.2f} | {r['timing']['compile_s']:.0f}s | {csum} |")
+    hdr = ("| arch | shape | status | peak GiB/dev | args GiB/dev | compile |"
+           " collectives (count) |\n|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def roofline_table() -> str:
+    from repro.launch.roofline import load_all
+    rows = []
+    for r in load_all():
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+            f"**{r['dominant']}** | {r['useful_compute_ratio']:.1%} | "
+            f"{r['roofline_fraction']:.2%} | "
+            f"{r['peak_bytes_per_dev']/2**30:.2f} |")
+    hdr = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant |"
+           " useful | roofline | peak GiB |\n|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def perf_table() -> str:
+    rows = []
+    for p in sorted((RES / "perf").glob("*.json")):
+        r = json.loads(p.read_text())
+        if r["status"] != "ok":
+            rows.append(f"| {r['variant']} | ERROR | | | | | |")
+            continue
+        rows.append(
+            f"| {r['variant']} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+            f"{r['dominant']} | {r['useful_compute_ratio']:.1%} | "
+            f"{r['roofline_fraction']:.2%} |")
+    hdr = ("| variant | t_comp (s) | t_mem (s) | t_coll (s) | dominant |"
+           " useful | roofline |\n|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### single-pod (16x16)\n")
+        print(dryrun_table("pod"))
+        print("\n### multi-pod (2x16x16)\n")
+        print(dryrun_table("multipod"))
+    if which in ("all", "roofline"):
+        print("\n## Roofline\n")
+        print(roofline_table())
+    if which in ("all", "perf"):
+        print("\n## Perf\n")
+        print(perf_table())

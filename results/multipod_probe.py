@@ -1,0 +1,30 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+import json, sys
+sys.path.insert(0, "/root/repo/src")
+from repro.configs import ARCHS, SHAPES
+from repro.launch.mesh import make_production_mesh, DCN_BW, ICI_BW
+from repro.launch.probe import run_probe
+from repro.launch.dryrun import TRAIN_MICROBATCHES
+
+out = {}
+for arch in sys.argv[1:]:
+    cfg = ARCHS[arch]
+    shape = SHAPES["train_4k"]
+    mb = TRAIN_MICROBATCHES.get(arch, 1)
+    p_single = run_probe(cfg, shape, make_production_mesh(multi_pod=False),
+                         microbatches=mb)
+    p_multi = run_probe(cfg, shape, make_production_mesh(multi_pod=True),
+                        microbatches=mb)
+    pod_traffic = max(p_multi["collective_bytes"] - p_single["collective_bytes"], 0)
+    out[arch] = {
+        "coll_singlepod": p_single["collective_bytes"],
+        "coll_multipod": p_multi["collective_bytes"],
+        "pod_axis_bytes": pod_traffic,
+        "t_dcn_s": pod_traffic / DCN_BW,
+        "t_dcn_ef_int8_s": pod_traffic / 4.0 / DCN_BW,
+        "t_ici_s": p_single["collective_bytes"] / ICI_BW,
+    }
+    print(arch, json.dumps(out[arch], indent=1), flush=True)
+json.dump(out, open("/root/repo/results/multipod_dcn.json", "w"), indent=2)

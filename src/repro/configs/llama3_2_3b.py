@@ -1,0 +1,14 @@
+"""llama3.2-3b [dense]: 28L d=3072 24H (GQA kv=8) d_ff 8192, vocab 128256.
+[hf:meta-llama/Llama-3.2-3B family]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-3b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=128256,
+)

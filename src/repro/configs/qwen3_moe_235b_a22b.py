@@ -1,0 +1,18 @@
+"""qwen3-moe-235b-a22b [moe]: 94L d=4096 64H (GQA kv=4) per-expert ffn 1536,
+vocab 151936, MoE 128 experts top-8.  [hf:Qwen/Qwen3-30B-A3B family]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    d_ff=1536,
+    moe_d_ff=1536,
+    vocab=151936,
+    n_experts=128,
+    top_k=8,
+    head_dim=128,
+)

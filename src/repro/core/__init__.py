@@ -1,0 +1,27 @@
+"""NNTrainer-style memory-planned training core, adapted to JAX/TPU.
+
+The paper's contribution, as composable pieces:
+
+* :mod:`repro.core.lifespan`        — tensor lifespans & create modes (Tables 2-3)
+* :mod:`repro.core.graph`           — layer-basis graph IR + Realizers (Table 1)
+* :mod:`repro.core.execution_order` — Algorithm 1 (EOs + MV/RV/E merging)
+* :mod:`repro.core.planner`         — Algorithm 2 + best-fit planner (beyond paper)
+* :mod:`repro.core.ideal`           — §3 ideal-memory calculator (Table 4)
+* :mod:`repro.core.inplace`         — derivative-from-output activation calculus
+* :mod:`repro.core.planned_exec`    — layer-basis F/CG/CD training executor
+* :mod:`repro.core.remat_policy`    — lifespan analysis -> jax.checkpoint policy
+* :mod:`repro.core.offload`         — EO-driven host-offload schedule (§6 roadmap)
+"""
+
+from repro.core.execution_order import compute_execution_order
+from repro.core.ideal import ideal_memory
+from repro.core.lifespan import CreateMode, Lifespan, TensorSpec
+from repro.core.planner import plan_memory
+from repro.core.remat_policy import plan_checkpoint_policy
+from repro.core.offload import plan_offload
+
+__all__ = [
+    "CreateMode", "Lifespan", "TensorSpec",
+    "compute_execution_order", "ideal_memory", "plan_memory",
+    "plan_checkpoint_policy", "plan_offload",
+]

@@ -1,0 +1,155 @@
+"""In-place activation calculus (NNTrainer §3, Fig. 1(c) "InplaceOp").
+
+The paper's key observation: for sigmoid, ``dX = dY * Y * (1 - Y)`` — the
+derivative needs the *output*, not the input.  Storing only the output (and
+letting the input's buffer be reused) halves intermediate-activation memory
+for the conv->act / linear->act pattern that dominates real models.
+
+Each activation here provides:
+  * ``fwd(x)``            — forward
+  * ``deriv_from_out(y)`` — d(act)/dx expressed in terms of y = act(x)
+
+and ``make_inplace_act(fn)`` wraps them in a ``jax.custom_vjp`` whose
+residual is the OUTPUT.  Under ``jax.grad`` this changes which buffer XLA
+must keep alive across the backward pass — the JAX realisation of the
+paper's in-place optimisation (validated in tests against standard autodiff
+to 1e-6 and in benchmarks via ``compiled.memory_analysis()``).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _sigmoid_fwd(x):
+    return jax.nn.sigmoid(x)
+
+
+def _sigmoid_deriv(y):
+    return y * (1.0 - y)
+
+
+def _tanh_fwd(x):
+    return jnp.tanh(x)
+
+
+def _tanh_deriv(y):
+    return 1.0 - y * y
+
+
+def _relu_fwd(x):
+    return jnp.maximum(x, 0.0)
+
+
+def _relu_deriv(y):
+    # y > 0 exactly where x > 0 (ties at 0 have zero derivative anyway)
+    return (y > 0.0).astype(y.dtype)
+
+
+def _softmax_fwd(x):
+    return jax.nn.softmax(x, axis=-1)
+
+
+def _softmax_vjp_from_out(y, dy):
+    # dX = y * (dy - sum(dy * y, axis=-1, keepdims=True))
+    return y * (dy - jnp.sum(dy * y, axis=-1, keepdims=True))
+
+
+_ELEMENTWISE: Dict[str, Tuple[Callable, Callable]] = {
+    "sigmoid": (_sigmoid_fwd, _sigmoid_deriv),
+    "tanh": (_tanh_fwd, _tanh_deriv),
+    "relu": (_relu_fwd, _relu_deriv),
+}
+
+
+def deriv_from_output(fn: str, y, dy):
+    """dLoss/dX given the activation *output* y and upstream derivative dy."""
+    if fn == "softmax":
+        return _softmax_vjp_from_out(y, dy)
+    fwd, deriv = _ELEMENTWISE[fn]
+    return dy * deriv(y)
+
+
+def apply_activation(fn: str, x):
+    if fn == "softmax":
+        return _softmax_fwd(x)
+    return _ELEMENTWISE[fn][0](x)
+
+
+def make_inplace_act(fn: str):
+    """An activation whose VJP residual is its OUTPUT (not input).
+
+    Standard ``jax.nn.sigmoid`` under autodiff keeps the *input* alive for
+    the backward pass; this version keeps the output instead, allowing XLA
+    to reuse the input's buffer — NNTrainer's MV in-place merge.
+    """
+
+    @jax.custom_vjp
+    def act(x):
+        return apply_activation(fn, x)
+
+    def act_fwd(x):
+        y = apply_activation(fn, x)
+        return y, y  # residual = output only
+
+    def act_bwd(y, dy):
+        return (deriv_from_output(fn, y, dy),)
+
+    act.defvjp(act_fwd, act_bwd)
+    return act
+
+
+# Ready-made in-place activations.
+sigmoid = make_inplace_act("sigmoid")
+tanh = make_inplace_act("tanh")
+relu = make_inplace_act("relu")
+softmax = make_inplace_act("softmax")
+
+
+def make_inplace_batchnorm():
+    """Batch-norm whose backward uses the normalised output (paper §3:
+    'this is applied to batch normalization as well').
+
+    For y = gamma * xhat + beta, the backward reconstructs
+    xhat = (y - beta) / gamma and never needs x:
+        dxhat = dy * gamma
+        dx    = (1/N) * inv_std * (N*dxhat - sum(dxhat) - xhat*sum(dxhat*xhat))
+        dgamma = sum(dy * xhat); dbeta = sum(dy)
+    Residuals: output y, gamma, beta, inv_std — all O(C) except y (which is
+    the tensor the in-place merge shares with the input).
+    """
+
+    @jax.custom_vjp
+    def bn(x, gamma, beta, eps=1e-5):
+        mean = jnp.mean(x, axis=0, keepdims=True)
+        var = jnp.var(x, axis=0, keepdims=True)
+        inv_std = jax.lax.rsqrt(var + eps)
+        return gamma * (x - mean) * inv_std + beta
+
+    def bn_fwd(x, gamma, beta, eps=1e-5):
+        mean = jnp.mean(x, axis=0, keepdims=True)
+        var = jnp.var(x, axis=0, keepdims=True)
+        inv_std = jax.lax.rsqrt(var + eps)
+        y = gamma * (x - mean) * inv_std + beta
+        return y, (y, gamma, beta, inv_std)
+
+    def bn_bwd(res, dy):
+        y, gamma, beta, inv_std = res
+        n = y.shape[0]
+        xhat = (y - beta) / jnp.where(gamma == 0, 1.0, gamma)
+        dxhat = dy * gamma
+        sum_dxhat = jnp.sum(dxhat, axis=0, keepdims=True)
+        sum_dxhat_xhat = jnp.sum(dxhat * xhat, axis=0, keepdims=True)
+        dx = (inv_std / n) * (n * dxhat - sum_dxhat - xhat * sum_dxhat_xhat)
+        dgamma = jnp.sum(dy * xhat, axis=0)
+        dbeta = jnp.sum(dy, axis=0)
+        return dx, dgamma, dbeta, None
+
+    bn.defvjp(bn_fwd, bn_bwd)
+    return bn
+
+
+batchnorm = make_inplace_batchnorm()

@@ -1,0 +1,119 @@
+"""Execution-order-driven host offload scheduling.
+
+The NNTrainer paper's roadmap (§6): "Dynamic off-loading is expected to be
+highly efficient because NNTrainer can predict and decide when a buffer is
+accessed; thus, we can swap in and out proactively in background."  This
+module realises that prediction on TPU: the execution-order analysis gives
+every saved activation a write EO (producer forward) and a read EO (consumer
+compute-gradient), so the *idle distance* between them is known statically.
+
+Tensors whose idle distance exceeds a threshold — i.e. activations of early
+layers in a deep stack, which sit untouched through the entire remaining
+forward and most of the backward — are offloaded to host memory and
+prefetched back ``prefetch_margin`` phases before their read.
+
+On TPU this lowers to ``jax.checkpoint`` offload policies
+(device->pinned-host copies overlapped with compute by XLA); the schedule
+itself (what to offload, when to prefetch) is what the EO analysis decides.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core.execution_order import OrderedTensors
+from repro.core.lifespan import CreateMode
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadDecision:
+    name: str
+    nbytes: int
+    write_eo: int
+    read_eo: int
+    prefetch_at_eo: int
+
+    @property
+    def idle_phases(self) -> int:
+        return self.read_eo - self.write_eo
+
+
+@dataclasses.dataclass
+class OffloadSchedule:
+    decisions: Tuple[OffloadDecision, ...]
+    hbm_bytes_saved: int
+    dma_bytes: int                      # total device<->host traffic (2x size)
+    peak_inflight_prefetch: int
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(d.name for d in self.decisions)
+
+
+def plan_offload(ordered: OrderedTensors, *, min_idle_phases: int = 4,
+                 min_bytes: int = 1 << 20, prefetch_margin: int = 2,
+                 hbm_budget_bytes: Optional[int] = None) -> OffloadSchedule:
+    """Choose saved activations to offload based on EO idle distance.
+
+    Only CREATE-owner activation tensors (``X:``) qualify — weights and
+    derivatives have short or permanent residency.  Offload the largest,
+    longest-idle tensors first until the HBM budget is met (or all
+    candidates are taken when no budget is given).
+    """
+    candidates: List[OffloadDecision] = []
+    for t in ordered.planned_tensors():
+        if not t.name.startswith(("X:", "S:")):
+            continue
+        if len(t.exec_orders) < 2:
+            continue
+        write, read = t.min_eo, t.max_eo
+        if read - write < min_idle_phases or t.nbytes < min_bytes:
+            continue
+        candidates.append(OffloadDecision(
+            name=t.name, nbytes=t.nbytes, write_eo=write, read_eo=read,
+            prefetch_at_eo=max(write, read - prefetch_margin),
+        ))
+    # biggest byte-phases product first: most HBM-seconds saved per DMA byte
+    candidates.sort(key=lambda d: d.nbytes * d.idle_phases, reverse=True)
+
+    chosen: List[OffloadDecision] = []
+    saved = 0
+    for d in candidates:
+        chosen.append(d)
+        saved += d.nbytes
+        if hbm_budget_bytes is not None and saved >= hbm_budget_bytes:
+            break
+
+    # peak simultaneous prefetch traffic (for ICI/DMA contention estimates)
+    peak = 0
+    for d in chosen:
+        inflight = sum(
+            o.nbytes for o in chosen
+            if o.prefetch_at_eo <= d.prefetch_at_eo <= o.read_eo
+        )
+        peak = max(peak, inflight)
+
+    return OffloadSchedule(
+        decisions=tuple(chosen),
+        hbm_bytes_saved=saved,
+        dma_bytes=2 * saved,
+        peak_inflight_prefetch=peak,
+    )
+
+
+def offload_policy(names: Sequence[str]):
+    """jax.checkpoint policy offloading the given names to host memory.
+
+    Falls back to plain save when the offload policy is unavailable in the
+    installed JAX (the schedule itself is produced regardless).
+    """
+    cp = jax.checkpoint_policies
+    if hasattr(cp, "save_and_offload_only_these_names"):
+        return cp.save_and_offload_only_these_names(
+            names_which_can_be_saved=[],
+            names_which_can_be_offloaded=list(names),
+            offload_src="device", offload_dst="pinned_host",
+        )
+    return cp.save_only_these_names(*names)

@@ -1,0 +1,248 @@
+"""Memory Planner (NNTrainer §4.2, Algorithm 2) + beyond-paper planners.
+
+The planner maps each CREATE-mode tensor (post-merge) to a byte offset in a
+single arena (the Memory Pool) such that tensors whose execution-order
+intervals overlap never share bytes.  Peak memory is known *before*
+execution — the property the paper highlights for avoiding OOM crashes.
+
+Three planners are provided:
+
+* :class:`SortingPlanner` — the paper's Algorithm 2, faithfully: sort by
+  ascending ``min(EO)`` (ties: descending ``max(EO)``), then greedily reuse
+  the storage of any already-placed tensor whose interval has fully expired.
+  We add the size-fit check the pseudo-code leaves implicit (a tensor may
+  only reuse a region at least as large as itself).
+
+* :class:`BestFitPlanner` — beyond paper (the paper names fragmentation
+  minimisation as future work): interval-overlap-aware offset assignment
+  that scans *gaps* between already-placed live tensors and picks the
+  tightest fit, falling back to extending the arena.  This is classic
+  best-fit address assignment on lifetime intervals (cf. XLA's buffer
+  assignment heuristics).
+
+* :class:`WorstCasePlanner` — no reuse at all; models a naive tensor-basis
+  framework's peak for the Fig. 9 comparison.
+
+All planners return a :class:`Plan` that can be validated (no two live
+tensors overlap in [offset, offset+nbytes)) and queried for peak bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.execution_order import OrderedTensors
+from repro.core.lifespan import CreateMode, TensorSpec
+
+ALIGN = 64  # byte alignment for every arena slot (cache-line / vector width)
+
+
+def _align(n: int) -> int:
+    return (n + ALIGN - 1) // ALIGN * ALIGN
+
+
+@dataclasses.dataclass
+class Placement:
+    name: str
+    offset: int
+    nbytes: int
+    min_eo: int
+    max_eo: int
+
+    @property
+    def end(self) -> int:
+        return self.offset + self.nbytes
+
+
+@dataclasses.dataclass
+class Plan:
+    placements: Dict[str, Placement]
+    arena_bytes: int
+    planner: str
+    # bytes NOT in the arena (placeholders: model inputs / labels)
+    external_bytes: int = 0
+
+    @property
+    def peak_bytes(self) -> int:
+        return self.arena_bytes
+
+    @property
+    def total_bytes(self) -> int:
+        """Arena + externally-held placeholders (the paper's 'ideal' counts
+        inputs/labels since they reside in process memory during training)."""
+        return self.arena_bytes + self.external_bytes
+
+    def offset_of(self, name: str) -> int:
+        return self.placements[name].offset
+
+    def validate(self) -> None:
+        """No two tensors with overlapping EO intervals may overlap in bytes."""
+        ps = list(self.placements.values())
+        for i in range(len(ps)):
+            for j in range(i + 1, len(ps)):
+                a, b = ps[i], ps[j]
+                lifetimes_overlap = not (a.max_eo < b.min_eo or b.max_eo < a.min_eo)
+                bytes_overlap = not (a.end <= b.offset or b.end <= a.offset)
+                if lifetimes_overlap and bytes_overlap:
+                    raise AssertionError(
+                        f"overlap: {a.name} [{a.offset},{a.end}) eo[{a.min_eo},{a.max_eo}] "
+                        f"vs {b.name} [{b.offset},{b.end}) eo[{b.min_eo},{b.max_eo}]"
+                    )
+        for p in ps:
+            if p.end > self.arena_bytes:
+                raise AssertionError(f"{p.name} exceeds arena")
+
+    def utilization(self) -> float:
+        """max over time of live bytes / arena bytes (1.0 = zero fragmentation)."""
+        if not self.placements:
+            return 1.0
+        events = sorted({p.min_eo for p in self.placements.values()}
+                        | {p.max_eo for p in self.placements.values()})
+        peak_live = 0
+        for t in events:
+            live = sum(p.nbytes for p in self.placements.values()
+                       if p.min_eo <= t <= p.max_eo)
+            peak_live = max(peak_live, live)
+        return peak_live / self.arena_bytes if self.arena_bytes else 1.0
+
+
+def _planned_and_external(ordered: OrderedTensors) -> Tuple[List[TensorSpec], int]:
+    planned = ordered.planned_tensors()
+    external = sum(
+        t.nbytes for t in ordered.tensors.values()
+        if t.create_mode == CreateMode.PLACEHOLDER
+    )
+    return planned, external
+
+
+class SortingPlanner:
+    """Algorithm 2 — the paper's simple sorting-based planner."""
+
+    name = "sorting"
+
+    def plan(self, ordered: OrderedTensors) -> Plan:
+        tensors, external = _planned_and_external(ordered)
+        # line 1-4: sort ascending min EO; ties broken by descending max EO
+        tensors = sorted(tensors, key=lambda t: (t.min_eo, -t.max_eo))
+        placements: Dict[str, Placement] = {}
+        order_placed: List[Placement] = []
+        arena = 0
+        for t in tensors:
+            nbytes = _align(t.nbytes)
+            reuse: Optional[Placement] = None
+            # line 8-13: scan earlier tensors back-to-front for an expired one
+            for prev in reversed(order_placed):
+                if prev.max_eo < t.min_eo and prev.nbytes >= nbytes:
+                    # region fully expired and large enough — but we must also
+                    # ensure no *other* live tensor has since been placed there
+                    if not self._region_busy(order_placed, prev, t, placements):
+                        reuse = prev
+                        break
+            if reuse is not None:
+                pl = Placement(t.name, reuse.offset, nbytes, t.min_eo, t.max_eo)
+            else:
+                pl = Placement(t.name, arena, nbytes, t.min_eo, t.max_eo)
+                arena += nbytes
+            placements[t.name] = pl
+            order_placed.append(pl)
+            t.offset = pl.offset
+        plan = Plan(placements, arena, self.name, external)
+        plan.validate()
+        return plan
+
+    @staticmethod
+    def _region_busy(placed: List[Placement], region: Placement,
+                     t: TensorSpec, placements: Dict[str, Placement]) -> bool:
+        """True if any tensor live during t's interval occupies region bytes."""
+        for other in placed:
+            if other is region:
+                continue
+            bytes_overlap = not (
+                other.end <= region.offset or region.offset + _align(t.nbytes) <= other.offset
+            )
+            life_overlap = not (other.max_eo < t.min_eo or t.max_eo < other.min_eo)
+            if bytes_overlap and life_overlap:
+                return True
+        return False
+
+
+class BestFitPlanner:
+    """Beyond-paper: best-fit gap search over lifetime intervals.
+
+    For each tensor (sorted by min EO, then size descending), collect the
+    offsets blocked by tensors whose lifetime overlaps, then choose the
+    smallest gap that fits; extend the arena only when no gap fits.
+    """
+
+    name = "bestfit"
+
+    def plan(self, ordered: OrderedTensors) -> Plan:
+        tensors, external = _planned_and_external(ordered)
+        tensors = sorted(tensors, key=lambda t: (t.min_eo, -t.nbytes))
+        placements: Dict[str, Placement] = {}
+        arena = 0
+        for t in tensors:
+            nbytes = _align(t.nbytes)
+            blockers = sorted(
+                (p for p in placements.values()
+                 if not (p.max_eo < t.min_eo or t.max_eo < p.min_eo)),
+                key=lambda p: p.offset,
+            )
+            best_off: Optional[int] = None
+            best_gap = None
+            cursor = 0
+            for b in blockers:
+                gap = b.offset - cursor
+                if gap >= nbytes and (best_gap is None or gap < best_gap):
+                    best_off, best_gap = cursor, gap
+                cursor = max(cursor, b.end)
+            # trailing space inside current arena
+            tail_gap = arena - cursor
+            if tail_gap >= nbytes and (best_gap is None or tail_gap < best_gap):
+                best_off, best_gap = cursor, tail_gap
+            if best_off is None:
+                best_off = cursor
+                arena = max(arena, best_off + nbytes)
+            pl = Placement(t.name, best_off, nbytes, t.min_eo, t.max_eo)
+            placements[t.name] = pl
+            t.offset = pl.offset
+        plan = Plan(placements, arena, self.name, external)
+        plan.validate()
+        return plan
+
+
+class WorstCasePlanner:
+    """No reuse: every tensor gets fresh storage (naive-framework model)."""
+
+    name = "worstcase"
+
+    def plan(self, ordered: OrderedTensors) -> Plan:
+        # Include would-be views as separate allocations: a tensor-op-basis
+        # framework without lifetime analysis materialises each of them.
+        tensors = [
+            t for t in ordered.tensors.values()
+            if t.create_mode != CreateMode.PLACEHOLDER
+        ]
+        external = sum(
+            t.nbytes for t in ordered.tensors.values()
+            if t.create_mode == CreateMode.PLACEHOLDER
+        )
+        placements: Dict[str, Placement] = {}
+        arena = 0
+        for t in sorted(tensors, key=lambda t: t.min_eo):
+            nbytes = _align(t.nbytes)
+            placements[t.name] = Placement(t.name, arena, nbytes, t.min_eo, t.max_eo)
+            arena += nbytes
+        return Plan(placements, arena, self.name, external)
+
+
+PLANNERS = {
+    "sorting": SortingPlanner,
+    "bestfit": BestFitPlanner,
+    "worstcase": WorstCasePlanner,
+}
+
+
+def plan_memory(ordered: OrderedTensors, planner: str = "sorting") -> Plan:
+    return PLANNERS[planner]().plan(ordered)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package ships kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd public wrapper with interpret fallback off-TPU) and
+ref.py (pure-jnp oracle used by the allclose test sweeps).
+"""

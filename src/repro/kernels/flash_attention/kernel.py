@@ -1,0 +1,141 @@
+"""Pallas TPU flash-attention (causal, GQA) — forward kernel.
+
+Schedule: grid (batch*q_heads, num_q_blocks, num_kv_blocks) with KV
+innermost; the accumulator, running max and running sum live in VMEM
+scratch and persist across KV grid steps (TPU grids execute sequentially,
+so scratch carries state — the canonical Pallas flash pattern).
+
+BlockSpecs tile Q/K/V/O into VMEM:
+
+    q block: (1, block_q,  head_dim)  — revisited for every kv step
+    k block: (1, block_kv, head_dim)  — row index maps q-head -> kv-head
+                                        (GQA without materialising repeats)
+    v block: (1, block_kv, head_dim)
+    o block: (1, block_q,  head_dim)  — written on the last kv step
+
+VMEM working set = (2*block_q + 2*block_kv) * head_dim * bytes + fp32
+scratch; with 512/1024 blocks and head_dim 128 bf16 that is ~0.9 MiB,
+leaving headroom for double buffering.  All tile dims are multiples of 128
+(MXU/VREG alignment).
+
+Causality is handled at block granularity: fully-masked kv blocks are
+skipped via ``pl.when`` (no MXU work), diagonal blocks apply the
+elementwise mask.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                      causal: bool, sm_scale: float, block_q: int,
+                      block_kv: int, num_kv_blocks: int, seq_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # (block_q, d)
+        k = k_ref[0].astype(jnp.float32)            # (block_kv, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale  # (bq, bkv)
+
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = k_pos < seq_kv
+        if causal:
+            q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            valid = valid & (q_pos >= k_pos)
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[...]                         # (block_q, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    if causal:
+        # skip kv blocks strictly above the causal diagonal
+        pl.when(k_start <= q_start + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        o_ref[0, ...] = (acc_ref[...]
+                         / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, block_q: int = 512,
+                        block_kv: int = 1024, interpret: bool = False):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) -> (B, Hq, Sq, D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, "GQA requires q_heads % kv_heads == 0"
+    groups = hq // hkv
+    sm_scale = 1.0 / math.sqrt(d)
+
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    nq = -(-sq // block_q)
+    nkv = -(-skv // block_kv)
+    pq, pkv = nq * block_q - sq, nkv * block_kv - skv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+
+    qf = q.reshape(b * hq, nq * block_q, d)
+    kf = k.reshape(b * hkv, nkv * block_kv, d)
+    vf = v.reshape(b * hkv, nkv * block_kv, d)
+
+    def kv_row(i):
+        return (i // hq) * hkv + (i % hq) // groups
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, causal=causal, sm_scale=sm_scale,
+        block_q=block_q, block_kv=block_kv, num_kv_blocks=nkv, seq_kv=skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, qi, ki: (i, qi, 0)),
+            pl.BlockSpec((1, block_kv, d),
+                         lambda i, qi, ki: (kv_row(i), ki, 0)),
+            pl.BlockSpec((1, block_kv, d),
+                         lambda i, qi, ki: (kv_row(i), ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda i, qi, ki: (i, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, nq * block_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, nq * block_q, d)[:, :, :sq]

@@ -1,0 +1,25 @@
+"""Jit'd wrapper for the fused SwiGLU kernel (interpret fallback off-TPU)."""
+
+import functools
+
+import jax
+
+from repro.kernels.fused_swiglu.kernel import fused_swiglu_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:
+        return False
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_f", "block_k",
+                                    "interpret"))
+def fused_swiglu(x, wg, wu, *, block_m: int = 256, block_f: int = 512,
+                 block_k: int = 512, interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return fused_swiglu_pallas(x, wg, wu, block_m=block_m, block_f=block_f,
+                               block_k=block_k, interpret=interpret)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused SwiGLU kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def swiglu_ref(x, wg, wu):
+    """x: (M, K); wg, wu: (K, F) -> silu(x wg) * (x wu), fp32 accumulation."""
+    g = jnp.dot(x, wg, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu, preferred_element_type=jnp.float32)
+    return (jax.nn.silu(g) * u).astype(x.dtype)

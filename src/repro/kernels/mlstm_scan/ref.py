@@ -1,0 +1,49 @@
+"""Oracle for the mLSTM scan: exact stabilised sequential recurrence
+(xLSTM arXiv:2405.04517, eqs. 19-27).
+
+    m_t = max(log f_t + m_{t-1}, i_t)
+    C_t = exp(log f_t + m_{t-1} - m_t) C_{t-1} + exp(i_t - m_t) v_t k_t^T
+    n_t = exp(log f_t + m_{t-1} - m_t) n_{t-1} + exp(i_t - m_t) k_t
+    y_t = C_t^T q_t / max(|n_t . q_t|, exp(-m_t))
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_ref(q, k, v, i_gate, f_gate):
+    """q,k,v: (b,s,h,p); i_gate,f_gate: (b,s,h) raw logits -> (b,s,h,p)."""
+    b, s, h, p = q.shape
+    scale = 1.0 / math.sqrt(p)
+    lf = jax.nn.log_sigmoid(f_gate)
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, lit, lft = inp
+        m_new = jnp.maximum(lft + m, lit)
+        alpha = jnp.exp(lft + m - m_new)
+        beta = jnp.exp(lit - m_new)
+        C_new = C * alpha[..., None, None] \
+            + beta[..., None, None] * jnp.einsum("bhp,bhr->bhpr", kt, vt)
+        n_new = n * alpha[..., None] + beta[..., None] * kt
+        qs = qt * scale
+        num = jnp.einsum("bhp,bhpr->bhr", qs, C_new)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", qs, n_new)),
+                          jnp.exp(-m_new))
+        return (C_new, n_new, m_new), num / den[..., None]
+
+    C0 = jnp.zeros((b, h, p, p), jnp.float32)
+    n0 = jnp.zeros((b, h, p), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    _, ys = jax.lax.scan(
+        step, (C0, n0, m0),
+        (q.transpose(1, 0, 2, 3).astype(jnp.float32),
+         k.transpose(1, 0, 2, 3).astype(jnp.float32),
+         v.transpose(1, 0, 2, 3).astype(jnp.float32),
+         i_gate.transpose(1, 0, 2).astype(jnp.float32),
+         lf.transpose(1, 0, 2).astype(jnp.float32)))
+    return ys.transpose(1, 0, 2, 3)

@@ -1,0 +1,34 @@
+"""Oracle for the SSD/mamba2 scan: the exact sequential recurrence.
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t^T      (outer product)
+    y_t = C_t . h_t
+
+h: (N, P) per head; A = -exp(A_log) (negative decay rate).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A_log, B, C):
+    """x: (b,s,h,p); dt: (b,s,h); A_log: (h,); B,C: (b,s,n) -> y: (b,s,h,p)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    A = -jnp.exp(A_log)                                     # (h,)
+
+    def step(hstate, inp):
+        xt, dtt, Bt, Ct = inp                               # (b,h,p),(b,h),(b,n)
+        dA = jnp.exp(dtt * A[None])                         # (b,h)
+        dBx = jnp.einsum("bn,bh,bhp->bhnp", Bt, dtt, xt)
+        hnew = hstate * dA[..., None, None] + dBx
+        y = jnp.einsum("bn,bhnp->bhp", Ct, hnew)
+        return hnew, y
+
+    h0 = jnp.zeros((b, h, n, p), x.dtype)
+    _, ys = jax.lax.scan(step, h0, (x.transpose(1, 0, 2, 3),
+                                    dt.transpose(1, 0, 2),
+                                    B.transpose(1, 0, 2),
+                                    C.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3)                         # (b,s,h,p)

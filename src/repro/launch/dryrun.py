@@ -1,0 +1,208 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be executed as a standalone process (``python -m repro.launch.dryrun``)
+— the XLA_FLAGS line above runs before ANY other import so the host
+platform exposes 512 placeholder devices before jax locks its device count.
+
+For each cell we record into results/dryrun/<arch>__<shape>__<mesh>.json:
+  * memory_analysis   — per-device argument/output/temp/peak bytes
+  * cost_analysis     — HLO FLOPs / bytes accessed (per partition)
+  * collective stats  — operand/result bytes per collective op (post-SPMD)
+  * timing            — trace/lower/compile wall seconds
+
+Failures (sharding mismatch, OOM at compile, unsupported collective) are
+bugs in the system; the run records them with status=error for triage.
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, shape_applicable   # noqa: E402
+from repro.launch.hlo_analysis import analyze_collectives   # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.models.model import build_model                  # noqa: E402
+from repro.optim import make_optimizer                      # noqa: E402
+from repro.train.step import build_step, lower_step         # noqa: E402
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+# Per-arch microbatch counts for train_4k: keep per-microbatch per-device
+# token counts (and MoE dispatch buffers) inside HBM.
+TRAIN_MICROBATCHES = {
+    "qwen3-moe-235b-a22b": 8,
+    "granite-34b": 8,
+    "llama-3.2-vision-11b": 4,
+    "zamba2-7b": 4,
+    "phi4-mini-3.8b": 2,
+    "minitron-4b": 2,
+    "llama3.2-3b": 2,
+}
+
+# optimizer-state dtype: int8 block-quantised for the giants (ZeRO + 8-bit
+# Adam keeps master+moments inside 16 GiB/chip), fp32 elsewhere.
+OPT_STATE_DTYPE = {
+    "qwen3-moe-235b-a22b": "int8",
+    "granite-34b": "int8",
+}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Path, *, force: bool = False,
+             microbatches: int | None = None) -> dict:
+    mesh_name = "multipod" if multi_pod else "pod"
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_name}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "status": "skipped", "skip_reason": why,
+    }
+    if not ok:
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rec, indent=2))
+        return rec
+
+    try:
+        t0 = time.time()
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        model = build_model(cfg)
+        opt = make_optimizer(
+            "adamw", state_dtype=OPT_STATE_DTYPE.get(arch, "float32")) \
+            if shape.kind == "train" else None
+        mb = microbatches if microbatches is not None \
+            else (TRAIN_MICROBATCHES.get(arch, 1)
+                  if shape.kind == "train" else 1)
+        bundle = build_step(model, opt, mesh, shape, microbatches=mb)
+        t1 = time.time()
+        lowered = lower_step(bundle)
+        t2 = time.time()
+        compiled = lowered.compile()
+        t3 = time.time()
+
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "alias_size_in_bytes",
+                          "generated_code_size_in_bytes",
+                          "peak_memory_in_bytes"):
+                if hasattr(ma, field):
+                    mem[field] = int(getattr(ma, field))
+        except Exception as e:  # noqa: BLE001
+            mem["error"] = str(e)
+
+        cost = {}
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            for k in ("flops", "bytes accessed", "optimal_seconds",
+                      "utilization operand 0 {}", "transcendentals"):
+                if k in ca:
+                    cost[k.replace(" ", "_")] = float(ca[k])
+            # keep every numeric entry that looks aggregate
+            for k, v in ca.items():
+                if isinstance(v, (int, float)) and "{" not in k:
+                    cost[k.replace(" ", "_")] = float(v)
+        except Exception as e:  # noqa: BLE001
+            cost["error"] = str(e)
+
+        hlo = compiled.as_text()
+        coll = analyze_collectives(hlo)
+
+        # unrolled cost probe (single-pod only; the roofline table is
+        # single-pod per the assignment) — accurate per-layer FLOP/byte/
+        # collective extrapolation, since cost_analysis counts while-loop
+        # bodies once
+        probe = None
+        if not multi_pod:
+            try:
+                from repro.launch.probe import run_probe
+                probe = run_probe(cfg, shape, mesh, microbatches=mb)
+            except Exception as e:  # noqa: BLE001
+                probe = {"error": str(e),
+                         "traceback": traceback.format_exc()[-2000:]}
+
+        rec.update({
+            "status": "ok",
+            "chips": int(mesh.devices.size),
+            "microbatches": mb,
+            "param_count": cfg.param_count(),
+            "active_param_count": cfg.active_param_count(),
+            "memory_analysis": mem,
+            "cost_analysis": cost,
+            "collectives": coll,
+            "probe": probe,
+            "hlo_bytes": len(hlo),
+            "timing": {"build_s": t1 - t0, "lower_s": t2 - t1,
+                       "compile_s": t3 - t2},
+        })
+    except Exception as e:  # noqa: BLE001
+        rec.update({"status": "error", "error": str(e),
+                    "traceback": traceback.format_exc()[-4000:]})
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--out", default=str(RESULTS))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_ok = n_err = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, out_dir, force=args.force,
+                               microbatches=args.microbatches)
+                tag = f"{arch:24s} {shape:12s} {'multipod' if mp else 'pod':8s}"
+                if rec["status"] == "ok":
+                    n_ok += 1
+                    mem = rec["memory_analysis"]
+                    peak = mem.get("peak_memory_in_bytes",
+                                   mem.get("temp_size_in_bytes", 0))
+                    print(f"OK    {tag} peak={peak/2**30:7.2f}GiB "
+                          f"flops={rec['cost_analysis'].get('flops', 0):.3e} "
+                          f"coll={rec['collectives']['collective_bytes']/2**30:8.3f}GiB "
+                          f"compile={rec['timing']['compile_s']:6.1f}s",
+                          flush=True)
+                elif rec["status"] == "skipped":
+                    n_skip += 1
+                    print(f"SKIP  {tag} ({rec['skip_reason'][:60]})", flush=True)
+                else:
+                    n_err += 1
+                    print(f"ERROR {tag} {rec['error'][:120]}", flush=True)
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Post-SPMD HLO analysis: collective traffic, per-op tallies.
+
+``compiled.as_text()`` is the post-partitioning module: every cross-device
+transfer appears as an explicit all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction.  We parse instruction
+definitions into a name->shape table, then sum OPERAND bytes for every
+collective (operand bytes ~ bytes leaving the device, the roofline-relevant
+quantity; for all-gather the result is counted on the receive side and for
+reduce-scatter the operand side — consistent with ring-algorithm traffic
+within a factor of 2(n-1)/n).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one HLO type string, handling tuples of shapes."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def analyze_collectives(hlo_text: str) -> Dict:
+    """Sum collective operand bytes and per-op counts from post-SPMD HLO."""
+    # name -> result type string
+    result_types: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # rhs starts with the result type, e.g. "bf16[8,128]{1,0} all-gather(..."
+        tm = re.match(r"^(\([^)]*\)|[\w\[\]\{\},\.]+)", rhs)
+        if tm:
+            result_types[name] = tm.group(1)
+
+    per_op: Dict[str, Dict[str, float]] = {
+        op: {"count": 0, "operand_bytes": 0, "result_bytes": 0}
+        for op in COLLECTIVE_OPS
+    }
+    for line in hlo_text.splitlines():
+        for op in COLLECTIVE_OPS:
+            token = f" {op}("
+            alt = f"{op}-start("
+            if token not in line and alt not in line:
+                continue
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            rhs = m.group(2)
+            tm = re.match(r"^(\([^)]*\)|[\w\[\]\{\},\.]+)", rhs)
+            result_bytes = _shape_bytes(tm.group(1)) if tm else 0
+            # operands: names inside the first (...) after the op token
+            pidx = rhs.find(f"{op}(")
+            if pidx < 0:
+                pidx = rhs.find(f"{op}-start(")
+            args_str = rhs[rhs.find("(", pidx) + 1:]
+            depth = 1
+            out = []
+            for ch in args_str:
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                out.append(ch)
+            args_str = "".join(out)
+            operand_bytes = 0
+            for arg in args_str.split(","):
+                arg = arg.strip().lstrip("%")
+                arg = arg.split(" ")[0]
+                if arg in result_types:
+                    operand_bytes += _shape_bytes(result_types[arg])
+            d = per_op[op]
+            d["count"] += 1
+            d["operand_bytes"] += operand_bytes
+            d["result_bytes"] += result_bytes
+            break
+
+    total_operand = sum(d["operand_bytes"] for d in per_op.values())
+    total_result = sum(d["result_bytes"] for d in per_op.values())
+    return {
+        "per_op": per_op,
+        "collective_operand_bytes": total_operand,
+        "collective_result_bytes": total_result,
+        "collective_bytes": max(total_operand, total_result),
+    }
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,341 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Perf hillclimbing driver (§Perf): named variants of the three selected
+cells, each lowered through the unrolled cost probe, with kernel-true
+analytic accounting for the VMEM-resident tile math.
+
+    python -m repro.launch.perf --variant A1 [--full-mem]
+
+Variants (hypotheses recorded in EXPERIMENTS.md §Perf):
+
+Cell A = granite-moe-1b-a400m x train_4k   (worst roofline fraction)
+  A0  baseline (GShard one-hot dispatch, remat on)
+  A1  moe_impl=gather        — kill the O(S*E*C*d) dispatch einsums
+  A2  A1 + remat off         — HBM headroom (peak 0.65 GiB of 16)
+  A3  A2 + kernel-true attention accounting (skip-diff + analytic)
+
+Cell B = xlstm-1.3b x train_4k             (most collective-bound)
+  B0  baseline (TP over d_inner -> per-layer psums)
+  B1  pure-DP remap: batch over (data, model); params replicated per chip
+      (int8 Adam states keep the optimizer inside HBM)
+  B2  B1 + remat off
+  B3  B2 + kernel-true mLSTM accounting
+
+Cell C = granite-34b x train_4k            (memory-dominant; the paper's
+                                            remat/planning lever)
+  C0  baseline (ZeRO-3 FSDP + remat)
+  C1  remat off              — HBM headroom (peak 2.5 GiB of 16)
+  C2  C1 + ZeRO-1 instead of ZeRO-3 (params TP-only; int8 moments) — kill
+      per-layer weight all-gathers
+  C3  C2 + kernel-true attention accounting
+"""
+
+import argparse      # noqa: E402
+import dataclasses  # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "perf"
+
+
+# ---------------------------------------------------------------------------
+# Kernel-true analytic costs (per device, whole model, per step)
+# ---------------------------------------------------------------------------
+
+def kernel_true_attention(cfg, shape, chips: int) -> dict:
+    """Flash-kernel FLOPs/HBM-bytes for all attention layers.
+
+    The Pallas kernel keeps scores/probs in VMEM; HBM traffic is q,o once
+    plus k,v streamed per q-block row.  Causal halves both the FLOPs and
+    the kv streaming.  Train multiplies by 3.5 (dO recompute backward).
+    """
+    s = shape.seq_len
+    dp = chips // 16                       # batch shards (data [x pod])
+    b_l = max(shape.global_batch // dp, 1)
+    h_l = cfg.n_heads / (16 if cfg.n_heads % 16 == 0 else 1)
+    hkv_l = cfg.n_kv_heads / (16 if cfg.n_kv_heads % 16 == 0 else 1)
+    hd = cfg.head_dim
+    causal = 0.5
+    mult = 3.5 if shape.kind == "train" else 1.0
+    n_attn = cfg.n_layers
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.shared_attn_every
+    if cfg.family == "audio":
+        n_attn = cfg.n_layers * 2 + cfg.encoder_layers  # self+cross+enc
+    if cfg.family == "vlm":
+        n_attn = cfg.n_layers + cfg.n_layers // cfg.cross_attn_every
+    flops = 4 * b_l * h_l * s * s * hd * causal * mult * n_attn
+    nq = -(-s // cfg.block_q)
+    bytes_ = ((2 * b_l * h_l * s * hd                  # q read + o write
+               + 2 * b_l * hkv_l * s * hd * nq * causal) * 2  # k,v streams
+              * mult * n_attn)
+    return {"flops": float(flops), "bytes": float(bytes_)}
+
+
+def kernel_true_mlp(cfg, shape, chips: int) -> dict:
+    """Fused-SwiGLU kernel FLOPs/HBM-bytes for all MLP layers.
+
+    The Pallas kernel streams x once for gate+up and writes the hidden h
+    once (no g/u round trips); down-proj reads h once.  Per layer per
+    device: flops = 6*t*d*f (3 matmuls), bytes = (t*d*2 + weights/16 +
+    2*t*f) * dtype.  Train multiplies by 3.5.
+    """
+    s = shape.seq_len
+    dp = chips // 16
+    b_l = max(shape.global_batch // dp, 1)
+    t = b_l * s
+    d = cfg.d_model
+    f = (cfg.d_ff // 16) if cfg.d_ff % 16 == 0 else cfg.d_ff   # TP-sharded
+    mult = 3.5 if shape.kind == "train" else 1.0
+    n_mlp = cfg.n_layers
+    if cfg.family == "hybrid":
+        n_mlp = cfg.n_layers // cfg.shared_attn_every
+    if cfg.family == "audio":
+        n_mlp = cfg.n_layers + cfg.encoder_layers
+    flops = 6 * t * d * f * mult * n_mlp
+    bytes_ = (2 * t * d + 3 * d * f + 2 * t * f) * 2 * mult * n_mlp
+    return {"flops": float(flops), "bytes": float(bytes_)}
+
+
+def kernel_true_moe_ffn(cfg, shape, chips: int) -> dict:
+    """Fused expert-FFN kernel (per-expert fused SwiGLU over capacity slots).
+
+    Experts sharded over model (E/16 per chip); capacity slots per group
+    C = S_g*k/E*cf.  Fused: expert_in streamed once, hidden in VMEM,
+    expert_out written once."""
+    s_g = min(shape.seq_len, 4096)
+    groups_per_dev = max(shape.global_batch * (shape.seq_len // s_g)
+                         // (chips // 16), 1)
+    e_l = cfg.n_experts / 16 if cfg.n_experts % 16 == 0 else cfg.n_experts
+    cap = int(-(-s_g * cfg.top_k * cfg.capacity_factor // cfg.n_experts))
+    d, f = cfg.d_model, cfg.moe_d_ff
+    mult = 3.5 if shape.kind == "train" else 1.0
+    slots = groups_per_dev * e_l * cap
+    flops = 6 * slots * d * f * mult * cfg.n_layers
+    bytes_ = (2 * slots * d + 3 * d * f * e_l + 2 * slots * f) * 2 \
+        * mult * cfg.n_layers
+    return {"flops": float(flops), "bytes": float(bytes_)}
+
+
+def kernel_true_mixer(cfg, shape, chips: int) -> dict:
+    """SSD / mLSTM chunk-kernel FLOPs+HBM bytes for all mixer layers."""
+    s = shape.seq_len
+    dp = chips // 16
+    b_l = max(shape.global_batch // dp, 1)
+    mult = 3.5 if shape.kind == "train" else 1.0
+    q = 256
+    nc = -(-s // q)
+    if cfg.family == "ssm":                      # mLSTM
+        d = cfg.d_model
+        di = 2 * d
+        h = cfg.n_heads
+        p = di // h / (16 if di % 16 == 0 else 1)  # p sharded via mlp dim
+        per_chunk_flops = 2 * q * q * p * 2 + 2 * q * p * p + 2 * q * p
+        per_chunk_bytes = (3 * q * p + 2 * q + q * p + p * p) * 4
+        n_mixer = cfg.n_layers
+    else:                                        # mamba2 (zamba)
+        di = cfg.d_inner
+        h = cfg.n_ssm_heads
+        p = di // h
+        n = cfg.ssm_state or 64
+        per_chunk_flops = 2 * q * q * n + 2 * q * q * p + 2 * q * n * p
+        per_chunk_bytes = (2 * q * p + 2 * q * n + n * p) * 4
+        n_mixer = cfg.n_layers
+        h = h / (16 if h % 16 == 0 else 1)
+    flops = per_chunk_flops * nc * h * b_l * mult * n_mixer
+    bytes_ = per_chunk_bytes * nc * h * b_l * mult * n_mixer
+    return {"flops": float(flops), "bytes": float(bytes_)}
+
+
+# ---------------------------------------------------------------------------
+# Variants
+# ---------------------------------------------------------------------------
+
+def _variants():
+    return {
+        # --- Cell A: granite-moe x train_4k --------------------------------
+        "A0": dict(arch="granite-moe-1b-a400m", shape="train_4k",
+                   overrides={}, rules=None, fsdp=None, adjust=None),
+        "A1": dict(arch="granite-moe-1b-a400m", shape="train_4k",
+                   overrides={"moe_impl": "gather"},
+                   rules=None, fsdp=None, adjust=None),
+        "A2": dict(arch="granite-moe-1b-a400m", shape="train_4k",
+                   overrides={"moe_impl": "gather", "remat": False},
+                   rules=None, fsdp=None, adjust=None),
+        "A3": dict(arch="granite-moe-1b-a400m", shape="train_4k",
+                   overrides={"moe_impl": "gather", "remat": False},
+                   rules=None, fsdp=None, adjust="attention"),
+        "A4": dict(arch="granite-moe-1b-a400m", shape="train_4k",
+                   overrides={"remat": False},   # einsum dispatch, no remat
+                   rules=None, fsdp=None, adjust="attention"),
+        "A5": dict(arch="granite-moe-1b-a400m", shape="train_4k",
+                   overrides={"moe_impl": "gather", "remat": False,
+                              "capacity_factor": 1.0},
+                   rules=None, fsdp=None, adjust="attention"),
+        "A7": dict(arch="granite-moe-1b-a400m", shape="train_4k",
+                   overrides={"remat": False},   # einsum dispatch
+                   rules=None, fsdp=None, adjust="attention+moeffn"),
+        # --- Cell B: xlstm x train_4k ---------------------------------------
+        "B0": dict(arch="xlstm-1.3b", shape="train_4k",
+                   overrides={}, rules=None, fsdp=None, adjust=None),
+        "B1": dict(arch="xlstm-1.3b", shape="train_4k",
+                   overrides={},
+                   rules={"batch": ("data", "model"), "mlp": None,
+                          "vocab": None, "qblocks": ("data", "model")},
+                   fsdp=False, adjust=None),
+        "B2": dict(arch="xlstm-1.3b", shape="train_4k",
+                   overrides={"remat": False},
+                   rules={"batch": ("data", "model"), "mlp": None,
+                          "vocab": None, "qblocks": ("data", "model")},
+                   fsdp=False, adjust=None),
+        "B3": dict(arch="xlstm-1.3b", shape="train_4k",
+                   overrides={"remat": False},
+                   rules={"batch": ("data", "model"), "mlp": None,
+                          "vocab": None, "qblocks": ("data", "model")},
+                   fsdp=False, adjust="mixer"),
+        # --- Cell C: granite-34b x train_4k ---------------------------------
+        "C0": dict(arch="granite-34b", shape="train_4k",
+                   overrides={}, rules=None, fsdp=None, adjust=None),
+        "C1": dict(arch="granite-34b", shape="train_4k",
+                   overrides={"remat": False}, rules=None, fsdp=None,
+                   adjust=None),
+        "C2": dict(arch="granite-34b", shape="train_4k",
+                   overrides={"remat": False}, rules=None, fsdp=False,
+                   adjust=None),
+        "C3": dict(arch="granite-34b", shape="train_4k",
+                   overrides={"remat": False}, rules=None, fsdp=False,
+                   adjust="attention"),
+        "C4": dict(arch="granite-34b", shape="train_4k",
+                   overrides={"remat": False}, rules=None, fsdp=False,
+                   adjust="attention+mlp"),
+    }
+
+
+def run_variant(name: str, spec: dict, *, full_mem: bool = False) -> dict:
+    import jax  # noqa: F401  (after XLA_FLAGS)
+    from repro.configs import ARCHS, SHAPES
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.probe import run_probe
+    from repro.launch.dryrun import TRAIN_MICROBATCHES
+    from repro.sharding.api import clear_overrides, set_overrides
+
+    cfg = dataclasses.replace(ARCHS[spec["arch"]], **spec["overrides"])
+    shape = SHAPES[spec["shape"]]
+    mesh = make_production_mesh(multi_pod=False)
+    mb = TRAIN_MICROBATCHES.get(spec["arch"], 1) if shape.kind == "train" else 1
+    chips = int(mesh.devices.size)
+
+    set_overrides(rules=spec["rules"], fsdp=spec["fsdp"])
+    rec = {"variant": name, **{k: str(v) for k, v in spec.items()}}
+    try:
+        t0 = time.time()
+        probe = run_probe(cfg, shape, mesh, microbatches=mb)
+        rec["probe"] = {k: v for k, v in probe.items()
+                        if not k.startswith("probe")}
+        flops, bytes_ = probe["flops"], probe["bytes"]
+        coll = probe["collective_bytes"]
+        if spec["adjust"]:
+            parts = spec["adjust"].split("+")
+            skip_over = {}
+            analytic = {"flops": 0.0, "bytes": 0.0}
+            for part in parts:
+                if part == "attention":
+                    skip_over["attention_impl"] = "skip"
+                    a = kernel_true_attention(cfg, shape, chips)
+                elif part == "mixer":
+                    skip_over["mixer_skip"] = True
+                    a = kernel_true_mixer(cfg, shape, chips)
+                elif part == "mlp":
+                    skip_over["mlp_skip"] = True
+                    a = kernel_true_mlp(cfg, shape, chips)
+                elif part == "moeffn":
+                    skip_over["moe_ffn_skip"] = True
+                    a = kernel_true_moe_ffn(cfg, shape, chips)
+                else:
+                    raise ValueError(part)
+                analytic = {k: analytic[k] + a[k] for k in analytic}
+            skip_cfg = dataclasses.replace(cfg, **skip_over)
+            probe_skip = run_probe(skip_cfg, shape, mesh, microbatches=mb)
+            flops = probe_skip["flops"] + analytic["flops"]
+            bytes_ = probe_skip["bytes"] + analytic["bytes"]
+            # collectives from the FULL probe: the kernels keep tile math in
+            # VMEM but do not remove TP psums (e.g. the row-parallel
+            # down-proj all-reduce survives a fused MLP)
+            coll = probe["collective_bytes"]
+            rec["skip_probe"] = {"flops": probe_skip["flops"],
+                                 "bytes": probe_skip["bytes"]}
+            rec["analytic"] = analytic
+        if full_mem:
+            from repro.models.model import build_model
+            from repro.optim import make_optimizer
+            from repro.train.step import build_step, lower_step
+            opt = make_optimizer("adamw", state_dtype="int8") \
+                if spec["fsdp"] is False else make_optimizer("adamw")
+            bundle = build_step(build_model(cfg), opt, mesh, shape,
+                                microbatches=mb)
+            compiled = lower_step(bundle).compile()
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                f: int(getattr(ma, f))
+                for f in ("argument_size_in_bytes", "temp_size_in_bytes",
+                          "output_size_in_bytes", "peak_memory_in_bytes")
+                if hasattr(ma, f)}
+
+        from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+        from repro.launch.roofline import model_flops_per_device
+        t = {"compute": flops / PEAK_FLOPS_BF16,
+             "memory": bytes_ / HBM_BW,
+             "collective": coll / ICI_BW}
+        dom = max(t, key=t.get)
+        mf = model_flops_per_device(spec["arch"], spec["shape"], chips)
+        rec.update({
+            "flops": flops, "bytes": bytes_, "collective_bytes": coll,
+            "t_compute_s": t["compute"], "t_memory_s": t["memory"],
+            "t_collective_s": t["collective"], "dominant": dom,
+            "model_flops_per_dev": mf,
+            "useful_compute_ratio": mf / flops if flops else 0,
+            "roofline_fraction": (mf / max(t.values())) / PEAK_FLOPS_BF16,
+            "wall_s": time.time() - t0,
+            "status": "ok",
+        })
+    except Exception as e:  # noqa: BLE001
+        rec.update({"status": "error", "error": str(e),
+                    "traceback": traceback.format_exc()[-3000:]})
+    finally:
+        clear_overrides()
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default=None,
+                    help="variant name (default: all)")
+    ap.add_argument("--full-mem", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    specs = _variants()
+    names = [args.variant] if args.variant else list(specs)
+    for name in names:
+        out = RESULTS / f"{name}.json"
+        if out.exists() and not args.force:
+            rec = json.loads(out.read_text())
+        else:
+            rec = run_variant(name, specs[name], full_mem=args.full_mem)
+            out.write_text(json.dumps(rec, indent=2))
+        if rec["status"] == "ok":
+            print(f"{name}: t_comp={rec['t_compute_s']:.3f}s "
+                  f"t_mem={rec['t_memory_s']:.3f}s "
+                  f"t_coll={rec['t_collective_s']:.3f}s "
+                  f"dom={rec['dominant']} useful={rec['useful_compute_ratio']:.2%} "
+                  f"roofline={rec['roofline_fraction']:.2%}", flush=True)
+        else:
+            print(f"{name}: ERROR {rec['error'][:150]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

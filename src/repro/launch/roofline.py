@@ -1,0 +1,127 @@
+"""Roofline analysis from dry-run artifacts (§Roofline deliverable).
+
+Per (arch, shape) cell on the single-pod mesh:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s          [s]
+    memory term     = HLO_bytes_per_device / HBM_bw               [s]
+    collective term = collective_bytes_per_device / link_bw       [s]
+
+All three numerators come from the UNROLLED COST PROBE (extrapolated to
+full depth — see probe.py; cost_analysis on the scanned module undercounts
+while bodies).  Since probe numbers are per-device/per-partition, dividing
+by per-chip peaks is identical to the global form
+``HLO_FLOPs / (chips x peak)``.
+
+Also reported: MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per
+device-shard, and the ratio MODEL_FLOPS / HLO_FLOPs — the "useful compute"
+fraction that exposes remat recompute, dispatch overhead and attention
+masking waste.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16)
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def model_flops_per_device(arch: str, shape_name: str, chips: int) -> float:
+    """6*N(active)*tokens, sharded over all chips (per-device share)."""
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count() if cfg.is_moe else cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        mult = 2.0
+    return mult * n * tokens / chips
+
+
+def analyze_cell(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    probe = rec.get("probe") or {}
+    if "flops" not in probe:
+        return None
+    chips = rec["chips"]
+    flops = probe["flops"]
+    bytes_ = probe["bytes"]
+    coll = probe["collective_bytes"]
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_ / HBM_BW
+    t_coll = coll / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    mf = model_flops_per_device(rec["arch"], rec["shape"], chips)
+    t_total = max(t_compute, t_memory, t_coll)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "hlo_flops_per_dev": flops,
+        "hlo_bytes_per_dev": bytes_,
+        "collective_bytes_per_dev": coll,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "useful_compute_ratio": mf / flops if flops else 0.0,
+        # roofline fraction: useful FLOPs per second achievable at the
+        # modelled bottleneck, as a fraction of peak
+        "roofline_fraction": (mf / t_total) / PEAK_FLOPS_BF16
+        if t_total else 0.0,
+        "peak_bytes_per_dev": rec["memory_analysis"].get(
+            "peak_memory_in_bytes",
+            rec["memory_analysis"].get("temp_size_in_bytes", 0)),
+    }
+
+
+def load_all(results_dir: Path = RESULTS) -> List[Dict]:
+    out = []
+    for p in sorted(results_dir.glob("*.json")):
+        rec = json.loads(p.read_text())
+        a = analyze_cell(rec)
+        if a:
+            out.append(a)
+    return out
+
+
+def format_table(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':8s} "
+           f"{'t_comp(s)':>10s} {'t_mem(s)':>10s} {'t_coll(s)':>10s} "
+           f"{'dominant':>10s} {'useful':>7s} {'roofline':>9s} {'peak(GiB)':>10s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{r['t_compute_s']:10.4f} {r['t_memory_s']:10.4f} "
+            f"{r['t_collective_s']:10.4f} {r['dominant']:>10s} "
+            f"{r['useful_compute_ratio']:7.2%} {r['roofline_fraction']:9.2%} "
+            f"{r['peak_bytes_per_dev']/2**30:10.2f}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=str(RESULTS))
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = load_all(Path(args.results))
+    print(format_table(rows))
+    if args.json_out:
+        Path(args.json_out).write_text(json.dumps(rows, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Serving launcher: batched prefill + decode with a request queue.
+
+    python -m repro.launch.serve --arch llama3.2-3b --test-mesh \
+        --requests 8 --gen-tokens 16
+
+Implements the standard two-phase server: incoming requests are batched,
+prefilled (full-sequence forward filling the KV cache), then decoded
+token-by-token with greedy sampling.  On the production mesh the decode
+step is the ``decode_32k``/``long_500k`` dry-run cell.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import List
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--test-mesh", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import ARCHS
+    from repro.models.model import build_model, reduce_config
+    from repro.launch.mesh import make_production_mesh, make_test_mesh
+    from repro.sharding import rules as R
+
+    cfg = ARCHS[args.arch]
+    if args.test_mesh:
+        cfg = reduce_config(cfg)
+        mesh = make_test_mesh(model=1)
+    else:
+        mesh = make_production_mesh()
+    model = build_model(cfg)
+    if model.decode_fn is None:
+        raise SystemExit(f"{args.arch} has no decode path")
+
+    params = model.init(jax.random.PRNGKey(0))
+    b = args.requests
+    max_seq = args.prompt_len + args.gen_tokens + 8
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, size=(b, args.prompt_len),
+                           dtype=np.int32)
+
+    decode = jax.jit(model.decode_fn)
+    state = model.decode_init(b, max_seq)
+
+    # ---- prefill via sequential cache fill (exact; batched decode steps) --
+    t0 = time.time()
+    tokens = jnp.asarray(prompts)
+    logits = None
+    for t in range(args.prompt_len):
+        logits, state = decode(params, state, tokens[:, t],
+                               jnp.full((b,), t, jnp.int32))
+    t_prefill = time.time() - t0
+
+    # ---- greedy decode -----------------------------------------------------
+    out_tokens: List[np.ndarray] = []
+    cur = jnp.argmax(logits[:, :cfg.vocab], axis=-1).astype(jnp.int32)
+    t0 = time.time()
+    for i in range(args.gen_tokens):
+        out_tokens.append(np.asarray(cur))
+        logits, state = decode(
+            params, state, cur,
+            jnp.full((b,), args.prompt_len + i, jnp.int32))
+        cur = jnp.argmax(logits[:, :cfg.vocab], axis=-1).astype(jnp.int32)
+    t_decode = time.time() - t0
+
+    gen = np.stack(out_tokens, axis=1)
+    print(f"prefill: {t_prefill*1000:.1f} ms for {b}x{args.prompt_len} tok")
+    print(f"decode:  {t_decode*1000:.1f} ms for {b}x{args.gen_tokens} tok "
+          f"({b*args.gen_tokens/max(t_decode,1e-9):.1f} tok/s)")
+    print("generated token ids (first request):", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

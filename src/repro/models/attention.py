@@ -1,0 +1,257 @@
+"""GQA attention: naive, blockwise (memory-efficient online softmax), and
+Pallas flash-attention backends, plus KV-cache decode.
+
+The blockwise implementation is the compile-target for large sequences (the
+Pallas kernel targets real TPUs; ``interpret=True`` validates it on CPU).
+Both share the same math as ``kernels/flash_attention/ref.py``.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.sharding.rules import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter init / specs
+# ---------------------------------------------------------------------------
+
+def attention_init(rng, cfg: ModelConfig, *, d_q_in: int = 0, d_kv_in: int = 0):
+    d = cfg.d_model
+    d_q_in = d_q_in or d
+    d_kv_in = d_kv_in or d
+    hd = cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    return {
+        "wq": layers.dense_init(k1, d_q_in, cfg.n_heads * hd),
+        "wk": layers.dense_init(k2, d_kv_in, cfg.n_kv_heads * hd),
+        "wv": layers.dense_init(k3, d_kv_in, cfg.n_kv_heads * hd),
+        "wo": layers.dense_init(k4, cfg.n_heads * hd, d),
+    }
+
+
+def attention_specs():
+    # Weight out-dims use the "qkv" logical axis (H*hd, always divisible by
+    # the model axis); "heads"/"kv_heads" are ACTIVATION axes that fall back
+    # to replicated when the head count is not divisible (GSPMD then
+    # gathers the weight or the activation — both are semantics-preserving).
+    return {
+        "wq": layers.dense_specs("embed", "qkv"),
+        "wk": layers.dense_specs("embed", "qkv"),
+        "wv": layers.dense_specs("embed", "qkv"),
+        "wo": layers.dense_specs("qkv", "embed"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B,S,KV,hd) -> (B,S,KV*groups,hd) by repeating each kv head."""
+    if groups == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, groups, hd)) \
+              .reshape(b, s, kv * groups, hd)
+
+
+def naive_attention(q, k, v, *, causal: bool, q_offset: int = 0,
+                    kv_len: Optional[jax.Array] = None):
+    """q: (B,Sq,H,hd); k,v: (B,Sk,H,hd).  O(Sq*Sk) memory — small seq only."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        qi = jnp.arange(sq)[:, None] + q_offset
+        ki = jnp.arange(sk)[None, :]
+        scores = jnp.where(qi >= ki, scores, NEG_INF)
+    if kv_len is not None:
+        mask = jnp.arange(sk)[None, None, None, :] < kv_len[:, None, None, None]
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, block_q: int = 512,
+                        block_kv: int = 1024, q_offset: int = 0,
+                        unroll: bool = False):
+    """Flash-style online-softmax attention in pure jnp, scanning KV blocks.
+
+    Memory: O(Sq * block_kv) instead of O(Sq * Sk).  This is what the
+    dry-run lowers for 32k/500k sequences; the Pallas kernel implements the
+    same schedule with explicit VMEM tiling for real TPUs.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, sk)
+    n_q = -(-sq // block_q)
+    n_kv = -(-sk // block_kv)
+    # pad to block multiples
+    pq = n_q * block_q - sq
+    pkv = n_kv * block_kv - sk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+
+    qb = q.reshape(b, n_q, block_q, h, hd)
+    kb = k.reshape(b, n_kv, block_kv, h, hd)
+    vb = v.reshape(b, n_kv, block_kv, h, hd)
+
+    def per_qblock(qi, q_blk):
+        # q_blk: (b, block_q, h, hd)
+        q_pos = qi * block_q + jnp.arange(block_q) + q_offset
+
+        def kv_step(carry, kv_idx):
+            acc, m, l = carry
+            k_blk = kb[:, kv_idx]
+            v_blk = vb[:, kv_idx]
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk
+                           ).astype(jnp.float32) * scale
+            k_pos = kv_idx * block_kv + jnp.arange(block_kv)
+            valid = k_pos[None, :] < sk
+            if causal:
+                valid = valid & (q_pos[:, None] >= k_pos[None, :])
+            s = jnp.where(valid[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(q.dtype), v_blk).astype(jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, h, block_q, hd), jnp.float32)
+        m0 = jnp.full((b, h, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, block_q), jnp.float32)
+        # scan all kv blocks; masked blocks contribute nothing but keep the
+        # schedule static (needed for lowering); causal skipping happens in
+        # the Pallas kernel on real hardware.  ``unroll`` flattens the loop
+        # for cost-probe lowering (XLA counts while bodies once).
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                      jnp.arange(n_kv),
+                                      unroll=n_kv if unroll else 1)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (b, block_q, h, hd)
+
+    def q_step(_, i):
+        return None, per_qblock(i, qb[:, i])
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(n_q),
+                           unroll=n_q if unroll else 1)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, n_q * block_q, h, hd)
+    return out[:, :sq]
+
+
+def attention_forward(cfg: ModelConfig, params, x, *, positions,
+                      kv_x: Optional[jax.Array] = None,
+                      causal: bool = True,
+                      use_rope: bool = True) -> jax.Array:
+    """Full attention sub-layer: proj -> rope -> attend -> out-proj.
+
+    ``kv_x`` switches to cross-attention (keys/values from the encoder /
+    image embeddings)."""
+    from repro.core.remat_policy import tag
+    dt = layers._dtype(cfg.dtype)
+    b, s, _ = x.shape
+    kv_src = x if kv_x is None else kv_x
+    q = layers.dense(params["wq"], x, dt).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = layers.dense(params["wk"], kv_src, dt).reshape(
+        b, kv_src.shape[1], cfg.n_kv_heads, cfg.head_dim)
+    v = layers.dense(params["wv"], kv_src, dt).reshape(
+        b, kv_src.shape[1], cfg.n_kv_heads, cfg.head_dim)
+    if use_rope and kv_x is None:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    q = tag("qkv", q)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+    groups = cfg.n_heads // cfg.n_kv_heads
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    if cfg.attention_impl == "skip":
+        # cost-probe differencing mode: bypass the S^2 mixing entirely so
+        # the probe isolates non-attention FLOPs/bytes; the kernel-true
+        # attention cost is added back analytically (launch/adjust.py)
+        o = q + v
+    elif cfg.attention_impl == "naive" or s <= cfg.block_q:
+        o = naive_attention(q, k, v, causal=causal and kv_x is None)
+    elif cfg.attention_impl == "pallas":
+        from repro.kernels.flash_attention.ops import flash_attention
+        o = flash_attention(q, k, v, causal=causal and kv_x is None,
+                            block_q=cfg.block_q, block_kv=cfg.block_kv)
+    else:
+        o = blockwise_attention(q, k, v, causal=causal and kv_x is None,
+                                block_q=cfg.block_q, block_kv=cfg.block_kv,
+                                unroll=cfg.unroll_layers)
+    o = tag("attn_out", o)
+    o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return layers.dense(params["wo"], o, dt)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int, n_layers: int,
+                  dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    hd = cfg.head_dim
+    return {
+        "k": jnp.zeros((n_layers, batch, max_seq, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((n_layers, batch, max_seq, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def kv_cache_specs():
+    return {"k": (None, "batch", "kv_seq", "kv_heads", None),
+            "v": (None, "batch", "kv_seq", "kv_heads", None)}
+
+
+def decode_attention(cfg: ModelConfig, params, x, cache_k, cache_v, *,
+                     cache_len: jax.Array, layer_idx: int = 0
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode: append to cache, attend over the prefix.
+
+    x: (B, 1, d); cache_k/v: (B, max_seq, KV, hd); cache_len: (B,) current
+    lengths.  Returns (out, new_k, new_v).
+    """
+    dt = layers._dtype(cfg.dtype)
+    b = x.shape[0]
+    hd = cfg.head_dim
+    q = layers.dense(params["wq"], x, dt).reshape(b, 1, cfg.n_heads, hd)
+    k = layers.dense(params["wk"], x, dt).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = layers.dense(params["wv"], x, dt).reshape(b, 1, cfg.n_kv_heads, hd)
+    pos = cache_len[:, None]
+    q = layers.apply_rope(q, pos, cfg.rope_theta)
+    k = layers.apply_rope(k, pos, cfg.rope_theta)
+
+    # scatter the new K/V at position cache_len
+    oh = jax.nn.one_hot(cache_len, cache_k.shape[1], dtype=dt)   # (B, max_seq)
+    cache_k = cache_k * (1 - oh)[:, :, None, None] + \
+        oh[:, :, None, None] * k.astype(cache_k.dtype)
+    cache_v = cache_v * (1 - oh)[:, :, None, None] + \
+        oh[:, :, None, None] * v.astype(cache_v.dtype)
+
+    groups = cfg.n_heads // cfg.n_kv_heads
+    kk = _repeat_kv(cache_k, groups)
+    vv = _repeat_kv(cache_v, groups)
+    o = naive_attention(q, kk, vv, causal=False, kv_len=cache_len + 1)
+    o = constrain(o, "batch", None, "heads", None)
+    o = o.reshape(b, 1, cfg.n_heads * hd)
+    return layers.dense(params["wo"], o, dt), cache_k, cache_v

@@ -1,0 +1,177 @@
+"""Shared neural-net layers (pure JAX, logical-axis-annotated).
+
+Parameters are plain nested dicts; each initializer has a matching
+``*_specs`` helper returning logical axes for the sharding rules.  All
+matmuls cast to the config compute dtype (bf16 on TPU) with fp32 params —
+the standard mixed-precision recipe.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import constrain
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_specs():
+    return {"scale": ("embed",)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(dt)
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm_specs():
+    return {"scale": ("embed",), "bias": ("embed",)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Dense / embedding
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, d_in: int, d_out: int, *, bias: bool = False):
+    p = {"kernel": jax.random.normal(rng, (d_in, d_out), jnp.float32)
+         * (1.0 / math.sqrt(d_in))}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense_specs(in_axis: Optional[str], out_axis: Optional[str],
+                *, bias: bool = False):
+    p = {"kernel": (in_axis, out_axis)}
+    if bias:
+        p["bias"] = (out_axis,)
+    return p
+
+
+def dense(params, x, compute_dtype=jnp.bfloat16):
+    y = x.astype(compute_dtype) @ params["kernel"].astype(compute_dtype)
+    if "bias" in params:
+        y = y + params["bias"].astype(compute_dtype)
+    return y
+
+
+def embedding_init(rng, vocab: int, d: int):
+    return {"table": jax.random.normal(rng, (vocab, d), jnp.float32) * 0.02}
+
+
+def embedding_specs():
+    return {"table": ("vocab", "embed")}
+
+
+def embed(params, tokens, compute_dtype=jnp.bfloat16):
+    return jnp.take(params["table"], tokens, axis=0).astype(compute_dtype)
+
+
+def unembed(params, x, compute_dtype=jnp.bfloat16):
+    """Logits projection (tied or untied table, (V, d) layout)."""
+    return x.astype(compute_dtype) @ params["table"].astype(compute_dtype).T
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                   # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,s,hd/2)
+    cos = jnp.cos(angles)[..., None, :]                          # (...,s,1,hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(rng, d: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "gate": dense_init(k1, d, d_ff),
+        "up": dense_init(k2, d, d_ff),
+        "down": dense_init(k3, d_ff, d),
+    }
+
+
+def swiglu_specs():
+    return {
+        "gate": dense_specs("embed", "mlp"),
+        "up": dense_specs("embed", "mlp"),
+        "down": dense_specs("mlp", "embed"),
+    }
+
+
+def swiglu(params, x, compute_dtype=jnp.bfloat16, *, skip: bool = False):
+    from repro.core.remat_policy import tag
+    if skip:
+        return x  # probe mode: fused-kernel cost added analytically
+    g = dense(params["gate"], x, compute_dtype)
+    u = dense(params["up"], x, compute_dtype)
+    h = jax.nn.silu(g) * u
+    h = tag("mlp_hidden", h)
+    h = constrain(h, "batch", "seq", "mlp")
+    return dense(params["down"], h, compute_dtype)
+
+
+def gelu_mlp_init(rng, d: int, d_ff: int, *, bias: bool = True):
+    k1, k2 = jax.random.split(rng)
+    return {"up": dense_init(k1, d, d_ff, bias=bias),
+            "down": dense_init(k2, d_ff, d, bias=bias)}
+
+
+def gelu_mlp_specs(*, bias: bool = True):
+    return {"up": dense_specs("embed", "mlp", bias=bias),
+            "down": dense_specs("mlp", "embed", bias=bias)}
+
+
+def gelu_mlp(params, x, compute_dtype=jnp.bfloat16):
+    from repro.core.remat_policy import tag
+    h = jax.nn.gelu(dense(params["up"], x, compute_dtype))
+    h = tag("mlp_hidden", h)
+    h = constrain(h, "batch", "seq", "mlp")
+    return dense(params["down"], h, compute_dtype)

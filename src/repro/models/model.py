@@ -1,0 +1,184 @@
+"""Unified Model API: family dispatch, abstract input specs, reduced configs.
+
+``Model`` bundles the pure functions for one config:
+
+    model.init(rng)                      -> params
+    model.param_specs()                  -> logical-axis pytree
+    model.loss_fn(params, batch)         -> scalar loss        (train)
+    model.forward(params, batch)         -> logits             (prefill)
+    model.decode_init(batch, max_seq)    -> decode state
+    model.decode_specs()                 -> logical-axis pytree
+    model.decode_fn(params, state, tokens, cache_len) -> (logits, state)
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStructs for the dry-run —
+weak-type-correct, shardable, no device allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import multimodal, transformer, zamba
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    param_specs: Callable
+    loss_fn: Callable            # (params, batch) -> loss
+    forward: Callable            # (params, batch) -> logits
+    decode_init: Optional[Callable] = None
+    decode_specs: Optional[Callable] = None
+    decode_fn: Optional[Callable] = None
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    t = transformer
+    if cfg.family in ("dense", "moe"):
+        return Model(
+            cfg=cfg,
+            init=functools.partial(t.lm_init, cfg=cfg),
+            param_specs=lambda: t.lm_specs(cfg),
+            loss_fn=lambda p, b: t.lm_loss(cfg, p, b),
+            forward=lambda p, b: t.lm_forward(cfg, p, b["tokens"])[0],
+            decode_init=lambda batch, max_seq: t.lm_decode_init(cfg, batch, max_seq),
+            decode_specs=lambda: t.lm_decode_specs(cfg),
+            decode_fn=lambda p, s, tok, ln: t.lm_decode_step(cfg, p, s, tok, ln),
+        )
+    if cfg.family == "ssm":
+        return Model(
+            cfg=cfg,
+            init=functools.partial(t.xlstm_init, cfg=cfg),
+            param_specs=lambda: t.xlstm_specs(cfg),
+            loss_fn=lambda p, b: t.xlstm_loss(cfg, p, b),
+            forward=lambda p, b: t.xlstm_forward(cfg, p, b["tokens"])[0],
+            decode_init=lambda batch, max_seq: t.xlstm_decode_init(cfg, batch, max_seq),
+            decode_specs=lambda: t.xlstm_decode_specs(cfg),
+            decode_fn=lambda p, s, tok, ln: t.xlstm_decode_step(cfg, p, s, tok, ln),
+        )
+    if cfg.family == "audio":
+        m = multimodal
+        return Model(
+            cfg=cfg,
+            init=functools.partial(m.encdec_init, cfg=cfg),
+            param_specs=lambda: m.encdec_specs(cfg),
+            loss_fn=lambda p, b: m.encdec_loss(cfg, p, b),
+            forward=lambda p, b: m.encdec_forward(
+                cfg, p, b["tokens"], b["enc_frames"])[0],
+            decode_init=lambda batch, max_seq: m.encdec_decode_init(cfg, batch, max_seq),
+            decode_specs=lambda: m.encdec_decode_specs(cfg),
+            decode_fn=lambda p, s, tok, ln: m.encdec_decode_step(cfg, p, s, tok, ln),
+        )
+    if cfg.family == "vlm":
+        m = multimodal
+        return Model(
+            cfg=cfg,
+            init=functools.partial(m.vlm_init, cfg=cfg),
+            param_specs=lambda: m.vlm_specs(cfg),
+            loss_fn=lambda p, b: m.vlm_loss(cfg, p, b),
+            forward=lambda p, b: m.vlm_forward(
+                cfg, p, b["tokens"], b["image_embeds"])[0],
+            decode_init=lambda batch, max_seq: m.vlm_decode_init(cfg, batch, max_seq),
+            decode_specs=lambda: m.vlm_decode_specs(cfg),
+            decode_fn=lambda p, s, tok, ln: m.vlm_decode_step(cfg, p, s, tok, ln),
+        )
+    if cfg.family == "hybrid":
+        z = zamba
+        return Model(
+            cfg=cfg,
+            init=functools.partial(z.zamba_init, cfg=cfg),
+            param_specs=lambda: z.zamba_specs(cfg),
+            loss_fn=lambda p, b: z.zamba_loss(cfg, p, b),
+            forward=lambda p, b: z.zamba_forward(cfg, p, b["tokens"])[0],
+            decode_init=lambda batch, max_seq: z.zamba_decode_init(cfg, batch, max_seq),
+            decode_specs=lambda: z.zamba_decode_specs(cfg),
+            decode_fn=lambda p, s, tok, ln: z.zamba_decode_step(cfg, p, s, tok, ln),
+        )
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+# ---------------------------------------------------------------------------
+# Abstract input specs (dry-run stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one (arch, shape) cell.
+
+    train/prefill: token batches (+ stubbed modality embeddings);
+    decode: single-token batch + cache lengths (state comes from
+    ``decode_state_specs``).
+    """
+    b = shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        specs: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if shape.kind == "train":
+            specs["targets"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.family == "audio":
+            specs["enc_frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.image_tokens, cfg.d_model), jnp.bfloat16)
+        return specs
+    # decode: one new token per sequence, KV/state cache of length seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((b,), i32),
+        "cache_len": jax.ShapeDtypeStruct((b,), i32),
+    }
+
+
+def abstract_params(model: Model):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def abstract_decode_state(model: Model, batch: int, max_seq: int):
+    return jax.eval_shape(
+        lambda: model.decode_init(batch, max_seq))
+
+
+# ---------------------------------------------------------------------------
+# Reduced configs for CPU smoke tests
+# ---------------------------------------------------------------------------
+
+def reduce_config(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Small same-family config: few layers, narrow widths, tiny vocab."""
+    heads = min(cfg.n_heads, 4)
+    kv = max(1, min(cfg.n_kv_heads, heads))
+    while heads % kv:
+        kv -= 1
+    red = dict(
+        n_layers=min(cfg.n_layers, 4),
+        d_model=64,
+        n_heads=heads,
+        n_kv_heads=kv,
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=256,
+        attention_impl="naive",
+        remat=False,
+    )
+    if cfg.is_moe:
+        red.update(n_experts=4, top_k=2, moe_d_ff=32)
+    if cfg.family in ("ssm",):
+        red.update(slstm_every=2 if cfg.slstm_every else 0, n_layers=4)
+    if cfg.family == "hybrid":
+        red.update(shared_attn_every=2, n_layers=5, ssm_state=16,
+                   ssm_heads=4)
+    if cfg.family == "audio":
+        red.update(encoder_layers=2, encoder_seq=16)
+    if cfg.family == "vlm":
+        red.update(cross_attn_every=2, n_layers=4, image_tokens=8)
+    red.update(overrides)
+    return dataclasses.replace(cfg, **red)

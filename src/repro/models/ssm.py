@@ -1,0 +1,217 @@
+"""Mamba2 (SSD) block: chunked training scan + O(1) decode state update.
+
+Training uses the chunked state-space-dual formulation (intra-chunk
+quadratic attention-like term + inter-chunk recurrent state passing) — the
+TPU-friendly layout: all chunk math is batched einsums over hardware-aligned
+tiles, the only sequential dependency is a length-S/Q ``lax.scan`` over
+chunk states.  ``kernels/ssm_scan`` implements the same schedule as a
+Pallas kernel.
+
+Decode maintains per-head state h: (B, H, P, N) with the classic update
+    h <- exp(dt*A) * h + dt * (B ⊗ x);   y = (C · h) + D*x
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.sharding.rules import constrain
+
+
+def ssm_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state or 64
+    h = cfg.n_ssm_heads
+    p = di // h
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+    return {
+        # fused in-proj: [z (di), x (di), B (n), C (n), dt (h)]
+        "in_proj": layers.dense_init(k1, d, 2 * di + 2 * n + h),
+        "conv": jax.random.normal(k2, (cfg.ssm_conv, di + 2 * n),
+                                  jnp.float32) * 0.1,
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": layers.rmsnorm_init(di),
+        "out_proj": layers.dense_init(k3, di, d),
+    }
+
+
+def ssm_specs(cfg: ModelConfig):
+    return {
+        "in_proj": layers.dense_specs("embed", "mlp"),
+        "conv": (None, "mlp"),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm": {"scale": ("mlp",)},
+        "out_proj": layers.dense_specs("mlp", "embed"),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} x[..., k].
+
+    Lower-triangular cumulative log-decay matrix used by the SSD dual form.
+    """
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int = 256):
+    """Chunked SSD scan.
+
+    x: (b, s, h, p)    per-head inputs
+    dt: (b, s, h)      softplus'd timestep
+    A: (h,)            negative decay rate
+    B, C: (b, s, n)    input/output projections (single group)
+    returns y: (b, s, h, p)
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    Bc = B.reshape(b, nc, q, n)
+    Cc = C.reshape(b, nc, q, n)
+
+    dA = dtc * (-jnp.exp(A))[None, None, None, :]        # (b,nc,q,h) log-decay
+    dA_cum = jnp.cumsum(dA, axis=2)                      # within-chunk cumsum
+
+    # ---- intra-chunk (quadratic within q) --------------------------------
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))       # (b,nc,h,q,q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)       # (b,nc,q,q)
+    y_diag = jnp.einsum("bcqk,bchqk,bckh,bckhp->bcqhp",
+                        scores, L, dtc, xc)
+
+    # ---- chunk states -----------------------------------------------------
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)   # (b,nc,q,h)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchnp",
+                        Bc, dtc * decay_to_end, xc)          # (b,nc,h,n,p)
+
+    # ---- inter-chunk recurrence (the only sequential part) ---------------
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])               # (b,nc,h)
+
+    def step(carry, inp):
+        st, dec = inp                                        # (b,h,n,p),(b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                    # emit PREVIOUS
+
+    init = jnp.zeros((b, h, n, p), x.dtype)
+    _, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (b,nc,h,n,p)
+
+    # ---- inter-chunk contribution -----------------------------------------
+    state_decay = jnp.exp(dA_cum)                            # (b,nc,q,h)
+    y_off = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                       Cc, state_decay, prev_states)
+
+    y = (y_diag + y_off).reshape(b, nc * q, h, p)
+    return y[:, :s]
+
+
+def ssm_forward(cfg: ModelConfig, params, x: jax.Array) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d).  Training/prefill path."""
+    from repro.core.remat_policy import tag
+    dt_ = layers._dtype(cfg.dtype)
+    b, s, d = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state or 64, cfg.n_ssm_heads
+    p = di // h
+
+    zxbcdt = layers.dense(params["in_proj"], x, dt_)
+    z, xin, B, C, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+
+    # depthwise causal conv over (x, B, C)
+    xbc = jnp.concatenate([xin, B, C], axis=-1)
+    w = params["conv"].astype(dt_)                    # (K, di+2n)
+    kk = w.shape[0]
+    xbc_pad = jnp.pad(xbc, ((0, 0), (kk - 1, 0), (0, 0)))
+    xbc = sum(xbc_pad[:, i:i + s] * w[i] for i in range(kk))
+    xbc = jax.nn.silu(xbc)
+    xin, B, C = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None])      # (b,s,h)
+    xh = xin.reshape(b, s, h, p)
+    xh = tag("ssm_in", xh)
+    xh = constrain(xh, "batch", "seq", "heads", None)
+    if cfg.mixer_skip:
+        y = xh.astype(jnp.float32)    # probe mode: kernel cost added analytically
+    else:
+        y = ssd_chunked(xh.astype(jnp.float32), dt, params["A_log"],
+                        B.astype(jnp.float32), C.astype(jnp.float32))
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(dt_)
+    y = layers.rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return layers.dense(params["out_proj"], y, dt_)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, n_layers: int,
+                   dtype=jnp.float32):
+    h, n = cfg.n_ssm_heads, cfg.ssm_state or 64
+    p = cfg.d_inner // h
+    return {
+        "h": jnp.zeros((n_layers, batch, h, n, p), dtype),
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1,
+                           cfg.d_inner + 2 * n), dtype),
+    }
+
+
+def ssm_state_specs():
+    return {"h": (None, "batch", None, "state", None),
+            "conv": (None, "batch", None, "mlp")}
+
+
+def ssm_decode_step(cfg: ModelConfig, params, x, state_h, state_conv
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token state update.  x: (B,1,d); state_h: (B,H,N,P)."""
+    dt_ = layers._dtype(cfg.dtype)
+    b = x.shape[0]
+    di, n, h = cfg.d_inner, cfg.ssm_state or 64, cfg.n_ssm_heads
+    p = di // h
+
+    zxbcdt = layers.dense(params["in_proj"], x, dt_)[:, 0]
+    z, xin, B, C, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+
+    # rolling conv buffer
+    xbc_new = jnp.concatenate([xin, B, C], axis=-1)            # (B, di+2n)
+    w = params["conv"].astype(dt_)
+    window = jnp.concatenate([state_conv.astype(dt_),
+                              xbc_new[:, None]], axis=1)       # (B,K,di+2n)
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w))
+    new_conv = window[:, 1:]
+    xin, B, C = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,h)
+    dA = jnp.exp(dt * (-jnp.exp(params["A_log"]))[None])              # (B,h)
+    xh = xin.reshape(b, h, p).astype(jnp.float32)
+    dBx = jnp.einsum("bn,bh,bhp->bhnp", B.astype(jnp.float32), dt, xh)
+    new_h = state_h * dA[..., None, None] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", C.astype(jnp.float32), new_h)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(dt_)
+    y = layers.rmsnorm(params["norm"], y * jax.nn.silu(z[:, None]),
+                       cfg.norm_eps)
+    return layers.dense(params["out_proj"], y, dt_), new_h, new_conv

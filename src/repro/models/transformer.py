@@ -1,0 +1,419 @@
+"""Model assembly for all assigned architectures.
+
+Families:
+  dense   — decoder-only LM (phi4, minitron, llama3.2, granite-34b)
+  moe     — decoder-only LM with MoE FFN (granite-moe, qwen3-moe)
+  ssm     — xLSTM stack (mLSTM blocks + periodic sLSTM)
+  audio   — whisper-style encoder-decoder (conv frontend stubbed:
+            ``enc_frames`` are precomputed frame embeddings)
+  vlm     — llama-vision: decoder with cross-attention layers every k
+            (vision encoder stubbed: ``image_embeds`` precomputed)
+  hybrid  — zamba2: mamba2 blocks + ONE shared attention block applied every
+            k layers (weight sharing == the paper's Tensor-sharing mode E)
+
+All stacks scan over layers with stacked parameters; the remat policy comes
+from the core planner (``plan_checkpoint_policy``) so the paper's lifespan
+analysis decides which intermediates stay resident in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.remat_policy import (plan_checkpoint_policy,
+                                     transformer_intermediates)
+from repro.models import attention as attn
+from repro.models import layers, moe, ssm, xlstm
+from repro.sharding.rules import constrain
+
+VOCAB_PAD = 256
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return -(-cfg.vocab // VOCAB_PAD) * VOCAB_PAD
+
+
+# ---------------------------------------------------------------------------
+# Decoder block (dense / moe)
+# ---------------------------------------------------------------------------
+
+def block_init(rng, cfg: ModelConfig, *, cross: bool = False):
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    p = {
+        "ln1": layers.rmsnorm_init(cfg.d_model),
+        "attn": attn.attention_init(k1, cfg),
+        "ln2": layers.rmsnorm_init(cfg.d_model),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe.moe_init(k2, cfg)
+    elif cfg.d_ff:
+        p["mlp"] = layers.swiglu_init(k2, cfg.d_model, cfg.d_ff)
+    if cross:
+        p["ln_x"] = layers.rmsnorm_init(cfg.d_model)
+        p["xattn"] = attn.attention_init(k3, cfg)
+        p["xgate"] = jnp.zeros((), jnp.float32)
+    return p
+
+
+def block_specs(cfg: ModelConfig, *, cross: bool = False):
+    s = {
+        "ln1": layers.rmsnorm_specs(),
+        "attn": attn.attention_specs(),
+        "ln2": layers.rmsnorm_specs(),
+    }
+    if cfg.is_moe:
+        s["moe"] = moe.moe_specs()
+    elif cfg.d_ff:
+        s["mlp"] = layers.swiglu_specs()
+    if cross:
+        s["ln_x"] = layers.rmsnorm_specs()
+        s["xattn"] = attn.attention_specs()
+        s["xgate"] = ()
+    return s
+
+
+def block_forward(cfg: ModelConfig, p, x, positions, *,
+                  kv_x: Optional[jax.Array] = None, causal: bool = True
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Pre-norm block; returns (y, moe_aux_loss)."""
+    from repro.core.remat_policy import tag
+    h = x + attn.attention_forward(
+        cfg, p["attn"], layers.rmsnorm(p["ln1"], x, cfg.norm_eps),
+        positions=positions, causal=causal)
+    if "xattn" in p:
+        xa = attn.attention_forward(
+            cfg, p["xattn"], layers.rmsnorm(p["ln_x"], h, cfg.norm_eps),
+            positions=positions, kv_x=kv_x, causal=False, use_rope=False)
+        h = h + jnp.tanh(p["xgate"]).astype(xa.dtype) * xa
+    aux = jnp.zeros((), jnp.float32)
+    hn = layers.rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if cfg.is_moe:
+        mo, aux = moe.moe_forward(cfg, p["moe"], hn)
+        h = h + mo
+    elif cfg.d_ff:
+        h = h + layers.swiglu(p["mlp"], hn, layers._dtype(cfg.dtype),
+                              skip=cfg.mlp_skip)
+    h = tag("block_out", h)
+    h = constrain(h, "batch", "seq", "embed")
+    return h, aux
+
+
+def maybe_scan(cfg: ModelConfig, body, carry, xs):
+    """lax.scan over stacked xs, or a python unroll in cost-probe mode.
+
+    Mirrors scan semantics: returns (carry, stacked_ys) where ys pytrees are
+    stacked along a new leading axis (or None when body emits None).
+    """
+    if not cfg.unroll_layers:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+def _remat_policy(cfg: ModelConfig, batch_tokens: int):
+    if not cfg.remat:
+        return None
+    inter = transformer_intermediates(
+        batch_tokens=batch_tokens, d_model=cfg.d_model,
+        d_ff=cfg.moe_d_ff if cfg.is_moe else cfg.d_ff,
+        n_q_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim,
+        moe_experts_per_token=cfg.top_k,
+    )
+    plan = plan_checkpoint_policy(inter, cfg.remat_budget_bytes)
+    return plan.policy()
+
+
+def _scan_blocks(cfg: ModelConfig, stacked_params, x, positions, *,
+                 kv_x=None, causal=True, n_layers=None):
+    """Scan over stacked per-layer params with planner-driven remat."""
+    policy = _remat_policy(cfg, x.shape[0] * x.shape[1])
+
+    def body(carry, p):
+        h, aux = carry
+        h, a = block_forward(cfg, p, h, positions, kv_x=kv_x, causal=causal)
+        return (h, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=policy, prevent_cse=True)
+    (x, aux), _ = maybe_scan(cfg, body, (x, jnp.zeros((), jnp.float32)),
+                             stacked_params)
+    return x, aux
+
+
+def _stack_init(rng, n: int, init_fn):
+    rngs = jax.random.split(rng, n)
+    return jax.vmap(init_fn)(rngs)
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only LM (dense + moe)
+# ---------------------------------------------------------------------------
+
+def lm_init(rng, cfg: ModelConfig):
+    k_emb, k_blocks, k_out = jax.random.split(rng, 3)
+    pv = padded_vocab(cfg)
+    p = {
+        "embed": layers.embedding_init(k_emb, pv, cfg.d_model),
+        "blocks": _stack_init(k_blocks, cfg.n_layers,
+                              lambda r: block_init(r, cfg)),
+        "ln_f": layers.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = layers.dense_init(k_out, cfg.d_model, pv)
+    return p
+
+
+def lm_specs(cfg: ModelConfig):
+    s = {
+        "embed": layers.embedding_specs(),
+        "blocks": jax.tree_util.tree_map(
+            lambda ax: (None,) + tuple(ax),
+            block_specs(cfg), is_leaf=lambda v: isinstance(v, tuple)),
+        "ln_f": layers.rmsnorm_specs(),
+    }
+    if not cfg.tie_embeddings:
+        s["unembed"] = layers.dense_specs("embed", "vocab")
+    return s
+
+
+def lm_logits(cfg: ModelConfig, params, x):
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x, layers._dtype(cfg.dtype))
+    else:
+        logits = layers.dense(params["unembed"], x, layers._dtype(cfg.dtype))
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def lm_forward(cfg: ModelConfig, params, tokens):
+    b, s = tokens.shape
+    x = layers.embed(params["embed"], tokens, layers._dtype(cfg.dtype))
+    x = constrain(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x, aux = _scan_blocks(cfg, params["blocks"], x, positions)
+    return lm_logits(cfg, params, x), aux
+
+
+def softmax_xent(cfg: ModelConfig, logits, targets):
+    """Cross-entropy with padded-vocab masking, fp32 accumulation."""
+    pv = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    if pv > cfg.vocab:
+        neg = jnp.full((pv - cfg.vocab,), -1e30, jnp.float32)
+        lf = lf.at[..., cfg.vocab:].set(neg)  # mask padded ids
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def lm_loss(cfg: ModelConfig, params, batch):
+    logits, aux = lm_forward(cfg, params, batch["tokens"])
+    loss = softmax_xent(cfg, logits, batch["targets"])
+    if cfg.is_moe:
+        loss = loss + 0.01 * aux
+    return loss
+
+
+# ---- decode ----------------------------------------------------------------
+
+def lm_decode_init(cfg: ModelConfig, batch: int, max_seq: int):
+    return attn.init_kv_cache(cfg, batch, max_seq, cfg.n_layers,
+                              layers._dtype(cfg.dtype))
+
+
+def lm_decode_specs(cfg: ModelConfig):
+    return attn.kv_cache_specs()
+
+
+def lm_decode_step(cfg: ModelConfig, params, cache, tokens, cache_len):
+    """tokens: (B,) new token ids; cache_len: (B,) current lengths."""
+    b = tokens.shape[0]
+    x = layers.embed(params["embed"], tokens[:, None],
+                     layers._dtype(cfg.dtype))
+    x = constrain(x, "batch", None, "embed")
+
+    def body(h, inp):
+        p, ck, cv = inp
+        hn = layers.rmsnorm(p["ln1"], h, cfg.norm_eps)
+        ao, ck, cv = attn.decode_attention(cfg, p["attn"], hn, ck, cv,
+                                           cache_len=cache_len)
+        h = h + ao
+        hn = layers.rmsnorm(p["ln2"], h, cfg.norm_eps)
+        if cfg.is_moe:
+            mo, _ = moe.moe_forward(cfg, p["moe"], hn)
+            h = h + mo
+        elif cfg.d_ff:
+            h = h + layers.swiglu(p["mlp"], hn, layers._dtype(cfg.dtype))
+        return h, (ck, cv)
+
+    x, (new_k, new_v) = maybe_scan(
+        cfg, body, x, (params["blocks"], cache["k"], cache["v"]))
+    logits = lm_logits(cfg, params, x)[:, 0]
+    return logits, {"k": new_k, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM stack (family: ssm)
+# ---------------------------------------------------------------------------
+
+def xlstm_init(rng, cfg: ModelConfig):
+    k_emb, k_m, k_s, k_out = jax.random.split(rng, 4)
+    pv = padded_vocab(cfg)
+    n_s = cfg.n_layers // cfg.slstm_every if cfg.slstm_every else 0
+    n_m = cfg.n_layers - n_s
+    p = {
+        "embed": layers.embedding_init(k_emb, pv, cfg.d_model),
+        "mblocks": _stack_init(k_m, n_m, lambda r: {
+            "ln": layers.rmsnorm_init(cfg.d_model),
+            "mlstm": xlstm.mlstm_init(r, cfg)}),
+        "ln_f": layers.rmsnorm_init(cfg.d_model),
+        "unembed": layers.dense_init(k_out, cfg.d_model, pv),
+    }
+    if n_s:
+        p["sblocks"] = _stack_init(k_s, n_s, lambda r: {
+            "ln": layers.rmsnorm_init(cfg.d_model),
+            "slstm": xlstm.slstm_init(r, cfg)})
+    return p
+
+
+def xlstm_specs(cfg: ModelConfig):
+    stack = lambda tree: jax.tree_util.tree_map(
+        lambda ax: (None,) + tuple(ax), tree,
+        is_leaf=lambda v: isinstance(v, tuple))
+    s = {
+        "embed": layers.embedding_specs(),
+        "mblocks": stack({"ln": layers.rmsnorm_specs(),
+                          "mlstm": xlstm.mlstm_specs()}),
+        "ln_f": layers.rmsnorm_specs(),
+        "unembed": layers.dense_specs("embed", "vocab"),
+    }
+    if cfg.slstm_every:
+        s["sblocks"] = stack({"ln": layers.rmsnorm_specs(),
+                              "slstm": xlstm.slstm_specs()})
+    return s
+
+
+def xlstm_forward(cfg: ModelConfig, params, tokens):
+    b, s = tokens.shape
+    x = layers.embed(params["embed"], tokens, layers._dtype(cfg.dtype))
+    x = constrain(x, "batch", "seq", "embed")
+
+    def mbody(h, p):
+        h = h + xlstm.mlstm_forward(
+            cfg, p["mlstm"], layers.rmsnorm(p["ln"], h, cfg.norm_eps))
+        return constrain(h, "batch", "seq", "embed"), None
+
+    def sbody(h, p):
+        h = h + xlstm.slstm_forward(
+            cfg, p["slstm"], layers.rmsnorm(p["ln"], h, cfg.norm_eps))
+        return constrain(h, "batch", "seq", "embed"), None
+
+    if cfg.remat:
+        mbody = jax.checkpoint(mbody, prevent_cse=True)
+        sbody = jax.checkpoint(sbody, prevent_cse=True)
+    # interleave: scan mLSTM groups between each sLSTM layer
+    if cfg.slstm_every and "sblocks" in params:
+        n_s = cfg.n_layers // cfg.slstm_every
+        per = (cfg.n_layers - n_s) // n_s
+        m = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_s, per) + a.shape[1:]), params["mblocks"])
+
+        def group(h, inp):
+            mg, sg = inp
+            h, _ = maybe_scan(cfg, mbody, h, mg)
+            h, _ = sbody(h, sg)
+            return h, None
+
+        x, _ = maybe_scan(cfg, group, x, (m, params["sblocks"]))
+    else:
+        x, _ = maybe_scan(cfg, mbody, x, params["mblocks"])
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = layers.dense(params["unembed"], x, layers._dtype(cfg.dtype))
+    return constrain(logits, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+
+def xlstm_loss(cfg: ModelConfig, params, batch):
+    logits, _ = xlstm_forward(cfg, params, batch["tokens"])
+    return softmax_xent(cfg, logits, batch["targets"])
+
+
+def xlstm_decode_init(cfg: ModelConfig, batch: int, max_seq: int):
+    n_s = cfg.n_layers // cfg.slstm_every if cfg.slstm_every else 0
+    n_m = cfg.n_layers - n_s
+    st = {"m": xlstm.init_mlstm_state(cfg, batch, n_m)}
+    if n_s:
+        st["s"] = xlstm.init_slstm_state(cfg, batch, n_s)
+    return st
+
+
+def xlstm_decode_specs(cfg: ModelConfig):
+    s = {"m": xlstm.mlstm_state_specs()}
+    if cfg.slstm_every:
+        s["s"] = {"h": (None, "batch", None), "c": (None, "batch", None),
+                  "n": (None, "batch", None), "m": (None, "batch", None)}
+    return s
+
+
+def xlstm_decode_step(cfg: ModelConfig, params, state, tokens, cache_len):
+    x = layers.embed(params["embed"], tokens[:, None],
+                     layers._dtype(cfg.dtype))
+
+    def mbody(h, inp):
+        p, C, n, m = inp
+        y, C2, n2, m2 = xlstm.mlstm_decode_step(
+            cfg, p["mlstm"], layers.rmsnorm(p["ln"], h, cfg.norm_eps),
+            C, n, m)
+        return h + y, (C2, n2, m2)
+
+    ms = state["m"]
+    if cfg.slstm_every and "s" in state:
+        n_s = cfg.n_layers // cfg.slstm_every
+        n_m = cfg.n_layers - n_s
+        per = n_m // n_s
+        mp = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_s, per) + a.shape[1:]), params["mblocks"])
+        mst = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_s, per) + a.shape[1:]), ms)
+
+        def group(h, inp):
+            p_m, st_m, p_s, st_s = inp
+            h, new_m = maybe_scan(
+                cfg, mbody, h, (p_m, st_m["C"], st_m["n"], st_m["m"]))
+            y, hh, cc, nn, mm = xlstm.slstm_decode_step(
+                cfg, p_s["slstm"],
+                layers.rmsnorm(p_s["ln"], h, cfg.norm_eps),
+                st_s["h"], st_s["c"], st_s["n"], st_s["m"])
+            return h + y, (new_m, (hh, cc, nn, mm))
+
+        x, (new_ms, new_ss) = maybe_scan(
+            cfg, group, x, (mp, mst, params["sblocks"], state["s"]))
+        new_m = {
+            "C": new_ms[0].reshape(ms["C"].shape),
+            "n": new_ms[1].reshape(ms["n"].shape),
+            "m": new_ms[2].reshape(ms["m"].shape),
+        }
+        new_state = {"m": new_m, "s": {
+            "h": new_ss[0], "c": new_ss[1], "n": new_ss[2], "m": new_ss[3]}}
+    else:
+        x, new = maybe_scan(cfg, mbody, x, (params["mblocks"], ms["C"],
+                                            ms["n"], ms["m"]))
+        new_state = {"m": {"C": new[0], "n": new[1], "m": new[2]}}
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = layers.dense(params["unembed"], x, layers._dtype(cfg.dtype))[:, 0]
+    return logits, new_state

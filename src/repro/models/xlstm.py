@@ -1,0 +1,317 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelisable)
+and sLSTM (scalar memory, sequential scan).
+
+mLSTM uses the stabilised chunkwise-parallel form (same schedule family as
+the SSD scan): exponential input gates with a running maximiser m for
+numerical stability, matrix memory C: (B, H, P, P) and normaliser n:
+(B, H, P).  The ``kernels/mlstm_scan`` Pallas kernel implements the
+intra-chunk part; this module is the lowering target for the dry-run and
+the oracle for the kernel tests.
+
+sLSTM keeps per-unit scalar state with a true recurrent dependency
+(h feeds the next step's gates), so it lowers to a ``lax.scan`` over time —
+inherently sequential, as in the paper.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.sharding.rules import constrain
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    di = 2 * d                      # xLSTM up-projection factor 2
+    h = cfg.n_heads
+    k1, k2, k3, k4, k5, k6 = jax.random.split(rng, 6)
+    return {
+        "up_l": layers.dense_init(k1, d, di),       # gated branch
+        "up_r": layers.dense_init(k2, d, di),       # skip branch
+        "wq": layers.dense_init(k3, di, di),
+        "wk": layers.dense_init(k4, di, di),
+        "wv": layers.dense_init(k5, di, di),
+        "w_if": jax.random.normal(k6, (di, 2 * h), jnp.float32) * 0.01,
+        "b_if": jnp.concatenate([jnp.zeros((h,)), jnp.ones((h,)) * 3.0]),
+        "norm": layers.rmsnorm_init(di),
+        "down": layers.dense_init(jax.random.fold_in(rng, 7), di, d),
+    }
+
+
+def mlstm_specs():
+    return {
+        "up_l": layers.dense_specs("embed", "mlp"),
+        "up_r": layers.dense_specs("embed", "mlp"),
+        "wq": layers.dense_specs("mlp", "mlp"),
+        "wk": layers.dense_specs("mlp", "mlp"),
+        "wv": layers.dense_specs("mlp", "mlp"),
+        "w_if": ("mlp", None),
+        "b_if": (None,),
+        "norm": {"scale": ("mlp",)},
+        "down": layers.dense_specs("mlp", "embed"),
+    }
+
+
+def mlstm_chunked(q, k, v, i_gate, f_gate, *, chunk: int = 256):
+    """Stabilised chunkwise mLSTM.
+
+    q,k,v: (b, s, h, p); i_gate,f_gate: (b, s, h) — raw (pre-activation).
+    Returns (b, s, h, p).
+
+    Per head: C_t = f_t C_{t-1} + i_t v_t k_t^T ; y_t = C_t q_t / max(|n_t q_t|,1)
+    with log-space stabilisation (m running max), f in log-sigmoid space.
+    """
+    b, s, h, p = q.shape
+    scale = 1.0 / math.sqrt(p)
+    lf = jax.nn.log_sigmoid(f_gate)                 # (b,s,h)  log f_t
+    li = i_gate                                     # log-space input gate
+
+    qc = min(chunk, s)
+    nc = -(-s // qc)
+    pad = nc * qc - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+
+    qb = q.reshape(b, nc, qc, h, p) * scale
+    kb = k.reshape(b, nc, qc, h, p)
+    vb = v.reshape(b, nc, qc, h, p)
+    lfb = lf.reshape(b, nc, qc, h)
+    lib = li.reshape(b, nc, qc, h)
+
+    lf_cum = jnp.cumsum(lfb, axis=2)                       # within-chunk
+    # intra-chunk decay matrix: D[q,t] = sum_{t<j<=q} lf_j + li_t  (t<=q)
+    seg = lf_cum[:, :, :, None, :] - lf_cum[:, :, None, :, :]   # (b,nc,q,t,h)
+    dmat = seg + lib[:, :, None, :, :]
+    tmask = jnp.tril(jnp.ones((qc, qc), bool))
+    dmat = jnp.where(tmask[None, None, :, :, None], dmat, -jnp.inf)
+
+    # stabiliser: running max across chunks of (total decay + gate mass)
+    # chunk-local stabiliser keeps exp() bounded; cross-chunk handled via m.
+    m_intra = jnp.max(dmat, axis=3)                        # (b,nc,q,h)
+
+    scores = jnp.einsum("bcqhp,bcthp->bcqth", qb, kb)      # (b,nc,q,t,h)
+
+    # ---- chunk summary state ---------------------------------------------
+    decay_to_end = lf_cum[:, :, -1:, :] - lf_cum + lib     # (b,nc,q,h)
+    m_state = jnp.max(decay_to_end, axis=2)                # (b,nc,h)
+    sk = jnp.exp(decay_to_end - m_state[:, :, None, :])
+    states = jnp.einsum("bcthp,bcth,bcthr->bchpr",
+                        kb, sk, vb)                        # (b,nc,h,p,p)
+    norms = jnp.einsum("bcthp,bcth->bchp", kb, sk)         # (b,nc,h,p)
+    chunk_lf = lf_cum[:, :, -1, :]                         # (b,nc,h)
+
+    # ---- inter-chunk recurrence (log-stabilised) ---------------------------
+    def step(carry, inp):
+        C, n, m = carry                                    # (b,h,p,p),(b,h,p),(b,h)
+        st, nr, clf, mst = inp
+        m_new = jnp.maximum(m + clf, mst)
+        alpha = jnp.exp(m + clf - m_new)
+        beta = jnp.exp(mst - m_new)
+        C_new = C * alpha[..., None, None] + st * beta[..., None, None]
+        n_new = n * alpha[..., None] + nr * beta[..., None]
+        return (C_new, n_new, m_new), (C, n, m)            # emit previous
+
+    C0 = jnp.zeros((b, h, p, p), jnp.float32)
+    n0 = jnp.zeros((b, h, p), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    _, (C_prev, n_prev, m_prev) = jax.lax.scan(
+        step, (C0, n0, m0),
+        (states.transpose(1, 0, 2, 3, 4), norms.transpose(1, 0, 2, 3),
+         chunk_lf.transpose(1, 0, 2), m_state.transpose(1, 0, 2)))
+    C_prev = C_prev.transpose(1, 0, 2, 3, 4)
+    n_prev = n_prev.transpose(1, 0, 2, 3)
+    m_prev = m_prev.transpose(1, 0, 2)
+
+    # ---- combine intra + inter --------------------------------------------
+    # decay from chunk start to position q: lf_cum[q]
+    inter_decay = lf_cum + m_prev[:, :, None, :]           # (b,nc,q,h) log
+    m_total = jnp.maximum(m_intra, inter_decay)
+    w_intra = jnp.exp(dmat - m_total[:, :, :, None, :])    # (b,nc,q,t,h)
+    w_inter = jnp.exp(inter_decay - m_total)               # (b,nc,q,h)
+
+    y_intra = jnp.einsum("bcqth,bcqth,bcthr->bcqhr",
+                         scores, w_intra, vb)
+    y_inter = jnp.einsum("bcqhp,bchpr->bcqhr",
+                         qb * w_inter[..., None], C_prev)
+    n_intra = jnp.einsum("bcqth,bcqth->bcqh", scores, w_intra)
+    n_inter = jnp.einsum("bcqhp,bchp->bcqh",
+                         qb * w_inter[..., None], n_prev)
+    denom = jnp.maximum(jnp.abs(n_intra + n_inter),
+                        jnp.exp(-m_total))
+    y = (y_intra + y_inter) / denom[..., None]
+    return y.reshape(b, nc * qc, h, p)[:, :s]
+
+
+def mlstm_forward(cfg: ModelConfig, params, x: jax.Array) -> jax.Array:
+    from repro.core.remat_policy import tag
+    dt = layers._dtype(cfg.dtype)
+    b, s, d = x.shape
+    di = 2 * d
+    h = cfg.n_heads
+    p = di // h
+    xl = layers.dense(params["up_l"], x, dt)
+    xr = layers.dense(params["up_r"], x, dt)
+    q = layers.dense(params["wq"], xl, dt).reshape(b, s, h, p)
+    k = layers.dense(params["wk"], xl, dt).reshape(b, s, h, p)
+    v = layers.dense(params["wv"], xl, dt).reshape(b, s, h, p)
+    q = tag("qkv", q)
+    gates = xl.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    i_gate, f_gate = jnp.split(gates, 2, axis=-1)          # (b,s,h) each
+    if cfg.mixer_skip:
+        y = (q + v).astype(jnp.float32)  # probe mode: kernel cost added analytically
+    else:
+        y = mlstm_chunked(q.astype(jnp.float32), k.astype(jnp.float32),
+                          v.astype(jnp.float32), i_gate, f_gate)
+    y = y.reshape(b, s, di).astype(dt)
+    y = tag("attn_out", y)
+    y = layers.rmsnorm(params["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(xr)
+    return layers.dense(params["down"], y, dt)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, n_layers: int):
+    d = cfg.d_model
+    di = 2 * d
+    h = cfg.n_heads
+    p = di // h
+    return {
+        "C": jnp.zeros((n_layers, batch, h, p, p), jnp.float32),
+        "n": jnp.zeros((n_layers, batch, h, p), jnp.float32),
+        "m": jnp.full((n_layers, batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_state_specs():
+    return {"C": (None, "batch", None, "sp_seq", "state"),
+            "n": (None, "batch", None, "sp_seq"),
+            "m": (None, "batch", None)}
+
+
+def mlstm_decode_step(cfg: ModelConfig, params, x, C, n, m):
+    """O(1) mLSTM decode.  x: (B,1,d); C: (B,H,P,P); n: (B,H,P); m: (B,H)."""
+    dt = layers._dtype(cfg.dtype)
+    b = x.shape[0]
+    d = cfg.d_model
+    di = 2 * d
+    h = cfg.n_heads
+    p = di // h
+    xl = layers.dense(params["up_l"], x, dt)[:, 0]
+    xr = layers.dense(params["up_r"], x, dt)[:, 0]
+    q = layers.dense(params["wq"], xl[:, None], dt).reshape(b, h, p) \
+        * (1.0 / math.sqrt(p))
+    k = layers.dense(params["wk"], xl[:, None], dt).reshape(b, h, p)
+    v = layers.dense(params["wv"], xl[:, None], dt).reshape(b, h, p)
+    gates = xl.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    li, fg = jnp.split(gates, 2, axis=-1)                  # (b,h)
+    lf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(lf + m, li)
+    alpha = jnp.exp(lf + m - m_new)
+    beta = jnp.exp(li - m_new)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    C_new = C * alpha[..., None, None] + beta[..., None, None] \
+        * jnp.einsum("bhp,bhr->bhpr", kf, vf)
+    n_new = n * alpha[..., None] + beta[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhp,bhpr->bhr", qf, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", qf, n_new)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(b, 1, di).astype(dt)
+    y = layers.rmsnorm(params["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(xr[:, None])
+    return layers.dense(params["down"], y, dt), C_new, n_new, m_new
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "wx": layers.dense_init(k1, d, 4 * d),
+        "wh": layers.dense_init(k2, d, 4 * d),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "norm": layers.rmsnorm_init(d),
+        "proj": layers.dense_init(k3, d, d),
+    }
+
+
+def slstm_specs():
+    return {
+        "wx": layers.dense_specs("embed", "mlp"),
+        "wh": layers.dense_specs("embed", "mlp"),
+        "bias": ("mlp",),
+        "norm": {"scale": ("embed",)},
+        "proj": layers.dense_specs("embed", "embed"),
+    }
+
+
+def slstm_forward(cfg: ModelConfig, params, x: jax.Array) -> jax.Array:
+    """Sequential scan over time (true recurrence: h feeds next gates)."""
+    dt = layers._dtype(cfg.dtype)
+    b, s, d = x.shape
+    gx = layers.dense(params["wx"], x, dt) + params["bias"].astype(dt)
+
+    def step(carry, gxt):
+        hprev, cprev, nprev, mprev = carry
+        g = gxt + layers.dense(params["wh"], hprev, dt)
+        zi, zf, zo, zz = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+        lf = jax.nn.log_sigmoid(zf)
+        m_new = jnp.maximum(lf + mprev, zi)
+        i = jnp.exp(zi - m_new)
+        f = jnp.exp(lf + mprev - m_new)
+        c_new = f * cprev + i * jnp.tanh(zz)
+        n_new = f * nprev + i
+        h_new = (jax.nn.sigmoid(zo) * c_new
+                 / jnp.maximum(n_new, 1.0)).astype(dt)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    h0 = jnp.zeros((b, d), dt)
+    c0 = jnp.zeros((b, d), jnp.float32)
+    n0 = jnp.zeros((b, d), jnp.float32)
+    m0 = jnp.full((b, d), -1e30, jnp.float32)
+    _, ys = jax.lax.scan(step, (h0, c0, n0, m0), gx.transpose(1, 0, 2))
+    y = ys.transpose(1, 0, 2)
+    y = layers.rmsnorm(params["norm"], y, cfg.norm_eps)
+    return layers.dense(params["proj"], y, dt)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, n_layers: int):
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((n_layers, batch, d), jnp.float32),
+        "c": jnp.zeros((n_layers, batch, d), jnp.float32),
+        "n": jnp.zeros((n_layers, batch, d), jnp.float32),
+        "m": jnp.full((n_layers, batch, d), -1e30, jnp.float32),
+    }
+
+
+def slstm_decode_step(cfg: ModelConfig, params, x, h, c, n, m):
+    dt = layers._dtype(cfg.dtype)
+    g = layers.dense(params["wx"], x, dt)[:, 0] + params["bias"].astype(dt) \
+        + layers.dense(params["wh"], h.astype(dt), dt)
+    zi, zf, zo, zz = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+    lf = jax.nn.log_sigmoid(zf)
+    m_new = jnp.maximum(lf + m, zi)
+    i = jnp.exp(zi - m_new)
+    f = jnp.exp(lf + m - m_new)
+    c_new = f * c + i * jnp.tanh(zz)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1.0)
+    y = layers.rmsnorm(params["norm"], h_new[:, None].astype(dt), cfg.norm_eps)
+    return layers.dense(params["proj"], y, dt), h_new, c_new, n_new, m_new

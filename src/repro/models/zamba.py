@@ -1,0 +1,183 @@
+"""Zamba2-style hybrid (family: hybrid): mamba2 backbone with ONE shared
+attention block applied every ``shared_attn_every`` layers.
+
+The shared block's weights are reused at every application — the model-level
+realisation of NNTrainer's Tensor-sharing mode ``E`` (time-unrolled weight
+sharing, §5.2): one parameter set, many execution sites, gradients
+accumulated across applications by autodiff exactly as the paper's
+Iteration-lifespan gradient tensors accumulate across unrolled steps.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers, ssm
+from repro.models.transformer import (_remat_policy, _stack_init,
+                                      block_forward, block_init, block_specs,
+                                      maybe_scan, padded_vocab, softmax_xent)
+from repro.sharding.rules import constrain
+
+
+def _stack_specs(tree):
+    return jax.tree_util.tree_map(lambda ax: (None,) + tuple(ax), tree,
+                                  is_leaf=lambda v: isinstance(v, tuple))
+
+
+def _layout(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_groups, tail): n_groups full groups of ``shared_attn_every`` mamba
+    layers + shared-attn application; remaining mamba layers as tail."""
+    k = cfg.shared_attn_every
+    return cfg.n_layers // k, cfg.n_layers % k
+
+
+def zamba_init(rng, cfg: ModelConfig):
+    k_e, k_m, k_s, k_t, k_o = jax.random.split(rng, 5)
+    pv = padded_vocab(cfg)
+    n_groups, tail = _layout(cfg)
+    k = cfg.shared_attn_every
+    p = {
+        "embed": layers.embedding_init(k_e, pv, cfg.d_model),
+        "mblocks": _stack_init(k_m, n_groups * k, lambda r: {
+            "ln": layers.rmsnorm_init(cfg.d_model),
+            "ssm": ssm.ssm_init(r, cfg)}),
+        # ONE shared attention block (E-shared across all applications)
+        "shared": block_init(k_s, cfg),
+        "ln_f": layers.rmsnorm_init(cfg.d_model),
+        "unembed": layers.dense_init(k_o, cfg.d_model, pv),
+    }
+    if tail:
+        p["tail"] = _stack_init(k_t, tail, lambda r: {
+            "ln": layers.rmsnorm_init(cfg.d_model),
+            "ssm": ssm.ssm_init(r, cfg)})
+    return p
+
+
+def zamba_specs(cfg: ModelConfig):
+    _, tail = _layout(cfg)
+    s = {
+        "embed": layers.embedding_specs(),
+        "mblocks": _stack_specs({"ln": layers.rmsnorm_specs(),
+                                 "ssm": ssm.ssm_specs(cfg)}),
+        "shared": block_specs(cfg),
+        "ln_f": layers.rmsnorm_specs(),
+        "unembed": layers.dense_specs("embed", "vocab"),
+    }
+    if tail:
+        s["tail"] = _stack_specs({"ln": layers.rmsnorm_specs(),
+                                  "ssm": ssm.ssm_specs(cfg)})
+    return s
+
+
+def zamba_forward(cfg: ModelConfig, params, tokens):
+    b, s = tokens.shape
+    n_groups, tail = _layout(cfg)
+    k = cfg.shared_attn_every
+    x = layers.embed(params["embed"], tokens, layers._dtype(cfg.dtype))
+    x = constrain(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def mbody(h, p):
+        h = h + ssm.ssm_forward(
+            cfg, p["ssm"], layers.rmsnorm(p["ln"], h, cfg.norm_eps))
+        return constrain(h, "batch", "seq", "embed"), None
+
+    if cfg.remat:
+        mbody = jax.checkpoint(mbody, prevent_cse=True)
+
+    grouped = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_groups, k) + a.shape[1:]), params["mblocks"])
+    policy = _remat_policy(cfg, b * s)
+
+    def group_body(h, mg):
+        h, _ = maybe_scan(cfg, mbody, h, mg)
+        # shared attention block: same params every application (mode E)
+        h, _ = block_forward(cfg, params["shared"], h, positions)
+        return h, None
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body, policy=policy,
+                                    prevent_cse=True)
+    x, _ = maybe_scan(cfg, group_body, x, grouped)
+    if tail:
+        x, _ = maybe_scan(cfg, mbody, x, params["tail"])
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = layers.dense(params["unembed"], x, layers._dtype(cfg.dtype))
+    return constrain(logits, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+
+def zamba_loss(cfg: ModelConfig, params, batch):
+    logits, _ = zamba_forward(cfg, params, batch["tokens"])
+    return softmax_xent(cfg, logits, batch["targets"])
+
+
+def zamba_decode_init(cfg: ModelConfig, batch: int, max_seq: int):
+    n_groups, tail = _layout(cfg)
+    k = cfg.shared_attn_every
+    st = {
+        "ssm": ssm.init_ssm_state(cfg, batch, n_groups * k),
+        "attn": attn.init_kv_cache(cfg, batch, max_seq, n_groups,
+                                   layers._dtype(cfg.dtype)),
+    }
+    if tail:
+        st["tail"] = ssm.init_ssm_state(cfg, batch, tail)
+    return st
+
+
+def zamba_decode_specs(cfg: ModelConfig):
+    _, tail = _layout(cfg)
+    s = {"ssm": ssm.ssm_state_specs(), "attn": attn.kv_cache_specs()}
+    if tail:
+        s["tail"] = ssm.ssm_state_specs()
+    return s
+
+
+def zamba_decode_step(cfg: ModelConfig, params, state, tokens, cache_len):
+    n_groups, tail = _layout(cfg)
+    k = cfg.shared_attn_every
+    dt = layers._dtype(cfg.dtype)
+    x = layers.embed(params["embed"], tokens[:, None], dt)
+
+    def mstep(h, inp):
+        p, sh, sc = inp
+        y, sh2, sc2 = ssm.ssm_decode_step(
+            cfg, p["ssm"], layers.rmsnorm(p["ln"], h, cfg.norm_eps), sh, sc)
+        return h + y, (sh2, sc2)
+
+    grouped_p = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_groups, k) + a.shape[1:]), params["mblocks"])
+    grouped_s = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_groups, k) + a.shape[1:]), state["ssm"])
+
+    def group_step(h, inp):
+        mp, mst, ck, cv = inp
+        h, new_m = maybe_scan(cfg, mstep, h, (mp, mst["h"], mst["conv"]))
+        hn = layers.rmsnorm(params["shared"]["ln1"], h, cfg.norm_eps)
+        ao, ck, cv = attn.decode_attention(cfg, params["shared"]["attn"],
+                                           hn, ck, cv, cache_len=cache_len)
+        h = h + ao
+        hn = layers.rmsnorm(params["shared"]["ln2"], h, cfg.norm_eps)
+        h = h + layers.swiglu(params["shared"]["mlp"], hn, dt)
+        return h, (new_m, ck, cv)
+
+    x, (new_m, nk, nv) = maybe_scan(
+        cfg, group_step, x,
+        (grouped_p, grouped_s, state["attn"]["k"], state["attn"]["v"]))
+    new_state = {
+        "ssm": {"h": new_m[0].reshape(state["ssm"]["h"].shape),
+                "conv": new_m[1].reshape(state["ssm"]["conv"].shape)},
+        "attn": {"k": nk, "v": nv},
+    }
+    if tail:
+        x, new_t = maybe_scan(
+            cfg, mstep, x, (params["tail"], state["tail"]["h"],
+                            state["tail"]["conv"]))
+        new_state["tail"] = {"h": new_t[0], "conv": new_t[1]}
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = layers.dense(params["unembed"], x, dt)[:, 0]
+    return logits, new_state

@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (Optimizer, adamw, sgd_momentum,
+                                    make_optimizer)
+from repro.optim.compression import (compress_gradients, decompress_gradients,
+                                     error_feedback_update)
+
+__all__ = ["Optimizer", "adamw", "sgd_momentum", "make_optimizer",
+           "compress_gradients", "decompress_gradients",
+           "error_feedback_update"]

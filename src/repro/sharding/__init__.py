@@ -1,0 +1,9 @@
+from repro.sharding.rules import (constrain, current_mesh, logical_to_spec,
+                                  named_sharding, set_mesh_and_rules,
+                                  use_mesh)
+from repro.sharding.api import (activation_rules, param_shardings,
+                                tree_shardings)
+
+__all__ = ["constrain", "current_mesh", "logical_to_spec", "named_sharding",
+           "set_mesh_and_rules", "use_mesh", "activation_rules",
+           "param_shardings", "tree_shardings"]

@@ -1,0 +1,158 @@
+"""Sharding assembly: per-(arch, shape) rule sets and pytree shardings.
+
+Two rule sets exist per run:
+
+* activation rules — installed thread-globally (``use_mesh``) and consumed
+  by ``constrain()`` inside the model code.  Heads/kv-heads shard over
+  ``model`` only when divisible; batch shards over (pod, data) only when
+  divisible (long-context batch=1 falls back to sequence parallelism).
+
+* parameter rules — used only to compute ``in_shardings`` for params and
+  optimizer state.  ``embed`` maps to the FSDP axis (``data``) for
+  architectures whose parameters do not fit TP-sharded alone (ZeRO-3-style
+  weight sharding); optimizer moments are always FSDP-sharded (ZeRO-1).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.sharding import rules as R
+
+# parameter bytes above which FSDP weight sharding is enabled (fp32 master
+# params would not fit 16-way TP alone on 16 GiB chips)
+FSDP_PARAM_THRESHOLD = 8e9
+
+# Perf-iteration override hooks (set by launch/perf.py around probe runs):
+# "rules" updates the activation rule set; "fsdp" forces ZeRO-3 on/off.
+_OVERRIDES: Dict[str, object] = {"rules": None, "fsdp": None}
+
+
+def set_overrides(rules=None, fsdp=None) -> None:
+    _OVERRIDES["rules"] = rules
+    _OVERRIDES["fsdp"] = fsdp
+
+
+def clear_overrides() -> None:
+    set_overrides(None, None)
+
+
+def _divisible(n: int, mesh: Mesh, axes: Tuple[str, ...]) -> bool:
+    size = 1
+    for a in axes:
+        if a in mesh.shape:
+            size *= mesh.shape[a]
+    return size > 0 and n % size == 0
+
+
+def activation_rules(cfg: ModelConfig, shape: ShapeConfig,
+                     mesh: Mesh) -> Dict[str, Optional[Tuple[str, ...]]]:
+    rules: Dict[str, Optional[Tuple[str, ...]]] = dict(R.DEFAULT_RULES)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if _divisible(shape.global_batch, mesh, batch_axes):
+        rules["batch"] = batch_axes
+        rules["kv_seq"] = None
+    else:
+        # long-context decode (batch=1): shard the KV/state sequence instead
+        rules["batch"] = None
+        rules["kv_seq"] = ("data",)
+        rules["sp_seq"] = ("data",)
+    rules["heads"] = ("model",) if _divisible(cfg.n_heads, mesh, ("model",)) \
+        else None
+    rules["kv_heads"] = ("model",) \
+        if _divisible(cfg.n_kv_heads, mesh, ("model",)) else None
+    if shape.kind == "decode" and rules["kv_heads"] is None:
+        # KV heads not divisible by the model axis: shard the KV-cache
+        # sequence dim over 'model' instead (flash-decode style — partial
+        # attention per shard, GSPMD inserts the softmax-stat combine).
+        # Without this, a 32k cache replicates across the model axis and
+        # blows HBM (observed 51.9 GiB/dev on qwen3 decode_32k).
+        rules["kv_seq"] = tuple(rules["kv_seq"] or ()) + ("model",)
+    if cfg.family in ("ssm", "hybrid"):
+        state = cfg.ssm_state or 64
+        rules["state"] = ("model",) if _divisible(state, mesh, ("model",)) \
+            else None
+    if _OVERRIDES["rules"]:
+        rules.update(_OVERRIDES["rules"])
+    return rules
+
+
+def param_rules(cfg: ModelConfig, mesh: Mesh, *, fsdp: Optional[bool] = None,
+                zero1: bool = False) -> Dict[str, Optional[Tuple[str, ...]]]:
+    if _OVERRIDES["fsdp"] is not None:
+        fsdp = bool(_OVERRIDES["fsdp"])
+    if fsdp is None:
+        fsdp = cfg.param_count() * 4 > FSDP_PARAM_THRESHOLD
+    rules = dict(R.DEFAULT_RULES)
+    if fsdp or zero1:
+        rules["embed"] = ("data",)       # weight d_model dim -> FSDP
+    else:
+        rules["embed"] = None
+    # vocab: model-sharded (padded to a multiple of 256 in the model code)
+    return rules
+
+
+def _spec_from_logical(logical, rules, mesh) -> P:
+    mesh_axes = set(mesh.axis_names)
+    out = []
+    used = set()
+    for ax in logical:
+        if ax is None:
+            out.append(None)
+            continue
+        phys = rules.get(ax)
+        if phys is None:
+            out.append(None)
+            continue
+        phys = tuple(p for p in phys if p in mesh_axes and p not in used)
+        used.update(phys)
+        out.append(None if not phys else
+                   (phys[0] if len(phys) == 1 else tuple(phys)))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_shardings(mesh: Mesh, spec_tree, rules, shape_tree=None):
+    """Map a logical-axis pytree to NamedShardings.
+
+    When ``shape_tree`` (matching ShapeDtypeStructs) is given, any axis whose
+    dimension is not divisible by its mesh-axes product is dropped to None —
+    the safety net for odd dims (e.g. unpadded vocab remainders).
+    """
+    def one(logical, aval=None):
+        spec = _spec_from_logical(logical, rules, mesh)
+        if aval is not None:
+            parts = list(spec) + [None] * (len(aval.shape) - len(spec))
+            fixed = []
+            for dim, part in zip(aval.shape, parts):
+                if part is None:
+                    fixed.append(None)
+                    continue
+                axes = (part,) if isinstance(part, str) else tuple(part)
+                size = 1
+                for a in axes:
+                    size *= mesh.shape[a]
+                fixed.append(part if dim % size == 0 else None)
+            while fixed and fixed[-1] is None:
+                fixed.pop()
+            spec = P(*fixed)
+        return NamedSharding(mesh, spec)
+
+    is_leaf = lambda v: isinstance(v, tuple)
+    if shape_tree is None:
+        return jax.tree_util.tree_map(one, spec_tree, is_leaf=is_leaf)
+    flat_s, tdef = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_leaf)
+    flat_a = tdef.flatten_up_to(shape_tree)
+    return tdef.unflatten([one(s, a) for s, a in zip(flat_s, flat_a)])
+
+
+def param_shardings(mesh: Mesh, cfg: ModelConfig, spec_tree, shape_tree=None,
+                    *, fsdp: Optional[bool] = None, zero1: bool = False):
+    return tree_shardings(mesh, spec_tree,
+                          param_rules(cfg, mesh, fsdp=fsdp, zero1=zero1),
+                          shape_tree)

@@ -1,0 +1,132 @@
+"""Logical-axis sharding rules (GSPMD) for the repro framework.
+
+Models annotate tensors with *logical* axis names; the active rule set maps
+them to mesh axes.  This is the flax-linen logical-axis pattern without the
+flax dependency — a thread-global context installed by the launcher.
+
+Physical mesh axes:
+    pod    — across pods (DCN): pure data parallelism (+ pipeline option)
+    data   — within-pod data parallelism / FSDP / sequence parallelism
+    model  — tensor/expert parallelism (ICI)
+
+Logical axes used across the codebase:
+    batch       — global batch            -> ("pod", "data")
+    seq         — sequence (activations)  -> None (or "data" for SP)
+    heads       — attention heads         -> "model"
+    kv_heads    — KV heads                -> "model" iff divisible else None
+    embed       — d_model                 -> None (activations) / FSDP "data" (params)
+    mlp         — d_ff                    -> "model"
+    vocab       — vocabulary              -> "model"
+    expert      — MoE experts             -> "model"
+    qkv         — fused qkv dim           -> "model"
+    kv_seq      — KV-cache sequence       -> None ("data" for long-context)
+    stage       — pipeline stage          -> "pod" (pipeline mode)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+DEFAULT_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "batch_nopod": ("data",),
+    "seq": None,
+    "sp_seq": ("data",),          # sequence parallelism (long context)
+    "heads": ("model",),
+    "kv_heads": None,             # overridden per-config when divisible
+    "embed": None,
+    "fsdp_embed": ("data",),      # ZeRO-3/FSDP weight sharding over data
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "kv_seq": None,
+    "state": None,
+    "conv": None,
+}
+
+
+def set_mesh_and_rules(mesh: Optional[Mesh],
+                       rules: Optional[Dict[str, Optional[Tuple[str, ...]]]] = None):
+    _state.mesh = mesh
+    _state.rules = dict(DEFAULT_RULES)
+    if rules:
+        _state.rules.update(rules)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def current_rules() -> Dict[str, Optional[Tuple[str, ...]]]:
+    return getattr(_state, "rules", DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh],
+             rules: Optional[Dict[str, Optional[Tuple[str, ...]]]] = None):
+    prev_mesh = getattr(_state, "mesh", None)
+    prev_rules = getattr(_state, "rules", None)
+    set_mesh_and_rules(mesh, rules)
+    try:
+        yield
+    finally:
+        _state.mesh = prev_mesh
+        _state.rules = prev_rules if prev_rules is not None else dict(DEFAULT_RULES)
+
+
+def logical_to_spec(logical_axes: Sequence[Optional[str]]) -> P:
+    """Map a tuple of logical axis names (or None) to a PartitionSpec,
+    dropping mesh axes that do not exist in the active mesh."""
+    mesh = current_mesh()
+    rules = current_rules()
+    mesh_axes = set(mesh.axis_names) if mesh is not None else set()
+    out = []
+    used = set()
+    for ax in logical_axes:
+        if ax is None:
+            out.append(None)
+            continue
+        phys = rules.get(ax)
+        if phys is None:
+            out.append(None)
+            continue
+        phys = tuple(p for p in phys if p in mesh_axes and p not in used)
+        used.update(phys)
+        if not phys:
+            out.append(None)
+        elif len(phys) == 1:
+            out.append(phys[0])
+        else:
+            out.append(tuple(phys))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def constrain(x, *logical_axes: Optional[str]):
+    """with_sharding_constraint against the active mesh (no-op when absent
+    or when running single-device smoke tests)."""
+    mesh = current_mesh()
+    if mesh is None or len(logical_axes) != x.ndim:
+        return x
+    spec = logical_to_spec(logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(*logical_axes: Optional[str]) -> Optional[NamedSharding]:
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_spec(logical_axes))
+
+
+def spec_for_param(logical_axes: Sequence[Optional[str]]) -> P:
+    return logical_to_spec(logical_axes)

@@ -1,0 +1,234 @@
+"""Sharded train / serve step builders.
+
+``make_train_step``: jit-able (params, opt_state, batch) -> (params,
+opt_state, metrics) with optional microbatched gradient accumulation
+(a ``lax.scan`` over batch chunks — the distributed analogue of the paper's
+Iteration-lifespan gradient tensors: one persistent gradient buffer,
+updated once per iteration).
+
+``make_serve_step``: prefill (batch -> logits) and decode (one token with a
+KV/state cache) steps.
+
+All shardings are assembled here from the logical-axis spec trees; the
+functions are pure and lower cleanly under ``jax.jit(...).lower()`` for the
+multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model, input_specs
+from repro.optim import Optimizer
+from repro.sharding import rules as R
+from repro.sharding.api import (activation_rules, param_shardings,
+                                tree_shardings)
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything the launcher / dry-run needs for one (arch, shape) cell."""
+    fn: Callable
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    abstract_args: Tuple[Any, ...]
+    act_rules: Dict
+    mesh: Mesh
+
+
+def _batch_shardings(mesh: Mesh, specs, act_rules):
+    def one(aval):
+        if aval.ndim == 0:
+            return NamedSharding(mesh, P())
+        batch_axes = act_rules.get("batch")
+        if batch_axes is None:
+            return NamedSharding(mesh, P())
+        size = 1
+        for a in batch_axes:
+            size *= mesh.shape[a]
+        if aval.shape[0] % size != 0:
+            return NamedSharding(mesh, P())
+        spec = [tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]]
+        spec += [None] * (aval.ndim - 1)
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map(one, specs)
+
+
+def opt_state_spec_tree(opt_state, param_spec_tree):
+    """Logical specs for the optimizer state, mirroring the param tree.
+
+    fp32/bf16 moments reuse the parameter's logical axes; int8-quantised
+    moments get ("qblocks", None) — the flat block dim shards over
+    (data, model) jointly (ZeRO across the whole mesh)."""
+    def specs_for(mu_entry, pspec):
+        def one_moment(m):
+            if isinstance(m, dict):   # quantised {"q", "scale"}
+                return {"q": ("qblocks", None), "scale": ("qblocks", None)}
+            return tuple(pspec)
+        return {k: one_moment(v) for k, v in mu_entry.items()}
+
+    is_param_leaf = lambda v: isinstance(v, tuple)
+    flat_p, tdef = jax.tree_util.tree_flatten(param_spec_tree,
+                                              is_leaf=is_param_leaf)
+    flat_mu = tdef.flatten_up_to(opt_state["mu"])
+    mu_specs = tdef.unflatten(
+        [specs_for(mu, ps) for mu, ps in zip(flat_mu, flat_p)])
+    out = {"mu": mu_specs}
+    for k in opt_state:
+        if k not in ("mu",):
+            out[k] = ()
+    return out
+
+
+def make_train_step(model: Model, optimizer: Optimizer, mesh: Mesh,
+                    shape: ShapeConfig, *, microbatches: int = 1,
+                    multi_pod: bool = False) -> StepBundle:
+    cfg = model.cfg
+    act_rules = activation_rules(cfg, shape, mesh)
+    act_rules["qblocks"] = ("data", "model")
+
+    abstract_p = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_specs = model.param_specs()
+    p_shard = param_shardings(mesh, cfg, p_specs, abstract_p, zero1=False)
+
+    abstract_opt = jax.eval_shape(lambda: optimizer.init(abstract_p))
+    o_specs = opt_state_spec_tree(abstract_opt, p_specs)
+    o_shard = tree_shardings(
+        mesh, o_specs,
+        {**act_rules, "embed": ("data",), "qblocks": ("data", "model")},
+        abstract_opt)
+
+    batch_specs = input_specs(cfg, shape)
+    b_shard = _batch_shardings(mesh, batch_specs, act_rules)
+
+    def train_step(params, opt_state, batch):
+        with R.use_mesh(mesh, act_rules):
+            if microbatches > 1:
+                def split(x):
+                    return x.reshape((microbatches,
+                                      x.shape[0] // microbatches)
+                                     + x.shape[1:])
+                mb = jax.tree_util.tree_map(split, batch)
+
+                def accum(carry, mbatch):
+                    gsum, lsum = carry
+                    loss, g = jax.value_and_grad(model.loss_fn)(params, mbatch)
+                    gsum = jax.tree_util.tree_map(jnp.add, gsum, g)
+                    return (gsum, lsum + loss), None
+
+                zeros = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (gsum, lsum), _ = jax.lax.scan(accum, (zeros, 0.0), mb)
+                grads = jax.tree_util.tree_map(
+                    lambda g: g / microbatches, gsum)
+                loss = lsum / microbatches
+            else:
+                loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+            new_params, new_opt = optimizer.update(grads, opt_state, params)
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(grads)))
+            return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    metrics_shard = {"loss": NamedSharding(mesh, P()),
+                     "grad_norm": NamedSharding(mesh, P())}
+    return StepBundle(
+        fn=train_step,
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, metrics_shard),
+        donate_argnums=(0, 1),
+        abstract_args=(abstract_p, abstract_opt, batch_specs),
+        act_rules=act_rules,
+        mesh=mesh,
+    )
+
+
+def make_prefill_step(model: Model, mesh: Mesh,
+                      shape: ShapeConfig) -> StepBundle:
+    cfg = model.cfg
+    act_rules = activation_rules(cfg, shape, mesh)
+    abstract_p = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_specs = model.param_specs()
+    p_shard = param_shardings(mesh, cfg, p_specs, abstract_p)
+    batch_specs = input_specs(cfg, shape)
+    b_shard = _batch_shardings(mesh, batch_specs, act_rules)
+
+    def prefill(params, batch):
+        with R.use_mesh(mesh, act_rules):
+            return model.forward(params, batch)
+
+    logits_spec = NamedSharding(
+        mesh, P(act_rules["batch"] if act_rules["batch"] else None,
+                None, "model"))
+    return StepBundle(
+        fn=prefill,
+        in_shardings=(p_shard, b_shard),
+        out_shardings=logits_spec,
+        donate_argnums=(),
+        abstract_args=(abstract_p, batch_specs),
+        act_rules=act_rules,
+        mesh=mesh,
+    )
+
+
+def make_decode_step(model: Model, mesh: Mesh,
+                     shape: ShapeConfig) -> StepBundle:
+    cfg = model.cfg
+    act_rules = activation_rules(cfg, shape, mesh)
+    abstract_p = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_specs = model.param_specs()
+    p_shard = param_shardings(mesh, cfg, p_specs, abstract_p)
+
+    abstract_state = jax.eval_shape(
+        lambda: model.decode_init(shape.global_batch, shape.seq_len))
+    s_specs = model.decode_specs()
+    s_shard = tree_shardings(mesh, s_specs, act_rules, abstract_state)
+
+    tok_specs = input_specs(cfg, shape)
+    t_shard = _batch_shardings(mesh, tok_specs, act_rules)
+
+    def decode(params, state, batch):
+        with R.use_mesh(mesh, act_rules):
+            return model.decode_fn(params, state, batch["tokens"],
+                                   batch["cache_len"])
+
+    logits_spec = NamedSharding(
+        mesh, P(act_rules["batch"] if act_rules["batch"] else None, "model"))
+    return StepBundle(
+        fn=decode,
+        in_shardings=(p_shard, s_shard, t_shard),
+        out_shardings=(logits_spec, s_shard),
+        donate_argnums=(1,),
+        abstract_args=(abstract_p, abstract_state, tok_specs),
+        act_rules=act_rules,
+        mesh=mesh,
+    )
+
+
+def build_step(model: Model, optimizer: Optional[Optimizer], mesh: Mesh,
+               shape: ShapeConfig, *, microbatches: int = 1) -> StepBundle:
+    if shape.kind == "train":
+        assert optimizer is not None
+        return make_train_step(model, optimizer, mesh, shape,
+                               microbatches=microbatches)
+    if shape.kind == "prefill":
+        return make_prefill_step(model, mesh, shape)
+    return make_decode_step(model, mesh, shape)
+
+
+def lower_step(bundle: StepBundle):
+    """jit + lower against abstract args (no allocation)."""
+    jitted = jax.jit(bundle.fn,
+                     in_shardings=bundle.in_shardings,
+                     out_shardings=bundle.out_shardings,
+                     donate_argnums=bundle.donate_argnums)
+    with bundle.mesh:
+        return jitted.lower(*bundle.abstract_args)

@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train-grad step + one decode step on CPU; asserts shapes and finiteness.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models.model import build_model, input_specs, reduce_config
+from repro.models.transformer import padded_vocab
+
+ARCH_IDS = list(ARCHS)
+
+
+def _small_batch(cfg, batch=2, seq=16, rng=None):
+    rng = rng or jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    b = {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab),
+        "targets": jax.random.randint(k2, (batch, seq), 0, cfg.vocab),
+    }
+    if cfg.family == "audio":
+        b["enc_frames"] = jax.random.normal(
+            k3, (batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        b["image_embeds"] = jax.random.normal(
+            k3, (batch, cfg.image_tokens, cfg.d_model), jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = reduce_config(ARCHS[arch])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _small_batch(cfg)
+    logits = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (2, 16, padded_vocab(cfg))
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_grads_finite(arch):
+    cfg = reduce_config(ARCHS[arch])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _small_batch(cfg)
+    loss, grads = jax.jit(jax.value_and_grad(model.loss_fn))(params, batch)
+    assert np.isfinite(float(loss))
+    for leaf in jax.tree_util.tree_leaves(grads):
+        assert np.isfinite(np.asarray(leaf, dtype=np.float32)).all()
+    # at least one non-zero gradient
+    total = sum(float(jnp.sum(jnp.abs(l)))
+                for l in jax.tree_util.tree_leaves(grads))
+    assert total > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = reduce_config(ARCHS[arch])
+    model = build_model(cfg)
+    if model.decode_fn is None:
+        pytest.skip("no decode path")
+    params = model.init(jax.random.PRNGKey(0))
+    batch_size, max_seq = 2, 32
+    state = model.decode_init(batch_size, max_seq)
+    tokens = jnp.array([1, 2], jnp.int32)
+    cache_len = jnp.array([5, 9], jnp.int32)
+    logits, new_state = jax.jit(model.decode_fn)(params, state, tokens,
+                                                 cache_len)
+    assert logits.shape == (batch_size, padded_vocab(cfg))
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
+    # state structure preserved
+    assert (jax.tree_util.tree_structure(state)
+            == jax.tree_util.tree_structure(new_state))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_greedy_decode_consistent_with_forward(arch):
+    """Prefill logits at position t == decode logits after consuming t tokens
+    (for architectures with exact cache/state semantics)."""
+    # fp32: bf16 rounding drift across layers/steps exceeds the tolerance
+    # even for identical math (whole-seq vs per-token matmul accumulation)
+    cfg = reduce_config(ARCHS[arch], dtype="float32")
+    if cfg.is_moe:
+        pytest.skip("capacity-dropped tokens make MoE decode/prefill differ")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    seq = 8
+    batch = _small_batch(cfg, batch=1, seq=seq)
+    if cfg.family in ("audio", "vlm"):
+        pytest.skip("cross-attn caches are decode-session initialised")
+    full_logits = model.forward(params, batch)            # (1, seq, V)
+
+    state = model.decode_init(1, 16)
+    for t in range(seq):
+        tok = batch["tokens"][:, t]
+        logits, state = model.decode_fn(params, state, tok,
+                                        jnp.array([t], jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(logits[0], np.float32),
+        np.asarray(full_logits[0, -1], np.float32), rtol=2e-2, atol=2e-2)
+
+
+def test_param_specs_match_param_tree():
+    """Every param leaf has a logical-axis spec of matching rank."""
+    for arch in ARCH_IDS:
+        cfg = reduce_config(ARCHS[arch])
+        model = build_model(cfg)
+        params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        specs = model.param_specs()
+        flat_p = jax.tree_util.tree_leaves_with_path(params)
+        flat_s, _ = jax.tree_util.tree_flatten(
+            specs, is_leaf=lambda v: isinstance(v, tuple))
+        assert len(flat_p) == len(flat_s), (
+            f"{arch}: {len(flat_p)} params vs {len(flat_s)} specs")
+        sdict = {jax.tree_util.keystr(kp): v.shape for kp, v in flat_p}
+        for (kp, leaf), spec in zip(flat_p, flat_s):
+            assert len(spec) == len(leaf.shape), (
+                f"{arch} {jax.tree_util.keystr(kp)}: spec {spec} vs "
+                f"shape {leaf.shape}")
+
+
+def test_input_specs_abstract():
+    from repro.configs import SHAPES, shape_applicable
+    for arch in ARCH_IDS:
+        cfg = ARCHS[arch]
+        for shape in SHAPES.values():
+            ok, _ = shape_applicable(cfg, shape)
+            if not ok:
+                continue
+            specs = input_specs(cfg, shape)
+            for v in jax.tree_util.tree_leaves(specs):
+                assert isinstance(v, jax.ShapeDtypeStruct)

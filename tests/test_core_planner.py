@@ -1,0 +1,249 @@
+"""Core algorithm tests: execution orders, memory planners, ideal memory.
+
+Includes hypothesis property tests for the planner invariants:
+  * no two lifetime-overlapping tensors share bytes (soundness)
+  * planner peak >= ideal peak (lower bound)
+  * planner peak <= worst-case/naive peak (usefulness)
+"""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.execution_order import compute_execution_order
+from repro.core.graph import LayerGraph, LayerNode, compile_graph
+from repro.core.ideal import PAPER_TABLE4_KIB, ideal_from_ordered, ideal_memory
+from repro.core.lifespan import CreateMode, Lifespan, TensorSpec
+from repro.core.planner import (BestFitPlanner, Plan, Placement,
+                                SortingPlanner, WorstCasePlanner, plan_memory)
+from repro.core.zoo import ZOO
+
+
+# ---------------------------------------------------------------------------
+# Table 4 reproduction (the paper's ideal-memory numbers, batch 64)
+# ---------------------------------------------------------------------------
+
+EXACT_CASES = [
+    "linear", "conv2d", "lstm", "model_a_linear", "model_a_conv2d",
+    "model_b_linear", "model_c_linear", "model_c_conv2d", "model_d",
+]
+
+
+@pytest.mark.parametrize("name", EXACT_CASES)
+def test_table4_ideal_memory_matches_paper(name):
+    g = ZOO[name]()
+    im = ideal_memory(g, 64)
+    paper = PAPER_TABLE4_KIB[name]
+    assert abs(im.total_kib / paper - 1.0) < 0.005, (
+        f"{name}: ideal {im.total_kib:.1f} KiB vs paper {paper} KiB"
+    )
+
+
+def test_table4_model_b_conv2d_documented_residual():
+    # The paper's Model B (Conv2D) number implies the activation output and
+    # its derivative never coexist, which is impossible for a sigmoid whose
+    # derivative reads the output; our number is the achievable minimum for
+    # the stated shapes (documented in EXPERIMENTS.md §Table4).
+    g = ZOO["model_b_conv2d"]()
+    im = ideal_memory(g, 64)
+    assert im.total_kib / PAPER_TABLE4_KIB["model_b_conv2d"] < 1.2
+
+
+@pytest.mark.parametrize("name", list(PAPER_TABLE4_KIB))
+def test_planner_peak_close_to_ideal(name):
+    """Paper Fig. 9: NNTrainer's measured peak ~= ideal (ignorable overhead)."""
+    g = ZOO[name]()
+    ordered = compute_execution_order(g, 64)
+    ideal = ideal_from_ordered(ordered)
+    plan = plan_memory(ordered, "sorting")
+    # alignment + fragmentation overhead must stay tiny
+    assert plan.total_bytes <= ideal.total_bytes * 1.05 + 16384
+
+
+# ---------------------------------------------------------------------------
+# Execution-order semantics (Figure 4/5/6)
+# ---------------------------------------------------------------------------
+
+def _simple_graph(n_linear=3):
+    layers = []
+    prev = "__input__"
+    for i in range(n_linear):
+        layers.append(LayerNode(f"fc{i}", "linear", [prev],
+                                {"in_features": 8, "out_features": 8,
+                                 "bias": False}))
+        prev = f"fc{i}"
+    layers.append(LayerNode("loss", "loss_mse", [prev]))
+    return compile_graph(LayerGraph(layers, (8,), (8,), "t"))
+
+
+def test_eo_forward_ascending_backward_descending():
+    g = _simple_graph(3)
+    o = compute_execution_order(g, 4)
+    fs = [o.layer_orders[f"fc{i}"][0] for i in range(3)]
+    cgs = [o.layer_orders[f"fc{i}"][1] for i in range(3)]
+    assert fs == sorted(fs)
+    assert cgs == sorted(cgs, reverse=True)
+    # CD follows CG immediately (Algorithm 1 line 6)
+    for i in range(3):
+        f, cg, cd = o.layer_orders[f"fc{i}"]
+        assert cd == cg + 1
+
+
+def test_saved_activation_freed_after_consumer_cg():
+    """Fig. 4: X1's last use is L1's CG, not L0's."""
+    g = _simple_graph(3)
+    o = compute_execution_order(g, 4)
+    x0 = o.tensors["X:fc0"]
+    _, cg1, _ = o.layer_orders["fc1"]
+    assert x0.max_eo == cg1
+
+
+def test_weight_lifespan_spans_everything():
+    g = _simple_graph(2)
+    o = compute_execution_order(g, 4)
+    w = o.tensors["W:fc0:w"]
+    assert w.min_eo == 0 and w.max_eo == o.eo_max
+
+
+def test_inplace_activation_merges():
+    """Fig. 5: activation output is an MV view merged into its input."""
+    layers = [
+        LayerNode("fc0", "linear", ["__input__"],
+                  {"in_features": 8, "out_features": 8, "bias": False,
+                   "activation": "sigmoid"}),
+        LayerNode("fc1", "linear", ["fc0"],
+                  {"in_features": 8, "out_features": 4, "bias": False}),
+        LayerNode("loss", "loss_mse", ["fc1"]),
+    ]
+    g = compile_graph(LayerGraph(layers, (8,), (4,), "t"))
+    o = compute_execution_order(g, 4)
+    assert o.tensors["X:fc0__act"].merged_into == "X:fc0"
+    # derivative of the activation input is an in-place MV of its output deriv
+    assert o.tensors["D:fc0"].merged_into is not None
+
+
+def test_flatten_rv_merges_despite_overlap():
+    """Fig. 6: RV merges even when intervals overlap."""
+    g = ZOO["model_c_linear"]()
+    o = compute_execution_order(g, 4)
+    flat = [t for n, t in o.tensors.items() if "flat" in n and n.startswith("X:")]
+    assert flat and all(t.merged_into is not None for t in flat)
+
+
+def test_mv_never_merges_into_placeholder():
+    g = ZOO["model_d"]()
+    o = compute_execution_order(g, 4)
+    # both activation branches read the (placeholder) input via multiout;
+    # neither may overwrite external memory
+    for n in ("X:act_a", "X:act_b"):
+        t = o.tensors[n]
+        assert t.create_mode == CreateMode.CREATE and t.merged_into is None
+
+
+def test_unrolled_weights_are_extend_shared():
+    g = ZOO["tacotron2_decoder"]()
+    o = compute_execution_order(g, 4)
+    owners = {n: t for n, t in o.tensors.items()
+              if n.startswith("W:lstm0__t") and n.endswith(":wx")}
+    merged = [t for t in owners.values() if t.merged_into is not None]
+    assert len(merged) == len(owners) - 1  # all but the first copy share
+
+
+def test_transfer_learning_prunes_backbone_derivatives():
+    g = ZOO["resnet18_transfer"]()
+    o = compute_execution_order(g, 4)
+    # frozen backbone: no gradient tensors, no derivative tensors
+    assert not any(n.startswith("G:r") for n in o.tensors)
+    assert not any(n.startswith("D:r") for n in o.tensors)
+    # classifier still trains
+    assert any(n.startswith("G:fc") for n in o.tensors)
+
+
+# ---------------------------------------------------------------------------
+# Planner invariants (hypothesis property tests)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def random_tensor_set(draw):
+    n = draw(st.integers(min_value=1, max_value=40))
+    eo_max = draw(st.integers(min_value=2, max_value=60))
+    tensors = []
+    for i in range(n):
+        a = draw(st.integers(min_value=0, max_value=eo_max))
+        b = draw(st.integers(min_value=0, max_value=eo_max))
+        lo, hi = min(a, b), max(a, b)
+        nbytes = draw(st.integers(min_value=1, max_value=1 << 20))
+        t = TensorSpec(name=f"t{i}", shape=(nbytes,), dtype="uint8",
+                       lifespan=Lifespan.FORWARD, create_mode=CreateMode.CREATE)
+        t.exec_orders = (lo, hi)
+        tensors.append(t)
+    return tensors, eo_max
+
+
+class _FakeOrdered:
+    def __init__(self, tensors, eo_max):
+        self.tensors = {t.name: t for t in tensors}
+        self.merged = {}
+        self.eo_max = eo_max
+        self.layer_orders = {}
+
+    def planned_tensors(self):
+        return list(self.tensors.values())
+
+
+@given(random_tensor_set())
+@settings(max_examples=80, deadline=None)
+def test_planner_soundness_and_bounds(data):
+    tensors, eo_max = data
+    ordered = _FakeOrdered(tensors, eo_max)
+
+    naive = WorstCasePlanner().plan(_FakeOrdered(tensors, eo_max))
+    ideal = ideal_from_ordered(ordered)
+
+    for cls in (SortingPlanner, BestFitPlanner):
+        plan = cls().plan(_FakeOrdered(
+            [TensorSpec(t.name, t.shape, t.dtype, t.lifespan, t.create_mode,
+                        exec_orders=t.exec_orders) for t in tensors], eo_max))
+        plan.validate()  # no overlapping live tensors
+        assert plan.arena_bytes >= ideal.arena_bytes  # >= lower bound
+        assert plan.arena_bytes <= naive.arena_bytes + 64 * len(tensors)
+
+
+@given(random_tensor_set())
+@settings(max_examples=40, deadline=None)
+def test_bestfit_never_worse_than_twice_ideal_on_random_sets(data):
+    # classic interval-packing guarantee check (loose): best-fit stays within
+    # a small constant of the lower bound on random workloads
+    tensors, eo_max = data
+    ideal = ideal_from_ordered(_FakeOrdered(tensors, eo_max))
+    plan = BestFitPlanner().plan(_FakeOrdered(tensors, eo_max))
+    assert plan.arena_bytes <= max(2 * ideal.arena_bytes, 64 * len(tensors))
+
+
+def test_planner_deterministic():
+    g = ZOO["resnet18"]()
+    p1 = plan_memory(compute_execution_order(g, 8), "sorting")
+    p2 = plan_memory(compute_execution_order(ZOO["resnet18"](), 8), "sorting")
+    assert p1.arena_bytes == p2.arena_bytes
+    assert {n: p.offset for n, p in p1.placements.items()} == \
+           {n: p.offset for n, p in p2.placements.items()}
+
+
+def test_bestfit_beats_or_ties_sorting_on_models():
+    """Beyond-paper claim: best-fit fragmentation <= Algorithm 2's."""
+    for name in ("model_b_conv2d", "resnet18", "vgg16", "lenet5"):
+        o1 = compute_execution_order(ZOO[name](), 16)
+        o2 = compute_execution_order(ZOO[name](), 16)
+        s = SortingPlanner().plan(o1)
+        b = BestFitPlanner().plan(o2)
+        assert b.arena_bytes <= s.arena_bytes
+
+
+def test_peak_known_before_execution():
+    """§4.2: peak memory is computable before any allocation."""
+    g = ZOO["vgg16"]()
+    ordered = compute_execution_order(g, 32)
+    plan = plan_memory(ordered, "bestfit")
+    assert plan.arena_bytes > 0
+    assert plan.total_bytes == plan.arena_bytes + plan.external_bytes

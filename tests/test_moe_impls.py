@@ -1,0 +1,101 @@
+"""MoE dispatch implementations: GShard one-hot einsum vs gather routing
+must agree exactly (both are §Perf cell-A variants)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import moe
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="moe", n_layers=1, d_model=32, n_heads=4,
+                n_kv_heads=4, d_ff=64, moe_d_ff=64, vocab=64, n_experts=8,
+                top_k=2, dtype="float32", capacity_factor=2.0)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("e,k,cf", [(8, 2, 2.0), (4, 1, 1.5), (16, 4, 1.25)])
+def test_gather_matches_einsum_forward(e, k, cf):
+    cfg = _cfg(n_experts=e, top_k=k, capacity_factor=cf)
+    p = moe.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    out_e, aux_e = moe.moe_forward(cfg, p, x)
+    out_g, aux_g = moe.moe_forward(
+        dataclasses.replace(cfg, moe_impl="gather"), p, x)
+    np.testing.assert_allclose(np.asarray(out_e), np.asarray(out_g),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(aux_e), float(aux_g), rtol=1e-6)
+
+
+def test_gather_matches_einsum_grads():
+    cfg = _cfg()
+    p = moe.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+
+    def loss(p, impl):
+        c = dataclasses.replace(cfg, moe_impl=impl)
+        o, a = moe.moe_forward(c, p, x)
+        return jnp.sum(o ** 2) + a
+
+    ge = jax.grad(loss)(p, "einsum")
+    gg = jax.grad(loss)(p, "gather")
+    for a, b in zip(jax.tree_util.tree_leaves(ge),
+                    jax.tree_util.tree_leaves(gg)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_capacity_drop_consistent():
+    """With a tight capacity both impls drop the SAME tokens."""
+    cfg = _cfg(capacity_factor=0.5)
+    p = moe.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 32, 32))
+    out_e, _ = moe.moe_forward(cfg, p, x)
+    out_g, _ = moe.moe_forward(
+        dataclasses.replace(cfg, moe_impl="gather"), p, x)
+    np.testing.assert_allclose(np.asarray(out_e), np.asarray(out_g),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_long_sequence_regrouping():
+    """Sequences longer than MAX_GROUP are split into dispatch sub-groups."""
+    cfg = _cfg()
+    p = moe.moe_init(jax.random.PRNGKey(0), cfg)
+    old = moe.MAX_GROUP
+    try:
+        moe.MAX_GROUP = 8
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 32, 32))
+        out, aux = moe.moe_forward(cfg, p, x)
+        assert out.shape == (2, 32, 32)
+        # regrouping == explicitly reshaping into (B*4, 8, d) sub-sequences
+        # (capacity is per-group, so this is the exact semantic)
+        out2, _ = moe.moe_forward(cfg, p, x.reshape(8, 8, 32))
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(out2.reshape(2, 32, 32)),
+                                   rtol=1e-5, atol=1e-6)
+    finally:
+        moe.MAX_GROUP = old
+
+
+def test_skip_paths_preserve_shapes():
+    """Probe skip modes keep output shapes (attention/mixer/mlp)."""
+    from repro.configs import ARCHS
+    from repro.models.model import build_model, reduce_config
+    for arch, field in (("llama3.2-3b", {"attention_impl": "skip"}),
+                        ("llama3.2-3b", {"mlp_skip": True}),
+                        ("xlstm-1.3b", {"mixer_skip": True}),
+                        ("zamba2-7b", {"mixer_skip": True})):
+        cfg = reduce_config(ARCHS[arch], **field)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.zeros((2, 8), jnp.int32),
+                 "targets": jnp.zeros((2, 8), jnp.int32)}
+        logits = model.forward(params, batch)
+        assert logits.shape[0:2] == (2, 8)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()

@@ -1,0 +1,170 @@
+"""Layer-basis executor vs whole-graph autodiff (paper §5.1 correctness gate:
+'if a weight or activation value has an error over 1e-4, the commit is
+rejected' — we assert 1e-4 relative as well)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import inplace
+from repro.core.planned_exec import (init_params, planned_loss_and_grads,
+                                     reference_loss_and_grads, sgd_update)
+from repro.core.zoo import ZOO
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _tree_allclose(a, b, rtol=1e-4, atol=1e-5):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+def _make_batch(graph, batch, rng, integer_input=False):
+    kx, ky = jax.random.split(rng)
+    if integer_input:
+        x = jax.random.randint(kx, (batch,) + tuple(graph.input_shape), 0, 100)
+    else:
+        x = jax.random.normal(kx, (batch,) + tuple(graph.input_shape))
+    y = jax.random.normal(ky, (batch,) + tuple(graph.label_shape))
+    return x, y
+
+
+SMALL_CASES = [
+    ("model_a_linear", False),
+    ("model_b_linear", False),
+    ("model_c_linear", False),
+    ("model_d", False),
+    ("lenet5", False),
+]
+
+
+def _shrink(graph):
+    """Shrink 150528-wide test graphs so CPU tests stay fast."""
+    for l in graph.layers:
+        a = l.attrs
+        if a.get("in_features") == 150528:
+            a["in_features"] = 96
+    if graph.input_shape == (150528,):
+        graph.layers  # keep structure
+        object.__setattr__(graph, "input_shape", (96,))
+    from repro.core.graph import infer_shapes
+    infer_shapes(graph)
+    return graph
+
+
+@pytest.mark.parametrize("name,int_in", SMALL_CASES)
+def test_planned_grads_match_autodiff(name, int_in):
+    g = _shrink(ZOO[name]())
+    rng = jax.random.PRNGKey(0)
+    params = init_params(g, rng)
+    x, y = _make_batch(g, 4, jax.random.PRNGKey(1), int_in)
+    if name == "lenet5":
+        y = jax.nn.one_hot(jnp.argmax(y, -1), y.shape[-1])
+    loss_p, grads_p = planned_loss_and_grads(g, params, x, y)
+    loss_r, grads_r = reference_loss_and_grads(g, params, x, y)
+    np.testing.assert_allclose(float(loss_p), float(loss_r), rtol=1e-5)
+    _tree_allclose(grads_p, grads_r)
+
+
+def test_unrolled_tacotron_grads_match_scan_autodiff():
+    """E-shared unrolled LSTM: accumulated grads == autodiff over the whole
+    unrolled graph (weights tied)."""
+    g = ZOO["tacotron2_decoder"](time_steps=4, mel_dim=8, prenet_dim=8,
+                                 lstm_dim=8)
+    rng = jax.random.PRNGKey(0)
+    params = init_params(g, rng)
+    x, y = _make_batch(g, 2, jax.random.PRNGKey(1))
+    loss_p, grads_p = planned_loss_and_grads(g, params, x, y)
+    loss_r, grads_r = reference_loss_and_grads(g, params, x, y)
+    np.testing.assert_allclose(float(loss_p), float(loss_r), rtol=1e-5)
+    _tree_allclose(grads_p, grads_r)
+
+
+def test_transfer_learning_only_updates_head():
+    g = _shrink(ZOO["model_b_linear"]())
+    from repro.core.graph import slice_realizer
+    g = slice_realizer(g, freeze_until="fc0__act")
+    params = init_params(g, jax.random.PRNGKey(0))
+    x, y = _make_batch(g, 4, jax.random.PRNGKey(1))
+    loss, grads = planned_loss_and_grads(g, params, x, y)
+    assert "fc0" not in grads and "fc1" in grads
+    new = sgd_update(params, grads)
+    np.testing.assert_allclose(np.asarray(new["fc0"]["w"]),
+                               np.asarray(params["fc0"]["w"]))
+    assert not np.allclose(np.asarray(new["fc1"]["w"]),
+                           np.asarray(params["fc1"]["w"]))
+
+
+def test_training_reduces_loss():
+    g = _shrink(ZOO["model_b_linear"]())
+    params = init_params(g, jax.random.PRNGKey(0))
+    x, y = _make_batch(g, 16, jax.random.PRNGKey(1))
+    first = None
+    for _ in range(30):
+        loss, grads = planned_loss_and_grads(g, params, x, y)
+        if first is None:
+            first = float(loss)
+        params = sgd_update(params, grads, lr=0.05)
+    assert float(loss) < first * 0.7
+
+
+# ---------------------------------------------------------------------------
+# In-place activation calculus
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fn", ["sigmoid", "tanh", "relu", "softmax"])
+def test_inplace_vjp_matches_standard(fn):
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 16))
+    act = inplace.make_inplace_act(fn)
+    ref = {"sigmoid": jax.nn.sigmoid, "tanh": jnp.tanh,
+           "relu": lambda v: jnp.maximum(v, 0.0),
+           "softmax": lambda v: jax.nn.softmax(v, axis=-1)}[fn]
+
+    def f_in(v):
+        return jnp.sum(jnp.sin(act(v) * 3.0))
+
+    def f_ref(v):
+        return jnp.sum(jnp.sin(ref(v) * 3.0))
+
+    np.testing.assert_allclose(np.asarray(jax.grad(f_in)(x)),
+                               np.asarray(jax.grad(f_ref)(x)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_inplace_batchnorm_matches_standard():
+    x = jax.random.normal(jax.random.PRNGKey(3), (32, 10))
+    gamma = jnp.ones((10,)) * 1.3
+    beta = jnp.ones((10,)) * 0.2
+
+    def ref_bn(x, gamma, beta, eps=1e-5):
+        mean = jnp.mean(x, axis=0, keepdims=True)
+        var = jnp.var(x, axis=0, keepdims=True)
+        return gamma * (x - mean) * jax.lax.rsqrt(var + eps) + beta
+
+    def f_in(x, g, b):
+        return jnp.sum(inplace.batchnorm(x, g, b) ** 2)
+
+    def f_ref(x, g, b):
+        return jnp.sum(ref_bn(x, g, b) ** 2)
+
+    g_in = jax.grad(f_in, argnums=(0, 1, 2))(x, gamma, beta)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(x, gamma, beta)
+    for a, b in zip(g_in, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_inplace_act_residual_is_output():
+    """Structural check: the VJP residual of the in-place sigmoid is its
+    output (input buffer not kept alive)."""
+    x = jnp.ones((4, 4))
+    y, vjp_fn = jax.vjp(inplace.sigmoid, x)
+    # pull the residuals out of the vjp closure: for custom_vjp they are the
+    # fwd function's returned residuals; reconstructing dy*y*(1-y) must match
+    (dx,) = vjp_fn(jnp.ones_like(y))
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(y * (1 - y)),
+                               rtol=1e-6)

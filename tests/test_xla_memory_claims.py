@@ -1,0 +1,125 @@
+"""XLA-level validation of the paper's memory claims: the in-place
+(derivative-from-output) activations and planner-driven remat must change
+XLA's OWN buffer assignment, not just our analytical model.
+
+Uses ``compiled.memory_analysis().temp_size_in_bytes`` — the real
+post-buffer-assignment peak of temporaries — on a deep tower where
+activation residuals dominate.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import inplace
+
+
+def _tower_loss(act_fn, n_layers=12, d=256, batch=32):
+    """Deep elementwise tower: residuals dominate the backward memory."""
+    def loss(ws, x):
+        h = x
+        for i in range(n_layers):
+            h = act_fn(h @ ws[i])
+        return jnp.sum(h * h)
+    return loss
+
+
+def _temp_bytes(fn, *args) -> int:
+    compiled = jax.jit(fn).lower(*args).compile()
+    ma = compiled.memory_analysis()
+    return int(ma.temp_size_in_bytes)
+
+
+def _input_residual_sigmoid():
+    """The paper's 'conventional' strawman: VJP residual = the INPUT."""
+    @jax.custom_vjp
+    def act(x):
+        return jax.nn.sigmoid(x)
+
+    def fwd(x):
+        return jax.nn.sigmoid(x), x            # keeps x alive
+
+    def bwd(x, dy):
+        y = jax.nn.sigmoid(x)                  # recompute y from x
+        return (dy * y * (1 - y),)
+
+    act.defvjp(fwd, bwd)
+    return act
+
+
+def test_output_residual_never_worse_than_input_residual():
+    """The paper's in-place mechanism at the XLA level.
+
+    Empirical finding (documented in EXPERIMENTS.md): XLA's CSE + buffer
+    assignment already neutralise the input- vs output-residual
+    distinction on this tower — it CSEs the backward's recomputed
+    ``sigmoid(x)`` with the forward value and schedules the frees
+    identically.  In other words, the paper's §3 observation ("such
+    techniques can improve conventional mechanisms including TensorFlow
+    and PyTorch") has since been absorbed by the XLA stack; our
+    output-residual activations are guaranteed never to do worse, and the
+    analytical planner remains the tool that PREDICTS the peak (XLA does
+    not expose one before compilation)."""
+    n, d, b = 12, 256, 32
+    ws = jnp.stack([jnp.eye(d) * 0.5 for _ in range(n)])
+    x = jnp.ones((b, d))
+
+    t_in = _temp_bytes(jax.grad(_tower_loss(_input_residual_sigmoid(),
+                                            n, d, b)), ws, x)
+    t_out = _temp_bytes(jax.grad(_tower_loss(inplace.sigmoid, n, d, b)),
+                        ws, x)
+    assert t_out <= t_in, (t_out, t_in)
+
+
+def test_inplace_parity_with_jax_default():
+    """JAX's stock sigmoid already uses the output-form derivative — our
+    in-place version matches its XLA temp footprint exactly."""
+    n, d, b = 12, 256, 32
+    ws = jnp.stack([jnp.eye(d) * 0.5 for _ in range(n)])
+    x = jnp.ones((b, d))
+    t_std = _temp_bytes(jax.grad(_tower_loss(jax.nn.sigmoid, n, d, b)),
+                        ws, x)
+    t_inp = _temp_bytes(jax.grad(_tower_loss(inplace.sigmoid, n, d, b)),
+                        ws, x)
+    assert t_inp <= t_std
+
+
+def test_remat_policy_trades_memory_for_flops():
+    """nothing_saveable remat must cut XLA temp bytes vs save-everything."""
+    n, d, b = 8, 512, 64
+    ws = jnp.stack([jnp.eye(d) for _ in range(n)])
+    x = jnp.ones((b, d))
+
+    def body(h, w):
+        return jnp.tanh(h @ w), None
+
+    def loss_plain(ws, x):
+        h, _ = jax.lax.scan(body, x, ws)
+        return jnp.sum(h * h)
+
+    def loss_remat(ws, x):
+        rb = jax.checkpoint(body,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+        h, _ = jax.lax.scan(rb, x, ws)
+        return jnp.sum(h * h)
+
+    t_plain = _temp_bytes(jax.grad(loss_plain), ws, x)
+    t_remat = _temp_bytes(jax.grad(loss_remat), ws, x)
+    assert t_remat < t_plain, (t_remat, t_plain)
+
+
+def test_donation_enables_in_place_update():
+    """Donated params make the SGD update alias its input (arena reuse)."""
+    d = 1024
+    w = jnp.ones((d, d))
+
+    def step(w, g):
+        return w - 0.1 * g
+
+    lowered = jax.jit(step, donate_argnums=(0,)).lower(w, w)
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    # with donation the output aliases the input: temp stays far below
+    # one full parameter copy
+    assert int(ma.temp_size_in_bytes) < d * d * 4 // 2
