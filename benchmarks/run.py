@@ -17,6 +17,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from benchmarks.paper_tables import ALL as PAPER          # noqa: E402
 from benchmarks.kernel_bench import ALL as KERNELS        # noqa: E402
+from benchmarks.swap_bench import ALL as SWAP             # noqa: E402
 
 
 def roofline_rows():
@@ -41,6 +42,7 @@ def main() -> None:
 
     benches = dict(PAPER)
     benches.update(KERNELS)
+    benches.update(SWAP)
     benches["roofline"] = roofline_rows
     if args.only:
         keep = set(args.only.split(","))

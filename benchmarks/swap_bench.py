@@ -1,0 +1,105 @@
+"""Proactive-swap benchmark: the paper's memory-vs-DMA-traffic tradeoff.
+
+Sweeps the swap planner's two knobs over the zoo models:
+
+* ``min_idle_phases`` — how long a tensor must sit idle to be swapped; low
+  thresholds reclaim more HBM but pay more DMA traffic (§6's tradeoff);
+* ``hbm_budget_bytes`` — stop swapping once this much HBM is reclaimed.
+
+Each row reports the swap-aware device-arena peak (MiB, middle column)
+against the no-swap baseline of the same planner, plus host-pool bytes and
+total DMA traffic.  A final set of rows runs the swap executor end-to-end
+on small models and reports *measured* high-water marks and DMA bytes,
+proving schedule and execution agree (late_swap_ins must be 0).
+
+    PYTHONPATH=src python -m benchmarks.run --only swap_tradeoff,swap_exec
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+MIB = 1024.0 * 1024.0
+
+PLAN_MODELS = (("vgg16", 32), ("resnet18", 32), ("lenet5", 64))
+IDLE_SWEEP = (3, 6, 12)
+BUDGET_FRACTIONS = (None, 0.5, 0.25)   # of the total swappable bytes
+
+
+def bench_swap_tradeoff():
+    from repro.core.execution_order import compute_execution_order
+    from repro.core.offload import plan_offload
+    from repro.core.planner import plan_memory, plan_memory_swapped
+    from repro.core.zoo import ZOO
+
+    rows = []
+    for name, batch in PLAN_MODELS:
+        ordered = compute_execution_order(ZOO[name](), batch)
+        baseline = plan_memory(ordered, "sorting")
+        for idle in IDLE_SWEEP:
+            full = plan_offload(ordered, min_idle_phases=idle,
+                                min_bytes=1 << 16)
+            for frac in BUDGET_FRACTIONS:
+                budget = (None if frac is None
+                          else int(full.hbm_bytes_saved * frac))
+                sched = plan_offload(ordered, min_idle_phases=idle,
+                                     min_bytes=1 << 16,
+                                     hbm_budget_bytes=budget)
+                plan = plan_memory_swapped(ordered, sched)
+                tag = "all" if frac is None else f"{int(frac * 100)}pct"
+                rows.append((
+                    f"swap/{name}/idle{idle}/{tag}",
+                    plan.arena_bytes / MIB,
+                    f"MiB_peak base={baseline.arena_bytes / MIB:.2f} "
+                    f"saved={plan.hbm_bytes_saved / MIB:.2f} "
+                    f"host={plan.host_pool_bytes / MIB:.2f} "
+                    f"dma={sched.dma_bytes / MIB:.2f} "
+                    f"nswap={len(plan.swapped_names())}"))
+    return rows
+
+
+EXEC_MODELS = (("lenet5", 16), ("model_b_conv2d", 8))
+
+
+def bench_swap_exec():
+    import jax
+    import numpy as np
+
+    from repro.core.execution_order import compute_execution_order
+    from repro.core.offload import plan_offload
+    from repro.core.planned_exec import (init_params,
+                                         swap_planned_loss_and_grads)
+    from repro.core.planner import plan_memory_swapped
+    from repro.core.zoo import ZOO
+
+    rows = []
+    for name, batch in EXEC_MODELS:
+        g = ZOO[name]()
+        ordered = compute_execution_order(g, batch)
+        sched = plan_offload(ordered, min_idle_phases=3, min_bytes=1 << 12)
+        plan = plan_memory_swapped(ordered, sched)
+        params = init_params(g, jax.random.PRNGKey(0))
+        kx, ky = jax.random.split(jax.random.PRNGKey(1))
+        x = jax.random.normal(kx, (batch,) + tuple(g.input_shape))
+        y = jax.random.normal(ky, (batch,) + tuple(g.label_shape))
+        if g.layers[-1].kind == "loss_ce":
+            y = jax.nn.one_hot(np.argmax(np.asarray(y), -1), y.shape[-1])
+        _, _, stats = swap_planned_loss_and_grads(
+            g, params, x, y, schedule=sched, ordered=ordered, plan=plan)
+        rows.append((
+            f"swap_exec/{name}",
+            stats.hbm_high_water / MIB,
+            f"MiB_measured planned={stats.planned_peak / MIB:.2f} "
+            f"dma={stats.dma_bytes / MIB:.2f} "
+            f"swaps={stats.swap_outs}/{stats.prefetches} "
+            f"late={stats.late_swap_ins}"))
+    return rows
+
+
+ALL = {
+    "swap_tradeoff": bench_swap_tradeoff,
+    "swap_exec": bench_swap_exec,
+}

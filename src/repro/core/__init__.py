@@ -10,18 +10,25 @@ The paper's contribution, as composable pieces:
 * :mod:`repro.core.inplace`         — derivative-from-output activation calculus
 * :mod:`repro.core.planned_exec`    — layer-basis F/CG/CD training executor
 * :mod:`repro.core.remat_policy`    — lifespan analysis -> jax.checkpoint policy
-* :mod:`repro.core.offload`         — EO-driven host-offload schedule (§6 roadmap)
+* :mod:`repro.core.offload`         — EO-driven proactive-swap schedule (§6)
+
+The offload schedule is consumed end-to-end: ``plan_memory_swapped`` plans
+the arena with swapped tensors vacating their bytes mid-lifetime (plus a
+host pool), and ``swap_planned_loss_and_grads`` executes the swaps during
+the layer-basis walk with HBM high-water accounting.
 """
 
 from repro.core.execution_order import compute_execution_order
 from repro.core.ideal import ideal_memory
 from repro.core.lifespan import CreateMode, Lifespan, TensorSpec
-from repro.core.planner import plan_memory
+from repro.core.planner import SwapAwarePlan, plan_memory, plan_memory_swapped
 from repro.core.remat_policy import plan_checkpoint_policy
 from repro.core.offload import plan_offload
+from repro.core.planned_exec import swap_planned_loss_and_grads
 
 __all__ = [
-    "CreateMode", "Lifespan", "TensorSpec",
+    "CreateMode", "Lifespan", "TensorSpec", "SwapAwarePlan",
     "compute_execution_order", "ideal_memory", "plan_memory",
-    "plan_checkpoint_policy", "plan_offload",
+    "plan_memory_swapped", "plan_checkpoint_policy", "plan_offload",
+    "swap_planned_loss_and_grads",
 ]

@@ -56,6 +56,21 @@ class OrderedTensors:
             if t.create_mode == CreateMode.CREATE and t.merged_into is None
         ]
 
+    def phase_schedule(self) -> List[Tuple[int, str, str]]:
+        """The full 3N-phase timeline: (eo, layer, kind) sorted by EO.
+
+        ``kind`` is one of "F" / "CG" / "CD".  Forward phases occupy EOs
+        0..N-1 and backward phases N..3N-1; EOs are unique across phases, so
+        this is the walk order of the layer-basis executor — the timeline the
+        proactive swap engine ticks along.
+        """
+        phases: List[Tuple[int, str, str]] = []
+        for lname, (eo_f, eo_cg, eo_cd) in self.layer_orders.items():
+            phases.append((eo_f, lname, "F"))
+            phases.append((eo_cg, lname, "CG"))
+            phases.append((eo_cd, lname, "CD"))
+        return sorted(phases)
+
 
 def _orders_for(lifespan: Lifespan, eo_f: int, eo_cg: int, eo_cd: int,
                 eo_max: int) -> List[int]:
@@ -142,6 +157,12 @@ def compute_execution_order(graph: LayerGraph, batch: int) -> OrderedTensors:
                 orders.append(eo_cg)
             # NOTE: an activation consumer does NOT read its input after
             # forward — its derivative comes from its *output* (in-place).
+            # A pool2d consumer DOES: max-pool backward re-reads the argmax
+            # source at its CD phase.  Record the access, otherwise the
+            # offload planner sees a false idle window there and swaps would
+            # race the read.
+            if l.kind == "pool2d":
+                orders.append(eo_cd)
             if l.kind in LOSS_KINDS:
                 orders.extend([eo_cg, eo_cd])
             t.add_orders(orders)

@@ -167,6 +167,23 @@ class TensorSpec:
             raise ValueError(f"tensor {self.name} has no execution orders")
         return self.exec_orders[-1]
 
+    def largest_gap(self) -> Tuple[int, int]:
+        """(last-access-before, first-access-after) of the widest idle window.
+
+        The widest gap between *consecutive* accesses is the only interval in
+        which the tensor can safely vacate its storage: min/max EO alone
+        overstate idleness whenever intermediate accesses exist (e.g. a saved
+        activation read by its consumer's forward right after being written).
+        Returns ``(min_eo, min_eo)`` for tensors with a single access.
+        """
+        if not self.exec_orders:
+            raise ValueError(f"tensor {self.name} has no execution orders")
+        best = (self.exec_orders[0], self.exec_orders[0])
+        for a, b in zip(self.exec_orders, self.exec_orders[1:]):
+            if b - a > best[1] - best[0]:
+                best = (a, b)
+        return best
+
 
 def kib(nbytes: int) -> float:
     return nbytes / 1024.0

@@ -1,35 +1,75 @@
-"""Execution-order-driven host offload scheduling.
+"""Execution-order-driven proactive host swapping (NNTrainer §6).
 
 The NNTrainer paper's roadmap (§6): "Dynamic off-loading is expected to be
 highly efficient because NNTrainer can predict and decide when a buffer is
 accessed; thus, we can swap in and out proactively in background."  This
-module realises that prediction on TPU: the execution-order analysis gives
-every saved activation a write EO (producer forward) and a read EO (consumer
-compute-gradient), so the *idle distance* between them is known statically.
+module realises that prediction: the execution-order analysis gives every
+saved activation its full access timeline, so the *idle window* — the widest
+gap between consecutive accesses — is known statically.
 
-Tensors whose idle distance exceeds a threshold — i.e. activations of early
-layers in a deep stack, which sit untouched through the entire remaining
-forward and most of the backward — are offloaded to host memory and
-prefetched back ``prefetch_margin`` phases before their read.
+Tensors whose idle window exceeds a threshold (activations of early layers
+in a deep stack, which sit untouched through the remaining forward and most
+of the backward) are swapped out to host memory right after their last
+pre-gap access and prefetched back ``prefetch_margin`` phases before the
+first post-gap access.
 
-On TPU this lowers to ``jax.checkpoint`` offload policies
-(device->pinned-host copies overlapped with compute by XLA); the schedule
-itself (what to offload, when to prefetch) is what the EO analysis decides.
+The schedule produced here is consumed in two places:
+
+* :func:`repro.core.planner.plan_memory_swapped` — plans the device arena
+  with swapped tensors *split* into two residency intervals (pre-swap and
+  post-prefetch), so the vacated bytes are reusable by other tensors, plus
+  a second host-pool arena for the offloaded copies;
+* :func:`repro.core.planned_exec.swap_planned_loss_and_grads` — executes
+  the schedule phase-by-phase during the layer-basis walk, with an HBM
+  high-water-mark tracker proving the planned peak is respected.
+
+On TPU the same decisions lower to ``jax.checkpoint`` offload policies via
+:func:`offload_policy` (device->pinned-host copies overlapped with compute
+by XLA); see ``repro.core.remat_policy.RematPlan.offloaded``.
+
+Knobs (all on :func:`plan_offload`):
+
+``min_idle_phases``
+    Minimum width (in EO phases) of the idle window for a tensor to be a
+    swap candidate.  Swap-out occupies the phase right after the window
+    opens and the prefetch occupies ``prefetch_margin`` phases before it
+    closes, so windows narrower than ~3 phases cannot vacate any bytes.
+``min_bytes``
+    Minimum tensor size.  Small tensors cost a DMA descriptor each but
+    reclaim little HBM; the default (1 MiB) matches the DMA-efficiency
+    cliff observed on embedded DMA engines and TPU host transfers alike.
+``prefetch_margin``
+    How many phases before the post-gap access the prefetch is issued.
+    Larger margins hide more DMA latency but re-occupy HBM earlier
+    (shrinking the vacancy window) — this is the memory-vs-traffic knob
+    swept by ``benchmarks/swap_bench.py``.
+``hbm_budget_bytes``
+    Stop choosing candidates once this many bytes have been reclaimed
+    (None = take every candidate).  Candidates are ranked by
+    ``nbytes * idle_phases`` (HBM-seconds reclaimed per DMA byte).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 
 from repro.core.execution_order import OrderedTensors
-from repro.core.lifespan import CreateMode
 
 
 @dataclasses.dataclass(frozen=True)
 class OffloadDecision:
+    """One tensor's swap plan.
+
+    ``write_eo`` is the last access *before* the idle window (not
+    necessarily the producing write) and ``read_eo`` the first access after
+    it; both are real accesses, so the device buffer must be resident at
+    both.  Swap-out DMA runs during phase ``write_eo + 1``; the prefetch
+    DMA starts at ``prefetch_at_eo`` and must complete by ``read_eo``.
+    """
+
     name: str
     nbytes: int
     write_eo: int
@@ -40,10 +80,25 @@ class OffloadDecision:
     def idle_phases(self) -> int:
         return self.read_eo - self.write_eo
 
+    @property
+    def swap_out_eo(self) -> int:
+        """Phase whose background DMA moves the tensor out (write_eo + 1)."""
+        return self.write_eo + 1
+
+    @property
+    def vacates(self) -> bool:
+        """True when the split actually frees bytes: the device residency
+        intervals [.., write_eo+1] and [prefetch_at_eo, ..] are disjoint."""
+        return self.prefetch_at_eo > self.write_eo + 1
+
 
 @dataclasses.dataclass
 class OffloadSchedule:
     decisions: Tuple[OffloadDecision, ...]
+    # bytes moved off-device during their idle windows — an upper bound on
+    # the arena reduction (the packed arena delta depends on what else can
+    # occupy the vacated windows; see SwapAwarePlan.hbm_bytes_saved for the
+    # realised number)
     hbm_bytes_saved: int
     dma_bytes: int                      # total device<->host traffic (2x size)
     peak_inflight_prefetch: int
@@ -51,16 +106,25 @@ class OffloadSchedule:
     def names(self) -> Tuple[str, ...]:
         return tuple(d.name for d in self.decisions)
 
+    def decision_for(self, name: str) -> Optional[OffloadDecision]:
+        for d in self.decisions:
+            if d.name == name:
+                return d
+        return None
+
 
 def plan_offload(ordered: OrderedTensors, *, min_idle_phases: int = 4,
                  min_bytes: int = 1 << 20, prefetch_margin: int = 2,
                  hbm_budget_bytes: Optional[int] = None) -> OffloadSchedule:
-    """Choose saved activations to offload based on EO idle distance.
+    """Choose saved activations to swap based on their widest EO idle gap.
 
-    Only CREATE-owner activation tensors (``X:``) qualify — weights and
-    derivatives have short or permanent residency.  Offload the largest,
-    longest-idle tensors first until the HBM budget is met (or all
-    candidates are taken when no budget is given).
+    Only CREATE-owner activation tensors (``X:`` / ``S:``) qualify — weights
+    and derivatives have short or permanent residency.  The idle window is
+    the widest gap between *consecutive* accesses, so tensors re-read by
+    their consumer's forward right after production are judged by the long
+    forward->backward gap, not by ``max_eo - min_eo`` (which would let the
+    swap race the consumer read).  Candidates are taken largest
+    byte-phase-product first until the HBM budget is met.
     """
     candidates: List[OffloadDecision] = []
     for t in ordered.planned_tensors():
@@ -68,13 +132,19 @@ def plan_offload(ordered: OrderedTensors, *, min_idle_phases: int = 4,
             continue
         if len(t.exec_orders) < 2:
             continue
-        write, read = t.min_eo, t.max_eo
+        write, read = t.largest_gap()
         if read - write < min_idle_phases or t.nbytes < min_bytes:
             continue
-        candidates.append(OffloadDecision(
+        d = OffloadDecision(
             name=t.name, nbytes=t.nbytes, write_eo=write, read_eo=read,
-            prefetch_at_eo=max(write, read - prefetch_margin),
-        ))
+            prefetch_at_eo=max(write + 1, read - prefetch_margin),
+        )
+        if not d.vacates:
+            # the prefetch would start before the swap-out DMA drains:
+            # no bytes reclaimed, two transfers wasted — never schedule it
+            # (and never count it toward savings or the HBM budget).
+            continue
+        candidates.append(d)
     # biggest byte-phases product first: most HBM-seconds saved per DMA byte
     candidates.sort(key=lambda d: d.nbytes * d.idle_phases, reverse=True)
 
@@ -103,17 +173,19 @@ def plan_offload(ordered: OrderedTensors, *, min_idle_phases: int = 4,
     )
 
 
-def offload_policy(names: Sequence[str]):
-    """jax.checkpoint policy offloading the given names to host memory.
+def offload_policy(names: Sequence[str], *, saved: Sequence[str] = ()):
+    """jax.checkpoint policy offloading ``names`` to host memory.
 
-    Falls back to plain save when the offload policy is unavailable in the
-    installed JAX (the schedule itself is produced regardless).
+    ``saved`` names are kept on device (no offload, no recompute) — the
+    remat planner's on-device keep set.  Falls back to plain save when the
+    offload policy is unavailable in the installed JAX (the schedule itself
+    is produced regardless).
     """
     cp = jax.checkpoint_policies
     if hasattr(cp, "save_and_offload_only_these_names"):
         return cp.save_and_offload_only_these_names(
-            names_which_can_be_saved=[],
+            names_which_can_be_saved=list(saved),
             names_which_can_be_offloaded=list(names),
             offload_src="device", offload_dst="pinned_host",
         )
-    return cp.save_only_these_names(*names)
+    return cp.save_only_these_names(*list(saved) + list(names))

@@ -11,7 +11,10 @@ is the JAX realisation of the paper's layer-basis engine:
   derivative), with the incoming-derivative buffer logically shared —
   D tensors are consumed exactly once, matching Backward lifespans;
 * unrolled recurrences accumulate gradients across time and the optimizer
-  applies them once per iteration (Iteration lifespan, §5.2).
+  applies them once per iteration (Iteration lifespan, §5.2);
+* :func:`swap_planned_loss_and_grads` additionally executes a proactive
+  host-swap schedule (§6) phase-by-phase, with high-water-mark accounting
+  proving the swap-aware plan's residency peak is respected.
 
 Gradients are validated against whole-graph ``jax.grad`` (see
 ``reference_loss_and_grads``) to 1e-5 in tests — the paper's own CI gate
@@ -21,15 +24,20 @@ rejected").
 
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import inplace
-from repro.core.graph import LayerGraph, LayerNode
+from repro.core.execution_order import OrderedTensors, compute_execution_order
+from repro.core.graph import (LOSS_KINDS, WEIGHTED_KINDS, LayerGraph,
+                              LayerNode)
+from repro.core.lifespan import CreateMode
+from repro.core.offload import OffloadSchedule
 
 
 # ---------------------------------------------------------------------------
@@ -134,7 +142,7 @@ def layer_forward(l: LayerNode, xs: List[jax.Array],
         return x.reshape((x.shape[0],) + tuple(a["out_shape"])), (x.shape,)
     if l.kind == "pool2d":
         y = _pool2d_fwd(x, a["ksize"], a.get("stride", a["ksize"]))
-        return y, (x, y)
+        return y, (x,)   # backward needs the argmax source only (F+CD input)
     if l.kind == "add":
         y = xs[0]
         for other in xs[1:]:
@@ -154,7 +162,7 @@ def layer_forward(l: LayerNode, xs: List[jax.Array],
             else state["h"]
         c = jnp.zeros_like(h) if state is None else state["c"]
         h_new, c_new = _lstm_cell(x, h, c, p["wx"], p["wh"], p["b"])
-        return h_new, (x, h, c, h_new, c_new)
+        return h_new, (x, h, c)   # backward recomputes gates; outputs unused
     raise ValueError(f"forward not implemented for {l.kind}")
 
 
@@ -190,7 +198,7 @@ def layer_calc_gradient(l: LayerNode, ctx: Any, dy: jax.Array,
         flat_idx = idx.reshape(-1) if idx.ndim > 1 else idx
         return {"w": g.at[flat_idx].add(dy.reshape(flat_idx.shape[0], -1))}
     if l.kind == "lstm":
-        x, h0, c0, h1, c1 = ctx
+        x, h0, c0 = ctx
         def f(wx, wh, b):
             h, _ = _lstm_cell(x, h0, c0, wx, wh, b)
             return h
@@ -228,7 +236,7 @@ def layer_calc_derivative(l: LayerNode, ctx: Any, dy: jax.Array,
         (shape,) = ctx
         return [dy.reshape(shape)]
     if l.kind == "pool2d":
-        x, y = ctx
+        (x,) = ctx
         k, s = a["ksize"], a.get("stride", a["ksize"])
         _, vjp = jax.vjp(lambda xx: _pool2d_fwd(xx, k, s), x)
         return [vjp(dy)[0]]
@@ -244,7 +252,7 @@ def layer_calc_derivative(l: LayerNode, ctx: Any, dy: jax.Array,
     if l.kind == "embedding":
         return []  # integer inputs: no derivative
     if l.kind == "lstm":
-        x, h0, c0, h1, c1 = ctx
+        x, h0, c0 = ctx
         def f(xx):
             h, _ = _lstm_cell(xx, h0, c0, p["wx"], p["wh"], p["b"])
             return h
@@ -399,3 +407,306 @@ def sgd_update(params, grads, lr=1e-2):
         else:
             out[lname] = entry
     return out
+
+
+# ---------------------------------------------------------------------------
+# Proactive swap engine (NNTrainer §6): the planned step, phase by phase
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SwapExecStats:
+    """What the swap engine actually did during one iteration."""
+    swap_outs: int = 0
+    prefetches: int = 0
+    dma_bytes: int = 0             # device<->host bytes moved
+    late_swap_ins: int = 0         # schedule misses: access before prefetch
+    hbm_high_water: int = 0        # peak resident planned-activation bytes
+    planned_peak: Optional[int] = None   # SwapAwarePlan's residency bound
+    peak_inflight_prefetch: int = 0      # double-buffer occupancy peak
+
+
+class _HbmTracker:
+    """High-water-mark accounting over the planned activation bytes."""
+
+    def __init__(self):
+        self.current = 0
+        self.high_water = 0
+
+    def alloc(self, nbytes: int) -> None:
+        self.current += nbytes
+        self.high_water = max(self.high_water, self.current)
+
+    def free(self, nbytes: int) -> None:
+        self.current -= nbytes
+
+
+class _ActivationStore:
+    """Layer-output store with device/host tiers and post-merge alias groups.
+
+    Keys are layer names; bytes are accounted per *owner* tensor (the
+    post-merge ``X:`` CREATE owner), so an in-place activation output that
+    aliases its producer's storage is neither double-counted nor separately
+    swapped — swapping an owner moves every alias with it, exactly like one
+    arena region moving to host.
+    """
+
+    def __init__(self, ordered: OrderedTensors, hbm: _HbmTracker):
+        self.ordered = ordered
+        self.hbm = hbm
+        self.device: Dict[str, jax.Array] = {}
+        self.host: Dict[str, np.ndarray] = {}
+        self.members: Dict[str, Set[str]] = {}     # owner -> layer names
+        self.alive: Set[str] = set()               # owners holding HBM bytes
+        self._owner_cache: Dict[str, Optional[str]] = {}
+
+    def owner_of(self, lname: str) -> Optional[str]:
+        """The planned X: owner accounting this output's bytes, if any."""
+        if lname in self._owner_cache:
+            return self._owner_cache[lname]
+        owner = self.ordered.owner(f"X:{lname}")
+        spec = self.ordered.tensors.get(owner)
+        tracked = (spec is not None and spec.create_mode == CreateMode.CREATE
+                   and spec.merged_into is None)
+        self._owner_cache[lname] = owner if tracked else None
+        return self._owner_cache[lname]
+
+    def put(self, lname: str, y: jax.Array) -> None:
+        self.device[lname] = y
+        owner = self.owner_of(lname)
+        if owner is None:
+            return
+        self.members.setdefault(owner, set()).add(lname)
+        if owner not in self.alive:
+            self.alive.add(owner)
+            self.hbm.alloc(self.ordered.tensors[owner].nbytes)
+
+    def get(self, lname: str, stats: SwapExecStats) -> jax.Array:
+        if lname in self.device:
+            return self.device[lname]
+        owner = self.owner_of(lname)
+        if owner is not None and lname in self.host:
+            # The schedule was wrong (or margins too tight): blocking swap-in.
+            stats.late_swap_ins += 1
+            self.swap_in(owner, stats)
+            return self.device[lname]
+        raise KeyError(f"activation {lname!r} neither on device nor host")
+
+    def swap_out(self, owner: str, stats: SwapExecStats) -> None:
+        nbytes = self.ordered.tensors[owner].nbytes
+        for m in self.members.get(owner, ()):
+            if m in self.device:
+                self.host[m] = np.asarray(self.device.pop(m))
+        self.alive.discard(owner)
+        self.hbm.free(nbytes)
+        stats.swap_outs += 1
+        stats.dma_bytes += nbytes
+
+    def swap_in(self, owner: str, stats: SwapExecStats) -> None:
+        nbytes = self.ordered.tensors[owner].nbytes
+        for m in self.members.get(owner, ()):
+            if m in self.host:
+                self.device[m] = jnp.asarray(self.host.pop(m))
+        self.alive.add(owner)
+        self.hbm.alloc(nbytes)
+        stats.prefetches += 1
+        stats.dma_bytes += nbytes
+
+    def free_owner(self, owner: str) -> None:
+        for m in self.members.get(owner, ()):
+            self.device.pop(m, None)
+            self.host.pop(m, None)
+        if owner in self.alive:
+            self.alive.discard(owner)
+            self.hbm.free(self.ordered.tensors[owner].nbytes)
+
+
+class _SwapEngine:
+    """Ticks the offload schedule along the 3N-phase walk.
+
+    Swap-out DMA runs in the background *during* phase ``write_eo + 1`` and
+    the bytes are released when that phase completes; the (double-buffered)
+    prefetch starts at ``prefetch_at_eo``, re-occupying the bytes, and must
+    complete before ``read_eo`` — exactly the residency intervals
+    :func:`repro.core.planner.plan_memory_swapped` planned around.
+    """
+
+    def __init__(self, schedule: OffloadSchedule, store: _ActivationStore,
+                 stats: SwapExecStats):
+        self.store = store
+        self.stats = stats
+        self.out_at: Dict[int, List] = {}
+        self.in_at: Dict[int, List] = {}
+        self.inflight = 0
+        self.done_at: Dict[int, int] = {}
+        for d in schedule.decisions:
+            # S: scratch tensors never enter the layer-output store; their
+            # swap is plan-level only (arena residency), nothing to move.
+            if not d.vacates or not d.name.startswith("X:"):
+                continue
+            if d.name not in store.ordered.tensors:
+                raise ValueError(
+                    f"offload schedule references {d.name!r}, which the "
+                    f"execution-order analysis does not know — schedule and "
+                    f"ordered tensors come from different graphs?")
+            self.out_at.setdefault(d.swap_out_eo, []).append(d)
+            self.in_at.setdefault(d.prefetch_at_eo, []).append(d)
+
+    def tick_before(self, eo: int) -> None:
+        """Start-of-phase: issue prefetches scheduled at this EO."""
+        for d in self.in_at.get(eo, ()):
+            if d.name in self.store.alive:
+                continue  # late swap-in already brought it back
+            self.store.swap_in(d.name, self.stats)
+            self.inflight += d.nbytes
+            self.done_at.setdefault(d.read_eo, 0)
+            self.done_at[d.read_eo] += d.nbytes
+        self.stats.peak_inflight_prefetch = max(
+            self.stats.peak_inflight_prefetch, self.inflight)
+        # prefetches complete by their read EO: retire their buffer slot
+        self.inflight -= self.done_at.pop(eo, 0)
+
+    def tick_after(self, eo: int) -> None:
+        """End-of-phase: the background swap-out DMA has drained; release."""
+        for d in self.out_at.get(eo, ()):
+            if d.name in self.store.alive:
+                self.store.swap_out(d.name, self.stats)
+
+
+def swap_planned_loss_and_grads(
+    graph: LayerGraph,
+    params: Dict[str, Dict[str, jax.Array]],
+    x: jax.Array, label: jax.Array, *,
+    schedule: OffloadSchedule,
+    ordered: Optional[OrderedTensors] = None,
+    plan: Optional["SwapAwarePlan"] = None,  # noqa: F821
+) -> Tuple[jax.Array, Dict[str, Dict[str, jax.Array]], SwapExecStats]:
+    """One layer-basis iteration executing the proactive-swap schedule.
+
+    Identical numerics to :func:`planned_loss_and_grads` (arrays round-trip
+    through host exactly), but walks the 3N phases in EO order, ticking the
+    swap engine at every phase boundary, and accounts planned-activation HBM
+    residency.  When a :class:`SwapAwarePlan` is given, asserts the measured
+    high-water mark never exceeds the plan's residency peak.
+    """
+    if ordered is None:
+        ordered = compute_execution_order(graph, int(x.shape[0]))
+    stats = SwapExecStats()
+    hbm = _HbmTracker()
+    store = _ActivationStore(ordered, hbm)
+    engine = _SwapEngine(schedule, store, stats)
+    store.device["__input__"] = x
+
+    # owners expire after their last access: free device bytes right there
+    expire_at: Dict[int, List[str]] = {}
+    for t in ordered.planned_tensors():
+        if t.name.startswith("X:"):
+            expire_at.setdefault(t.max_eo, []).append(t.name)
+
+    def resolve_ctx(ctx: Any) -> Any:
+        return tuple(
+            store.get(e[1], stats)
+            if isinstance(e, tuple) and len(e) == 2 and e[0] == "@act" else e
+            for e in ctx
+        )
+
+    ctxs: Dict[str, Any] = {}
+    derivs: Dict[str, jax.Array] = {}
+    pending_dxs: Dict[str, List[Tuple[str, jax.Array]]] = {}
+    pending_cd: Dict[str, Tuple[jax.Array, List[str]]] = {}
+    grads: Dict[str, Dict[str, jax.Array]] = {}
+    loss_val = None
+
+    for eo, lname, kind in ordered.phase_schedule():
+        engine.tick_before(eo)
+        l = graph.layer(lname)
+        if kind == "F":
+            if l.kind in LOSS_KINDS:
+                loss_val = loss_forward(l.kind, store.get(l.inputs[0], stats),
+                                        label)
+            else:
+                xs = [store.get(i, stats) for i in l.inputs]
+                p = params.get(_param_owner(graph, l))
+                y, ctx = layer_forward(l, xs, p)
+                store.put(lname, y)
+                # keep saved activations by *reference* into the store, so a
+                # swap moves the residual too (same bytes in a real arena)
+                sym = []
+                for e in ctx:
+                    hit = next((i for i, xi in enumerate(xs) if e is xi), None)
+                    if hit is not None:
+                        sym.append(("@act", l.inputs[hit]))
+                    elif e is y:
+                        sym.append(("@act", lname))
+                    else:
+                        sym.append(e)
+                ctxs[lname] = tuple(sym)
+        elif kind == "CG":
+            if l.kind in LOSS_KINDS:
+                pred = l.inputs[0]
+                derivs[pred] = loss_derivative(l.kind,
+                                               store.get(pred, stats), label)
+            else:
+                dy = derivs.pop(lname, None)
+                if dy is not None:
+                    if l.trainable and l.weight_shapes():
+                        p = params.get(_param_owner(graph, l))
+                        g = layer_calc_gradient(
+                            l, resolve_ctx(ctxs[lname]), dy, p)
+                        owner = _param_owner(graph, l)
+                        if owner in grads:
+                            grads[owner] = {k: grads[owner][k] + g[k]
+                                            for k in g}
+                        else:
+                            grads[owner] = g
+                    upstream_needed = [
+                        i for i in l.inputs
+                        if i != "__input__" and _needs_deriv(graph, i)
+                    ]
+                    if not upstream_needed:
+                        pass
+                    elif l.kind in WEIGHTED_KINDS:
+                        # A weighted layer's saved input has a F+CG lifespan
+                        # — it is freed (or swapped) right after this phase —
+                        # so its derivative is computed here, on the same
+                        # resident context the CG just used, and *published*
+                        # at the adjacent CD phase (EO_CD = EO_CG + 1).
+                        p = params.get(_param_owner(graph, l))
+                        dxs = layer_calc_derivative(
+                            l, resolve_ctx(ctxs[lname]), dy, p)
+                        pending_dxs[lname] = [
+                            (inp, dx) for inp, dx in zip(l.inputs, dxs)
+                            if inp != "__input__" and inp in upstream_needed
+                        ]
+                    else:
+                        # In-place / pool / view layers have F+CD contexts
+                        # (e.g. max-pool argmax source, activation output) —
+                        # residency and prefetches target the CD phase.
+                        pending_cd[lname] = (dy, upstream_needed)
+        else:  # CD: compute deferred derivatives, publish D:<inp>
+            dxs_out = pending_dxs.pop(lname, [])
+            if lname in pending_cd:
+                dy, upstream_needed = pending_cd.pop(lname)
+                p = params.get(_param_owner(graph, l))
+                dxs = layer_calc_derivative(
+                    l, resolve_ctx(ctxs[lname]), dy, p)
+                dxs_out = [
+                    (inp, dx) for inp, dx in zip(l.inputs, dxs)
+                    if inp != "__input__" and inp in upstream_needed
+                ]
+            for inp, dx in dxs_out:
+                if inp in derivs:
+                    derivs[inp] = derivs[inp] + dx
+                else:
+                    derivs[inp] = dx
+        engine.tick_after(eo)
+        for owner in expire_at.get(eo, ()):
+            store.free_owner(owner)
+
+    stats.hbm_high_water = hbm.high_water
+    if plan is not None:
+        stats.planned_peak = plan.activation_residency_peak()
+        if stats.hbm_high_water > stats.planned_peak:
+            raise AssertionError(
+                f"swap executor exceeded the planned residency peak: "
+                f"{stats.hbm_high_water} > {stats.planned_peak} bytes")
+    return loss_val, grads, stats

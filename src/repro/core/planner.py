@@ -30,10 +30,13 @@ tensors overlap in [offset, offset+nbytes)) and queried for peak bytes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
 from repro.core.execution_order import OrderedTensors
 from repro.core.lifespan import CreateMode, TensorSpec
+
+if TYPE_CHECKING:  # planner <- offload would cycle at runtime
+    from repro.core.offload import OffloadSchedule
 
 ALIGN = 64  # byte alignment for every arena slot (cache-line / vector width)
 
@@ -244,5 +247,181 @@ PLANNERS = {
 }
 
 
-def plan_memory(ordered: OrderedTensors, planner: str = "sorting") -> Plan:
+def plan_memory(ordered: OrderedTensors, planner: str = "sorting",
+                offload: Optional["OffloadSchedule"] = None):
+    """Plan the arena; with an :class:`OffloadSchedule` the plan is
+    swap-aware (see :func:`plan_memory_swapped`)."""
+    if offload is not None:
+        return plan_memory_swapped(ordered, offload, planner=planner)
     return PLANNERS[planner]().plan(ordered)
+
+
+# ---------------------------------------------------------------------------
+# Swap-aware planning: swapped tensors vacate their bytes mid-lifetime
+# ---------------------------------------------------------------------------
+
+_PRE, _POST, _HOST = "@pre", "@post", "@host"
+
+
+class _SpecSet:
+    """Minimal OrderedTensors-shaped view over an explicit spec list, so the
+    interval planners can run on split residency intervals unchanged."""
+
+    def __init__(self, specs: List[TensorSpec], eo_max: int,
+                 placeholders: Optional[List[TensorSpec]] = None):
+        placeholders = placeholders or []
+        self.tensors = {t.name: t for t in list(specs) + placeholders}
+        self.merged: Dict[str, str] = {}
+        self.eo_max = eo_max
+        self.layer_orders: Dict[str, Tuple[int, int, int]] = {}
+        self._planned = list(specs)
+
+    def planned_tensors(self) -> List[TensorSpec]:
+        return self._planned
+
+
+@dataclasses.dataclass
+class SwapAwarePlan:
+    """Device arena planned over *residency* intervals + a host-pool arena.
+
+    A swapped tensor's single lifetime interval is split into two residency
+    intervals — ``[first access, write_eo + 1]`` (resident until the
+    background swap-out DMA completes) and ``[prefetch_at_eo, last access]``
+    (re-resident once the prefetch starts) — so every byte it occupied is
+    reusable by the planner during the gap.  The offloaded copy occupies a
+    second arena modelling the pinned-host pool for ``[write_eo + 1,
+    read_eo]``.  The two halves may land at *different* device offsets: the
+    prefetch is a fresh write, nothing pins it to the old address.
+    """
+
+    device: Plan
+    host: Plan
+    schedule: "OffloadSchedule"
+    # original tensor name -> its residency placements (1 entry if unsplit)
+    residencies: Dict[str, Tuple[Placement, ...]]
+    baseline_arena_bytes: int        # same planner, no swapping
+    planner: str
+
+    @property
+    def arena_bytes(self) -> int:
+        return self.device.arena_bytes
+
+    @property
+    def peak_bytes(self) -> int:
+        return self.device.arena_bytes
+
+    @property
+    def host_pool_bytes(self) -> int:
+        return self.host.arena_bytes
+
+    @property
+    def hbm_bytes_saved(self) -> int:
+        return self.baseline_arena_bytes - self.device.arena_bytes
+
+    def swapped_names(self) -> Tuple[str, ...]:
+        return tuple(n for n, rs in self.residencies.items() if len(rs) == 2)
+
+    def activation_residency_peak(self) -> int:
+        """Peak simultaneously-resident ``X:``/``S:`` bytes over the EO
+        timeline — the bound the swap executor's HBM tracker asserts."""
+        places = [r for n, rs in self.residencies.items()
+                  if n.startswith(("X:", "S:")) for r in rs]
+        events = sorted({p.min_eo for p in places} | {p.max_eo for p in places})
+        peak = 0
+        for eo in events:
+            live = sum(p.nbytes for p in places if p.min_eo <= eo <= p.max_eo)
+            peak = max(peak, live)
+        return peak
+
+    def validate(self) -> None:
+        """Prove the swap plan sound: residency intervals never share bytes
+        while overlapping in time, swapped tensors truly vacate the arena
+        during their idle window, and every offloaded copy has host bytes
+        covering the whole gap."""
+        self.device.validate()
+        self.host.validate()
+        for d in self.schedule.decisions:
+            rs = self.residencies.get(d.name)
+            if rs is None or not d.vacates:
+                continue
+            if len(rs) != 2:
+                raise AssertionError(
+                    f"{d.name}: expected 2 residency intervals, got {len(rs)}")
+            pre, post = sorted(rs, key=lambda r: r.min_eo)
+            if pre.max_eo > d.swap_out_eo:
+                raise AssertionError(
+                    f"{d.name}: pre-swap residency ends at {pre.max_eo}, "
+                    f"after swap-out phase {d.swap_out_eo}")
+            if post.min_eo < d.prefetch_at_eo:
+                raise AssertionError(
+                    f"{d.name}: post-swap residency starts at {post.min_eo}, "
+                    f"before prefetch phase {d.prefetch_at_eo}")
+            for eo in range(d.swap_out_eo + 1, d.prefetch_at_eo):
+                if any(r.min_eo <= eo <= r.max_eo for r in rs):
+                    raise AssertionError(
+                        f"{d.name}: still resident at EO {eo} inside its "
+                        f"idle window ({d.swap_out_eo}, {d.prefetch_at_eo})")
+            hp = self.host.placements.get(d.name + _HOST)
+            if hp is None:
+                raise AssertionError(f"{d.name}: no host-pool placement")
+            if hp.min_eo > d.swap_out_eo or hp.max_eo < d.read_eo:
+                raise AssertionError(
+                    f"{d.name}: host copy [{hp.min_eo},{hp.max_eo}] does not "
+                    f"cover the swap window [{d.swap_out_eo},{d.read_eo}]")
+
+
+def _clone_spec(t: TensorSpec, name: str, orders: Tuple[int, ...]) -> TensorSpec:
+    return TensorSpec(name=name, shape=t.shape, dtype=t.dtype,
+                      lifespan=t.lifespan, create_mode=CreateMode.CREATE,
+                      exec_orders=tuple(sorted(orders)))
+
+
+def plan_memory_swapped(ordered: OrderedTensors, schedule: "OffloadSchedule",
+                        planner: str = "sorting") -> SwapAwarePlan:
+    """Plan the device arena with the swap schedule applied.
+
+    Decisions whose prefetch would start before the swap-out completes
+    (``not d.vacates``) are kept resident — splitting them would reclaim
+    nothing and cost two DMA transfers.
+    """
+    baseline = PLANNERS[planner]().plan(ordered)
+    by_name = {d.name: d for d in schedule.decisions if d.vacates}
+
+    placeholders = [t for t in ordered.tensors.values()
+                    if t.create_mode == CreateMode.PLACEHOLDER]
+    split_specs: List[TensorSpec] = []
+    split_names: Dict[str, Tuple[str, ...]] = {}
+    for t in ordered.planned_tensors():
+        d = by_name.get(t.name)
+        if d is None:
+            split_specs.append(_clone_spec(t, t.name, t.exec_orders))
+            split_names[t.name] = (t.name,)
+            continue
+        pre = tuple(o for o in t.exec_orders if o <= d.write_eo) + (d.swap_out_eo,)
+        post = (d.prefetch_at_eo,) + tuple(
+            o for o in t.exec_orders if o >= d.read_eo)
+        split_specs.append(_clone_spec(t, t.name + _PRE, pre))
+        split_specs.append(_clone_spec(t, t.name + _POST, post))
+        split_names[t.name] = (t.name + _PRE, t.name + _POST)
+
+    device = PLANNERS[planner]().plan(
+        _SpecSet(split_specs, ordered.eo_max, placeholders))
+
+    host_specs = [
+        _clone_spec(ordered.tensors[d.name], d.name + _HOST,
+                    (d.swap_out_eo, d.read_eo))
+        for d in by_name.values()
+    ]
+    host = SortingPlanner().plan(_SpecSet(host_specs, ordered.eo_max))
+
+    residencies = {
+        name: tuple(device.placements[part] for part in parts)
+        for name, parts in split_names.items()
+    }
+    plan = SwapAwarePlan(
+        device=device, host=host, schedule=schedule,
+        residencies=residencies,
+        baseline_arena_bytes=baseline.arena_bytes, planner=planner,
+    )
+    plan.validate()
+    return plan

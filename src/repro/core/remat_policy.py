@@ -53,9 +53,16 @@ class RematPlan:
     dropped: Tuple[str, ...]
     saved_bytes_per_layer: int
     recompute_flops_per_layer: float
+    # Names swapped to pinned host memory instead of recomputed — the
+    # EO-analysis offload schedule's decision set, lowered to XLA via
+    # ``repro.core.offload.offload_policy``.
+    offloaded: Tuple[str, ...] = ()
 
     def policy(self):
-        """A jax.checkpoint policy saving exactly the planned names."""
+        """A jax.checkpoint policy saving (and offloading) the planned names."""
+        if self.offloaded:
+            from repro.core.offload import offload_policy
+            return offload_policy(self.offloaded, saved=self.saved)
         if not self.saved:
             return jax.checkpoint_policies.nothing_saveable
         return jax.checkpoint_policies.save_only_these_names(*self.saved)
@@ -64,15 +71,27 @@ class RematPlan:
 def plan_checkpoint_policy(
     intermediates: Sequence[Intermediate],
     budget_bytes_per_layer: Optional[int],
+    *,
+    offload_dropped: bool = False,
 ) -> RematPlan:
     """Greedy knapsack: keep high recompute-cost-per-byte intermediates.
 
     ``budget_bytes_per_layer`` of None means "save everything" (no remat).
     A budget of 0 means full remat (save nothing beyond scan carries).
+    With ``offload_dropped`` the intermediates that miss the HBM budget are
+    swapped to host memory instead of recomputed (proactive swapping, §6):
+    they cost DMA traffic rather than backward FLOPs.  Offload with *no*
+    budget means "keep no HBM residents" — every intermediate streams
+    through host; otherwise ``cfg.offload=True`` with the default
+    (budget-less) config would silently do nothing.
     """
     if budget_bytes_per_layer is None:
+        names = tuple(i.name for i in intermediates)
+        if offload_dropped:
+            return RematPlan(saved=(), dropped=(), saved_bytes_per_layer=0,
+                             recompute_flops_per_layer=0.0, offloaded=names)
         return RematPlan(
-            saved=tuple(i.name for i in intermediates),
+            saved=names,
             dropped=(),
             saved_bytes_per_layer=sum(i.bytes_per_layer for i in intermediates),
             recompute_flops_per_layer=0.0,
@@ -92,6 +111,14 @@ def plan_checkpoint_policy(
             used += i.bytes_per_layer
     saved_set = set(saved)
     dropped = tuple(i.name for i in intermediates if i.name not in saved_set)
+    if offload_dropped:
+        return RematPlan(
+            saved=tuple(saved),
+            dropped=(),
+            saved_bytes_per_layer=used,
+            recompute_flops_per_layer=0.0,
+            offloaded=dropped,
+        )
     return RematPlan(
         saved=tuple(saved),
         dropped=dropped,
@@ -134,3 +161,24 @@ def transformer_intermediates(*, batch_tokens: int, d_model: int, d_ff: int,
         Intermediate("mlp_hidden", mlp_hidden_bytes, mlp_hidden_flops),
         Intermediate("mlp_out", mlp_out_bytes, mlp_out_flops),
     ]
+
+
+def plan_for_config(cfg, batch_tokens: int) -> Optional[RematPlan]:
+    """The remat/offload plan for a transformer-shaped ``ModelConfig``.
+
+    Single source of truth for both the model code (which installs the
+    ``jax.checkpoint`` policy inside the scanned blocks) and the step
+    builder (which reports the plan for launch/roofline analysis).  Returns
+    None when the config disables remat entirely.
+    """
+    if not getattr(cfg, "remat", False):
+        return None
+    inter = transformer_intermediates(
+        batch_tokens=batch_tokens, d_model=cfg.d_model,
+        d_ff=cfg.moe_d_ff if getattr(cfg, "is_moe", False) else cfg.d_ff,
+        n_q_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim,
+        moe_experts_per_token=getattr(cfg, "top_k", 0),
+    )
+    return plan_checkpoint_policy(inter, cfg.remat_budget_bytes,
+                                  offload_dropped=getattr(cfg, "offload", False))

@@ -26,8 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.remat_policy import (plan_checkpoint_policy,
-                                     transformer_intermediates)
+from repro.core.remat_policy import plan_for_config
 from repro.models import attention as attn
 from repro.models import layers, moe, ssm, xlstm
 from repro.sharding.rules import constrain
@@ -126,17 +125,8 @@ def maybe_scan(cfg: ModelConfig, body, carry, xs):
 
 
 def _remat_policy(cfg: ModelConfig, batch_tokens: int):
-    if not cfg.remat:
-        return None
-    inter = transformer_intermediates(
-        batch_tokens=batch_tokens, d_model=cfg.d_model,
-        d_ff=cfg.moe_d_ff if cfg.is_moe else cfg.d_ff,
-        n_q_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
-        head_dim=cfg.head_dim,
-        moe_experts_per_token=cfg.top_k,
-    )
-    plan = plan_checkpoint_policy(inter, cfg.remat_budget_bytes)
-    return plan.policy()
+    plan = plan_for_config(cfg, batch_tokens)
+    return plan.policy() if plan is not None else None
 
 
 def _scan_blocks(cfg: ModelConfig, stacked_params, x, positions, *,

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.remat_policy import RematPlan, plan_for_config
 from repro.models.model import Model, input_specs
 from repro.optim import Optimizer
 from repro.sharding import rules as R
@@ -42,6 +43,10 @@ class StepBundle:
     abstract_args: Tuple[Any, ...]
     act_rules: Dict
     mesh: Mesh
+    # The remat/offload decision the model's checkpoint policy installs
+    # (None for serve steps / remat off).  ``remat_plan.offloaded`` is the
+    # name set flowing into ``offload_policy`` inside the jitted step.
+    remat_plan: Optional[RematPlan] = None
 
 
 def _batch_shardings(mesh: Mesh, specs, act_rules):
@@ -140,6 +145,7 @@ def make_train_step(model: Model, optimizer: Optimizer, mesh: Mesh,
 
     metrics_shard = {"loss": NamedSharding(mesh, P()),
                      "grad_norm": NamedSharding(mesh, P())}
+    micro_tokens = (shape.global_batch // max(microbatches, 1)) * shape.seq_len
     return StepBundle(
         fn=train_step,
         in_shardings=(p_shard, o_shard, b_shard),
@@ -148,6 +154,7 @@ def make_train_step(model: Model, optimizer: Optimizer, mesh: Mesh,
         abstract_args=(abstract_p, abstract_opt, batch_specs),
         act_rules=act_rules,
         mesh=mesh,
+        remat_plan=plan_for_config(cfg, micro_tokens),
     )
 
 

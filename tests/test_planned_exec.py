@@ -12,7 +12,9 @@ from repro.core.planned_exec import (init_params, planned_loss_and_grads,
                                      reference_loss_and_grads, sgd_update)
 from repro.core.zoo import ZOO
 
-jax.config.update("jax_enable_x64", False)
+# NOTE: do not mutate global jax.config at import time here — x64-off is the
+# JAX default, and an import-time update leaks into every other test module
+# collected in the same process.
 
 
 def _tree_allclose(a, b, rtol=1e-4, atol=1e-5):

@@ -10,7 +10,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional dev dependency — the deterministic tests below always run
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.checkpoint.ckpt import CheckpointManager
 from repro.data.pipeline import (BatchQueue, DataState, host_batch_slice,
@@ -157,12 +162,17 @@ def test_error_feedback_is_unbiased_over_time():
                                np.asarray(true_total), rtol=1e-4, atol=1e-4)
 
 
-@given(st.integers(min_value=1, max_value=2000))
-@settings(max_examples=20, deadline=None)
-def test_compression_handles_any_size(n):
-    g = {"x": jnp.arange(n, dtype=jnp.float32) / max(n, 1)}
-    d = decompress_gradients(compress_gradients(g), g)
-    assert d["x"].shape == (n,)
+if HAVE_HYPOTHESIS:
+    @given(st.integers(min_value=1, max_value=2000))
+    @settings(max_examples=20, deadline=None)
+    def test_compression_handles_any_size(n):
+        g = {"x": jnp.arange(n, dtype=jnp.float32) / max(n, 1)}
+        d = decompress_gradients(compress_gradients(g), g)
+        assert d["x"].shape == (n,)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_compression_handles_any_size():
+        pass
 
 
 # ---------------------------------------------------------------------------

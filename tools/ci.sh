@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: run the full test suite on CPU, skipping slow probes.
+# Collection errors fail the run (pytest exits non-zero on them), matching
+# the paper's own commit gate ("if a weight or activation value has an
+# error over 1e-4 the commit is rejected").
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+python -m pytest -q -m "not slow" "$@"
