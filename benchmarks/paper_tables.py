@@ -23,14 +23,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.execution_order import compute_execution_order
 from repro.core.ideal import PAPER_TABLE4_KIB, ideal_from_ordered
+from repro.core.plan import MemoryPlanConfig, compile_plan
 from repro.core.planned_exec import (init_params, planned_loss_and_grads,
                                      reference_loss_and_grads)
-from repro.core.planner import plan_memory
 from repro.core.zoo import ZOO
 
 Row = Tuple[str, float, str]
+
+
+def _packed(graph, planner: str, batch: int):
+    """One no-swap compile through the facade; returns the arena plan.
+
+    These figures compare *packing* strategies, so swapping is disabled —
+    the swap tradeoff has its own benchmark (swap_bench).
+    """
+    return compile_plan(graph, MemoryPlanConfig(planner=planner, swap=False),
+                        batch=batch)
 
 
 def _shrunk(name: str, width: int = 256):
@@ -48,8 +57,7 @@ def _shrunk(name: str, width: int = 256):
 def table4() -> List[Row]:
     rows: List[Row] = []
     for name, paper_kib in PAPER_TABLE4_KIB.items():
-        ordered = compute_execution_order(ZOO[name](), 64)
-        ideal = ideal_from_ordered(ordered)
+        ideal = ideal_from_ordered(_packed(ZOO[name](), "sorting", 64).ordered)
         ratio = ideal.total_kib / paper_kib
         rows.append((f"table4/{name}", ideal.total_kib,
                      f"paper={paper_kib}KiB ratio={ratio:.4f}"))
@@ -59,13 +67,11 @@ def table4() -> List[Row]:
 def fig9_peak_memory() -> List[Row]:
     rows: List[Row] = []
     for name in PAPER_TABLE4_KIB:
-        o1 = compute_execution_order(ZOO[name](), 64)
-        o2 = compute_execution_order(ZOO[name](), 64)
-        o3 = compute_execution_order(ZOO[name](), 64)
-        planned = plan_memory(o1, "sorting")
-        bestfit = plan_memory(o2, "bestfit")
-        naive = plan_memory(o3, "worstcase")
-        ideal = ideal_from_ordered(o1)
+        sorting_cp = _packed(ZOO[name](), "sorting", 64)
+        planned = sorting_cp.plan
+        bestfit = _packed(ZOO[name](), "bestfit", 64).plan
+        naive = _packed(ZOO[name](), "worstcase", 64).plan
+        ideal = ideal_from_ordered(sorting_cp.ordered)
         rows.append((
             f"fig9/{name}", planned.total_bytes / 1024,
             f"ideal={ideal.total_kib:.0f}KiB "
@@ -110,11 +116,8 @@ def fig10_latency() -> List[Row]:
 def fig11_batch_sweep() -> List[Row]:
     rows: List[Row] = []
     for batch in (8, 16, 32, 64, 128):
-        ordered = compute_execution_order(ZOO["model_a_linear"](), batch)
-        plan = plan_memory(ordered, "bestfit")
-        naive = plan_memory(
-            compute_execution_order(ZOO["model_a_linear"](), batch),
-            "worstcase")
+        plan = _packed(ZOO["model_a_linear"](), "bestfit", batch).plan
+        naive = _packed(ZOO["model_a_linear"](), "worstcase", batch).plan
         rows.append((
             f"fig11/batch{batch}", plan.total_bytes / 2**20,
             f"naive={naive.total_bytes/2**20:.0f}MiB "
@@ -127,10 +130,8 @@ def fig12_applications() -> List[Row]:
     rows: List[Row] = []
     for name in ("lenet5", "vgg16", "resnet18", "resnet18_transfer",
                  "product_rating"):
-        o = compute_execution_order(ZOO[name](), 32)
-        plan = plan_memory(o, "bestfit")
-        naive = plan_memory(compute_execution_order(ZOO[name](), 32),
-                            "worstcase")
+        plan = _packed(ZOO[name](), "bestfit", 32).plan
+        naive = _packed(ZOO[name](), "worstcase", 32).plan
         rows.append((f"fig12/{name}", plan.total_bytes / 2**20,
                      f"naive={naive.total_bytes/2**20:.1f}MiB "
                      f"saving={1 - plan.total_bytes/naive.total_bytes:.1%}"))
@@ -143,11 +144,10 @@ def fig14_tacotron() -> List[Row]:
     for steps in (4, 8, 16):
         g = tacotron2_decoder(time_steps=steps, mel_dim=16, prenet_dim=64,
                               lstm_dim=64)
-        o = compute_execution_order(g, 16)
-        plan = plan_memory(o, "bestfit")
-        naive = plan_memory(compute_execution_order(
+        plan = _packed(g, "bestfit", 16).plan
+        naive = _packed(
             tacotron2_decoder(time_steps=steps, mel_dim=16, prenet_dim=64,
-                              lstm_dim=64), 16), "worstcase")
+                              lstm_dim=64), "worstcase", 16).plan
         params = init_params(g, jax.random.PRNGKey(0))
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))

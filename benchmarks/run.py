@@ -17,6 +17,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from benchmarks.paper_tables import ALL as PAPER          # noqa: E402
 from benchmarks.kernel_bench import ALL as KERNELS        # noqa: E402
+from benchmarks import swap_bench                         # noqa: E402
 from benchmarks.swap_bench import ALL as SWAP             # noqa: E402
 
 
@@ -38,6 +39,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--bench-json", default=None, metavar="PATH",
+                    help="where to write BENCH_swap.json when swap benches "
+                         "run (default: results/BENCH_swap.json)")
     args = ap.parse_args()
 
     benches = dict(PAPER)
@@ -57,6 +61,10 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name},nan,ERROR {e}")
+    if swap_bench.JSON_RECORDS:
+        path = swap_bench.dump_json(args.bench_json)
+        print(f"# wrote {len(swap_bench.JSON_RECORDS)} records to {path}",
+              file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

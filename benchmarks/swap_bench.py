@@ -1,24 +1,33 @@
 """Proactive-swap benchmark: the paper's memory-vs-DMA-traffic tradeoff.
 
-Sweeps the swap planner's two knobs over the zoo models:
+All rows are produced through ``repro.core.compile_plan`` — the single
+entry point from graph to executor — sweeping the declarative
+:class:`MemoryPlanConfig` knobs over the zoo models:
 
 * ``min_idle_phases`` — how long a tensor must sit idle to be swapped; low
   thresholds reclaim more HBM but pay more DMA traffic (§6's tradeoff);
 * ``hbm_budget_bytes`` — stop swapping once this much HBM is reclaimed.
 
 Each row reports the swap-aware device-arena peak (MiB, middle column)
-against the no-swap baseline of the same planner, plus host-pool bytes and
-total DMA traffic.  A final set of rows runs the swap executor end-to-end
-on small models and reports *measured* high-water marks and DMA bytes,
-proving schedule and execution agree (late_swap_ins must be 0).
+against the no-swap baseline of the same planner, plus host-pool bytes,
+total DMA traffic, and what the schedule/planner co-optimisation fixed
+point dropped.  A final set of rows runs the compiled plan's executor
+end-to-end on small models and reports *measured* high-water marks and DMA
+bytes, proving schedule and execution agree (late_swap_ins must be 0).
+
+Besides the CSV rows, every run collects machine-readable records; the
+driver (``benchmarks/run.py``) writes them to ``results/BENCH_swap.json``
+so the perf trajectory is tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.run --only swap_tradeoff,swap_exec
 """
 
 from __future__ import annotations
 
+import json
 import sys
 from pathlib import Path
+from typing import Any, Dict, List
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
@@ -28,36 +37,58 @@ PLAN_MODELS = (("vgg16", 32), ("resnet18", 32), ("lenet5", 64))
 IDLE_SWEEP = (3, 6, 12)
 BUDGET_FRACTIONS = (None, 0.5, 0.25)   # of the total swappable bytes
 
+# Machine-readable rows accumulated by the bench functions during a run;
+# ``dump_json`` writes them out (see benchmarks/run.py).
+JSON_RECORDS: List[Dict[str, Any]] = []
+
+DEFAULT_JSON_PATH = Path(__file__).resolve().parents[1] / "results" \
+    / "BENCH_swap.json"
+
+
+def dump_json(path=None) -> Path:
+    """Write the collected records as BENCH_swap.json; returns the path."""
+    path = Path(path) if path else DEFAULT_JSON_PATH
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(
+        {"schema": "bench_swap/v1", "records": JSON_RECORDS}, indent=2))
+    return path
+
 
 def bench_swap_tradeoff():
-    from repro.core.execution_order import compute_execution_order
-    from repro.core.offload import plan_offload
-    from repro.core.planner import plan_memory, plan_memory_swapped
+    from repro.core.plan import MemoryPlanConfig, compile_plan
     from repro.core.zoo import ZOO
 
     rows = []
     for name, batch in PLAN_MODELS:
-        ordered = compute_execution_order(ZOO[name](), batch)
-        baseline = plan_memory(ordered, "sorting")
+        graph = ZOO[name]()
         for idle in IDLE_SWEEP:
-            full = plan_offload(ordered, min_idle_phases=idle,
-                                min_bytes=1 << 16)
+            # budget fractions are of the *full single-pass* swappable bytes
+            full = compile_plan(
+                graph, MemoryPlanConfig(min_idle_phases=idle,
+                                        min_bytes=1 << 16,
+                                        cooptimize=False), batch=batch)
             for frac in BUDGET_FRACTIONS:
                 budget = (None if frac is None
-                          else int(full.hbm_bytes_saved * frac))
-                sched = plan_offload(ordered, min_idle_phases=idle,
-                                     min_bytes=1 << 16,
-                                     hbm_budget_bytes=budget)
-                plan = plan_memory_swapped(ordered, sched)
+                          else int(full.schedule.hbm_bytes_saved * frac))
+                cp = compile_plan(
+                    graph, MemoryPlanConfig(min_idle_phases=idle,
+                                            min_bytes=1 << 16,
+                                            hbm_budget_bytes=budget),
+                    batch=batch)
+                r = cp.report()
                 tag = "all" if frac is None else f"{int(frac * 100)}pct"
                 rows.append((
                     f"swap/{name}/idle{idle}/{tag}",
-                    plan.arena_bytes / MIB,
-                    f"MiB_peak base={baseline.arena_bytes / MIB:.2f} "
-                    f"saved={plan.hbm_bytes_saved / MIB:.2f} "
-                    f"host={plan.host_pool_bytes / MIB:.2f} "
-                    f"dma={sched.dma_bytes / MIB:.2f} "
-                    f"nswap={len(plan.swapped_names())}"))
+                    r["peak_bytes"] / MIB,
+                    f"MiB_peak base={r['baseline_peak_bytes'] / MIB:.2f} "
+                    f"saved={r['hbm_bytes_saved'] / MIB:.2f} "
+                    f"host={r['host_pool_bytes'] / MIB:.2f} "
+                    f"dma={r['dma_bytes'] / MIB:.2f} "
+                    f"nswap={r['n_swaps']} "
+                    f"coopt_dropped={len(r['coopt_dropped'])}"))
+                JSON_RECORDS.append({
+                    "bench": "swap_tradeoff", "model": name, "batch": batch,
+                    "min_idle_phases": idle, "budget_fraction": frac, **r})
     return rows
 
 
@@ -68,27 +99,22 @@ def bench_swap_exec():
     import jax
     import numpy as np
 
-    from repro.core.execution_order import compute_execution_order
-    from repro.core.offload import plan_offload
-    from repro.core.planned_exec import (init_params,
-                                         swap_planned_loss_and_grads)
-    from repro.core.planner import plan_memory_swapped
+    from repro.core.plan import MemoryPlanConfig, compile_plan
     from repro.core.zoo import ZOO
 
     rows = []
     for name, batch in EXEC_MODELS:
         g = ZOO[name]()
-        ordered = compute_execution_order(g, batch)
-        sched = plan_offload(ordered, min_idle_phases=3, min_bytes=1 << 12)
-        plan = plan_memory_swapped(ordered, sched)
-        params = init_params(g, jax.random.PRNGKey(0))
+        cp = compile_plan(
+            g, MemoryPlanConfig(min_idle_phases=3, min_bytes=1 << 12),
+            batch=batch)
+        params = cp.init_params(jax.random.PRNGKey(0))
         kx, ky = jax.random.split(jax.random.PRNGKey(1))
         x = jax.random.normal(kx, (batch,) + tuple(g.input_shape))
         y = jax.random.normal(ky, (batch,) + tuple(g.label_shape))
         if g.layers[-1].kind == "loss_ce":
             y = jax.nn.one_hot(np.argmax(np.asarray(y), -1), y.shape[-1])
-        _, _, stats = swap_planned_loss_and_grads(
-            g, params, x, y, schedule=sched, ordered=ordered, plan=plan)
+        _, _, stats = cp.loss_and_grads(params, x, y)
         rows.append((
             f"swap_exec/{name}",
             stats.hbm_high_water / MIB,
@@ -96,6 +122,14 @@ def bench_swap_exec():
             f"dma={stats.dma_bytes / MIB:.2f} "
             f"swaps={stats.swap_outs}/{stats.prefetches} "
             f"late={stats.late_swap_ins}"))
+        JSON_RECORDS.append({
+            "bench": "swap_exec", "model": name, "batch": batch,
+            "hbm_high_water": stats.hbm_high_water,
+            "planned_peak": stats.planned_peak,
+            "measured_dma_bytes": stats.dma_bytes,
+            "swap_outs": stats.swap_outs, "prefetches": stats.prefetches,
+            "late_swap_ins": stats.late_swap_ins,
+            **cp.report()})
     return rows
 
 

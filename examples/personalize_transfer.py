@@ -21,10 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.execution_order import compute_execution_order
 from repro.core.graph import slice_realizer
-from repro.core.planner import plan_memory
-from repro.core.planned_exec import (init_params, planned_loss_and_grads,
+from repro.core.plan import MemoryPlanConfig, compile_plan
+from repro.core.planned_exec import (planned_loss_and_grads,
                                      reference_forward, sgd_update)
 from repro.core.zoo import resnet18, resnet18_transfer
 
@@ -35,9 +34,11 @@ def main() -> None:
     n_shots = 5                        # HandMoji: 5 images per emoji
 
     # ---- memory plan: full training vs transfer (Fig. 12) -----------------
-    full = plan_memory(compute_execution_order(resnet18(classes), batch))
-    xfer = plan_memory(compute_execution_order(
-        resnet18_transfer(classes), batch))
+    # swap=False isolates the arena-packing comparison (Fig. 12 has no host)
+    no_swap = MemoryPlanConfig(swap=False)
+    full = compile_plan(resnet18(classes), no_swap, batch=batch).plan
+    xfer_cp = compile_plan(resnet18_transfer(classes), no_swap, batch=batch)
+    xfer = xfer_cp.plan
     print(f"planned peak, full training:     {full.total_bytes/2**20:8.2f} MiB")
     print(f"planned peak, transfer learning: {xfer.total_bytes/2**20:8.2f} MiB "
           f"({1 - xfer.total_bytes/full.total_bytes:.0%} saved)")
@@ -45,8 +46,8 @@ def main() -> None:
     # ---- personalize: frozen backbone + head on synthetic sketches --------
     # each "emoji" class is a cluster of n_shots noisy sketches around a
     # class prototype (cluster separation survives the frozen backbone)
-    g = resnet18_transfer(classes)
-    params = init_params(g, jax.random.PRNGKey(0))
+    g = xfer_cp.graph
+    params = xfer_cp.init_params(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     centers = rng.normal(size=(classes, 3, 32, 32)).astype(np.float32) * 0.5
     x = np.concatenate([

@@ -14,13 +14,20 @@ from repro.train.trainer import quick_train
 
 
 def main() -> None:
+    # remat=True so the compiled memory plan has real keep/offload content
     cfg = reduce_config(ARCHS["llama3.2-3b"], n_layers=2, d_model=64,
-                        vocab=512)
+                        vocab=512, remat=True)
     with tempfile.TemporaryDirectory() as ckpt_dir:
         print(f"== training reduced {cfg.name} "
               f"({build_model(cfg) and cfg.n_layers}L d={cfg.d_model}) ==")
         out = quick_train(cfg, steps=30, seq_len=64, global_batch=8,
                           ckpt_dir=ckpt_dir)
+        # the train step compiled its memory plan through compile_plan;
+        # the report travels with the run result
+        mp = out["memory_plan"]
+        print(f"memory plan: peak={mp['peak_bytes'] / 2**20:.2f} MiB "
+              f"saved={mp.get('remat_saved', [])} "
+              f"offloaded={mp.get('remat_offloaded', [])}")
         first = out["history"][0]["loss"]
         print(f"loss: {first:.3f} -> {out['final_loss']:.3f}")
         assert out["final_loss"] < first, "training did not reduce loss"

@@ -13,31 +13,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.execution_order import compute_execution_order
-from repro.core.planner import plan_memory
-from repro.core.planned_exec import (init_params, planned_loss_and_grads,
-                                     sgd_update)
+from repro.core.plan import MemoryPlanConfig, compile_plan
+from repro.core.planned_exec import planned_loss_and_grads, sgd_update
 from repro.core.zoo import tacotron2_decoder
 
 
 def main() -> None:
     steps = 4
-    g = tacotron2_decoder(time_steps=steps, mel_dim=16, prenet_dim=48,
-                          lstm_dim=48)
+    cp = compile_plan(
+        tacotron2_decoder(time_steps=steps, mel_dim=16, prenet_dim=48,
+                          lstm_dim=48),
+        MemoryPlanConfig(swap=False), batch=16)
+    g = cp.graph
 
     # E-mode weight sharing: unrolled LSTM copies own NO extra weight memory
-    ordered = compute_execution_order(g, batch=16)
-    shared = [n for n, t in ordered.tensors.items()
+    shared = [n for n, t in cp.ordered.tensors.items()
               if n.startswith("W:") and t.merged_into]
-    owned = [n for n, t in ordered.tensors.items()
+    owned = [n for n, t in cp.ordered.tensors.items()
              if n.startswith("W:") and not t.merged_into]
-    plan = plan_memory(ordered)
     print(f"{steps}x unrolled: {len(owned)} owned weight tensors, "
           f"{len(shared)} E-shared views (zero extra bytes)")
-    print(f"planned peak: {plan.total_bytes/2**20:.2f} MiB")
+    print(f"planned peak: {cp.plan.total_bytes/2**20:.2f} MiB")
 
     # teacher-forced mel regression on a synthetic voice-like target
-    params = init_params(g, jax.random.PRNGKey(0))
+    params = cp.init_params(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     mel_in = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
     target = jnp.tanh(mel_in * 0.7 + 0.2)            # fixed mapping to learn

@@ -1,6 +1,16 @@
 """NNTrainer-style memory-planned training core, adapted to JAX/TPU.
 
-The paper's contribution, as composable pieces:
+**Entry point:** :func:`repro.core.compile_plan`.  Declare the network (a
+:class:`repro.core.graph.LayerGraph` or a transformer ``ModelConfig``) and
+a :class:`repro.core.MemoryPlanConfig`; one compile step derives execution
+order, proactive-swap schedule, swap-aware arena packing and the
+remat/offload policy, iterates the schedule/planner co-optimisation to a
+fixed point, and returns a :class:`repro.core.CompiledMemoryPlan` exposing
+``.loss_and_grads()``, ``.offload_policy``, ``.peak_bytes`` and
+``.report()``.  The memory machinery stays transparent to the training
+algorithm — the paper's central property.
+
+The pipeline stages remain importable as composable pieces:
 
 * :mod:`repro.core.lifespan`        — tensor lifespans & create modes (Tables 2-3)
 * :mod:`repro.core.graph`           — layer-basis graph IR + Realizers (Table 1)
@@ -11,24 +21,59 @@ The paper's contribution, as composable pieces:
 * :mod:`repro.core.planned_exec`    — layer-basis F/CG/CD training executor
 * :mod:`repro.core.remat_policy`    — lifespan analysis -> jax.checkpoint policy
 * :mod:`repro.core.offload`         — EO-driven proactive-swap schedule (§6)
+* :mod:`repro.core.plan`            — the compile facade + co-optimisation
 
-The offload schedule is consumed end-to-end: ``plan_memory_swapped`` plans
-the arena with swapped tensors vacating their bytes mid-lifetime (plus a
-host pool), and ``swap_planned_loss_and_grads`` executes the swaps during
-the layer-basis walk with HBM high-water accounting.
+Hand-wiring the stages (``compute_execution_order -> plan_offload ->
+plan_memory_swapped -> swap_planned_loss_and_grads``) is **deprecated** for
+callers — importing those names from this package still works (thin shims
+below) but new code should go through :func:`compile_plan`, which also runs
+the schedule/planner co-optimisation the free functions skip.
 """
 
-from repro.core.execution_order import compute_execution_order
-from repro.core.ideal import ideal_memory
-from repro.core.lifespan import CreateMode, Lifespan, TensorSpec
-from repro.core.planner import SwapAwarePlan, plan_memory, plan_memory_swapped
-from repro.core.remat_policy import plan_checkpoint_policy
-from repro.core.offload import plan_offload
-from repro.core.planned_exec import swap_planned_loss_and_grads
+import warnings as _warnings
+
+from repro.core.plan import (CompiledMemoryPlan, CooptStats, MemoryPlanConfig,
+                             compile_plan)
 
 __all__ = [
+    # the compile API
+    "MemoryPlanConfig", "CompiledMemoryPlan", "CooptStats", "compile_plan",
+    # deprecated hand-wired entry points (resolved lazily, with a warning)
     "CreateMode", "Lifespan", "TensorSpec", "SwapAwarePlan",
     "compute_execution_order", "ideal_memory", "plan_memory",
     "plan_memory_swapped", "plan_checkpoint_policy", "plan_offload",
     "swap_planned_loss_and_grads",
 ]
+
+# Deprecated package-level re-exports: name -> (module, attr).  Kept so old
+# call sites importing the pipeline stages from ``repro.core`` keep working;
+# each access warns once toward compile_plan.
+_DEPRECATED = {
+    "CreateMode": ("repro.core.lifespan", "CreateMode"),
+    "Lifespan": ("repro.core.lifespan", "Lifespan"),
+    "TensorSpec": ("repro.core.lifespan", "TensorSpec"),
+    "SwapAwarePlan": ("repro.core.planner", "SwapAwarePlan"),
+    "compute_execution_order": ("repro.core.execution_order",
+                                "compute_execution_order"),
+    "ideal_memory": ("repro.core.ideal", "ideal_memory"),
+    "plan_memory": ("repro.core.planner", "plan_memory"),
+    "plan_memory_swapped": ("repro.core.planner", "plan_memory_swapped"),
+    "plan_checkpoint_policy": ("repro.core.remat_policy",
+                               "plan_checkpoint_policy"),
+    "plan_offload": ("repro.core.offload", "plan_offload"),
+    "swap_planned_loss_and_grads": ("repro.core.planned_exec",
+                                    "swap_planned_loss_and_grads"),
+}
+
+
+def __getattr__(name: str):
+    entry = _DEPRECATED.get(name)
+    if entry is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    module_name, attr = entry
+    _warnings.warn(
+        f"importing {name!r} from repro.core is deprecated; use "
+        f"repro.core.compile_plan (or import from {module_name} directly)",
+        DeprecationWarning, stacklevel=2)
+    import importlib
+    return getattr(importlib.import_module(module_name), attr)

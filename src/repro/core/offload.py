@@ -113,6 +113,32 @@ class OffloadSchedule:
         return None
 
 
+def make_schedule(decisions: Sequence[OffloadDecision]) -> OffloadSchedule:
+    """Build a consistent :class:`OffloadSchedule` from a decision set.
+
+    Recomputes the aggregate fields (bytes saved, DMA traffic, peak inflight
+    prefetch) so callers can restrict a schedule to a subset of decisions —
+    the primitive the schedule/planner co-optimisation loop in
+    :mod:`repro.core.plan` iterates on.  Non-vacating decisions are dropped,
+    matching :func:`plan_offload`'s own filtering.
+    """
+    chosen = tuple(d for d in decisions if d.vacates)
+    saved = sum(d.nbytes for d in chosen)
+    peak = 0
+    for d in chosen:
+        inflight = sum(
+            o.nbytes for o in chosen
+            if o.prefetch_at_eo <= d.prefetch_at_eo <= o.read_eo
+        )
+        peak = max(peak, inflight)
+    return OffloadSchedule(
+        decisions=chosen,
+        hbm_bytes_saved=saved,
+        dma_bytes=2 * saved,
+        peak_inflight_prefetch=peak,
+    )
+
+
 def plan_offload(ordered: OrderedTensors, *, min_idle_phases: int = 4,
                  min_bytes: int = 1 << 20, prefetch_margin: int = 2,
                  hbm_budget_bytes: Optional[int] = None) -> OffloadSchedule:
@@ -156,21 +182,7 @@ def plan_offload(ordered: OrderedTensors, *, min_idle_phases: int = 4,
         if hbm_budget_bytes is not None and saved >= hbm_budget_bytes:
             break
 
-    # peak simultaneous prefetch traffic (for ICI/DMA contention estimates)
-    peak = 0
-    for d in chosen:
-        inflight = sum(
-            o.nbytes for o in chosen
-            if o.prefetch_at_eo <= d.prefetch_at_eo <= o.read_eo
-        )
-        peak = max(peak, inflight)
-
-    return OffloadSchedule(
-        decisions=tuple(chosen),
-        hbm_bytes_saved=saved,
-        dma_bytes=2 * saved,
-        peak_inflight_prefetch=peak,
-    )
+    return make_schedule(chosen)
 
 
 def offload_policy(names: Sequence[str], *, saved: Sequence[str] = ()):

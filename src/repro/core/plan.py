@@ -1,0 +1,343 @@
+"""Unified memory-plan compile API: graph (or model config) -> executor.
+
+NNTrainer's key property is that its memory optimisations are *transparent
+to training algorithms*: the user declares a network, the framework derives
+execution order, swap schedule and arena packing behind one compile step.
+This module is that compile step for the reproduction.  Instead of
+hand-wiring
+
+    compute_execution_order -> plan_offload -> plan_memory_swapped
+        -> plan_checkpoint_policy -> swap_planned_loss_and_grads
+
+callers declare a :class:`MemoryPlanConfig` and call :func:`compile_plan`,
+which runs the whole pipeline and returns a :class:`CompiledMemoryPlan` —
+one object owning the schedule, the packed arenas, the remat/offload policy
+and the executor entry point (``.loss_and_grads``).
+
+Two input kinds are accepted:
+
+* a :class:`repro.core.graph.LayerGraph` — the layer-basis path: EO
+  analysis, proactive-swap scheduling, swap-aware arena packing and the
+  phase-ticked swap executor;
+* a transformer-shaped ``ModelConfig`` — the TPU path: the remat/offload
+  knapsack over tagged intermediates, lowered to a ``jax.checkpoint``
+  policy for the jitted train step.
+
+Schedule/planner co-optimisation (ROADMAP item, now a behaviour of this
+API): ``plan_offload`` picks swap candidates by byte-phase product *before*
+packing, so some swaps vacate bytes the packer never needed — they pay two
+DMA transfers and reclaim no packed peak.  After packing, the compile loop
+drops every such non-load-bearing swap and re-plans, iterating to a fixed
+point where (a) removing any remaining swap would raise the packed peak and
+(b) the peak never exceeds the single-pass ``plan_memory_swapped`` result.
+DMA traffic shrinks at equal peak — exactly the ``swap/vgg16`` diminishing-
+returns observation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+from repro.core.execution_order import OrderedTensors, compute_execution_order
+from repro.core.graph import LayerGraph
+from repro.core.offload import OffloadSchedule, make_schedule, plan_offload
+from repro.core.planner import PLANNERS, Plan, SwapAwarePlan, plan_memory_swapped
+from repro.core.remat_policy import (RematPlan, plan_checkpoint_policy,
+                                     transformer_intermediates)
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryPlanConfig:
+    """Declarative memory-plan configuration — every knob in one place.
+
+    Arena / swap knobs (layer-graph path; see :mod:`repro.core.offload` for
+    the knob reference):
+
+    ``planner``          arena packing strategy: sorting | bestfit | worstcase
+    ``swap``             enable proactive host swapping (False = plain plan)
+    ``min_idle_phases``  minimum EO idle window for a swap candidate
+    ``min_bytes``        minimum tensor size worth a DMA descriptor
+    ``prefetch_margin``  phases before the post-gap read to start prefetch
+    ``hbm_budget_bytes`` stop choosing candidates past this reclaim target
+    ``cooptimize``       iterate schedule <-> packer to a fixed point,
+                         dropping swaps whose vacated bytes reclaimed no
+                         packed peak
+
+    Remat / offload knobs (model-config path):
+
+    ``remat``              None = follow ``cfg.remat``; bool overrides
+    ``remat_budget_bytes`` per-layer activation budget for the knapsack
+                           (None = follow ``cfg.remat_budget_bytes``)
+    ``offload_dropped``    swap budget-missing intermediates to host instead
+                           of recomputing (None = follow ``cfg.offload``)
+    """
+
+    planner: str = "sorting"
+    swap: bool = True
+    min_idle_phases: int = 4
+    min_bytes: int = 1 << 20
+    prefetch_margin: int = 2
+    hbm_budget_bytes: Optional[int] = None
+    cooptimize: bool = True
+
+    remat: Optional[bool] = None
+    remat_budget_bytes: Optional[int] = None
+    offload_dropped: Optional[bool] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class CooptStats:
+    """What the schedule/planner co-optimisation fixed point did."""
+
+    rounds: int                      # full drop-scan passes (>= 1)
+    dropped: Tuple[str, ...]         # swaps removed as non-load-bearing
+    single_pass_peak_bytes: int      # arena peak before co-optimisation
+    single_pass_dma_bytes: int       # DMA traffic before co-optimisation
+
+
+@dataclasses.dataclass
+class CompiledMemoryPlan:
+    """Everything one compile step produced, behind one handle.
+
+    ``source`` is "graph" (layer-basis path: ``ordered``/``schedule``/
+    ``plan`` populated, ``loss_and_grads`` runnable) or "model"
+    (config path: ``remat_plan`` populated, ``offload_policy`` installable
+    in a jitted step).
+    """
+
+    config: MemoryPlanConfig
+    source: str
+    graph: Optional[LayerGraph] = None
+    ordered: Optional[OrderedTensors] = None
+    schedule: Optional[OffloadSchedule] = None
+    plan: Optional[Union[Plan, SwapAwarePlan]] = None   # device arena
+    baseline: Optional[Plan] = None                      # no-swap, same planner
+    coopt: Optional[CooptStats] = None
+    batch: Optional[int] = None
+
+    model_config: Any = None
+    remat_plan: Optional[RematPlan] = None
+    batch_tokens: Optional[int] = None
+
+    # ------------------------------------------------------------- queries
+    @property
+    def peak_bytes(self) -> int:
+        """Planned device peak: packed arena bytes (graph) or the knapsack's
+        kept-intermediate bytes across layers (model)."""
+        if self.plan is not None:
+            return self.plan.arena_bytes
+        if self.remat_plan is not None and self.model_config is not None:
+            return (self.remat_plan.saved_bytes_per_layer
+                    * self.model_config.n_layers)
+        return 0
+
+    @property
+    def host_pool_bytes(self) -> int:
+        return self.plan.host_pool_bytes \
+            if isinstance(self.plan, SwapAwarePlan) else 0
+
+    @property
+    def dma_bytes(self) -> int:
+        return self.schedule.dma_bytes if self.schedule is not None else 0
+
+    @property
+    def hbm_bytes_saved(self) -> int:
+        return self.plan.hbm_bytes_saved \
+            if isinstance(self.plan, SwapAwarePlan) else 0
+
+    def swapped_names(self) -> Tuple[str, ...]:
+        return self.plan.swapped_names() \
+            if isinstance(self.plan, SwapAwarePlan) else ()
+
+    @property
+    def offload_policy(self):
+        """The ``jax.checkpoint`` policy realising this plan's keep/offload
+        decisions, or None when no policy applies.
+
+        Only model-config plans produce one: their decisions are keyed by
+        ``checkpoint_name`` tags XLA can match.  Graph plans execute their
+        swap schedule through the layer-basis executor
+        (``loss_and_grads``) instead — their arena tensor names would
+        match no tag, so no policy is fabricated for them."""
+        if self.remat_plan is not None:
+            return self.remat_plan.policy()
+        return None
+
+    # ------------------------------------------------------------ executor
+    def init_params(self, rng):
+        """He-init parameters for the compiled graph (graph path only)."""
+        self._require_graph("init_params")
+        from repro.core.planned_exec import init_params
+        return init_params(self.graph, rng)
+
+    def loss_and_grads(self, params, x, label):
+        """One layer-basis training iteration under this plan.
+
+        Executes the compiled swap schedule phase-by-phase (an empty
+        schedule degrades to the plain planned walk) and asserts the HBM
+        high-water mark respects the packed residency peak.  Returns
+        ``(loss, grads, SwapExecStats)``.
+        """
+        self._require_graph("loss_and_grads")
+        from repro.core.planned_exec import swap_planned_loss_and_grads
+        return swap_planned_loss_and_grads(
+            self.graph, params, x, label,
+            schedule=self.schedule,
+            ordered=self.ordered,
+            plan=self.plan if isinstance(self.plan, SwapAwarePlan) else None,
+        )
+
+    def _require_graph(self, what: str) -> None:
+        if self.source != "graph" or self.graph is None:
+            raise TypeError(
+                f"{what} needs a plan compiled from a LayerGraph; this plan "
+                f"was compiled from a model config — install "
+                f".offload_policy in the jitted step instead")
+
+    # ------------------------------------------------------------- report
+    def report(self) -> Dict[str, Any]:
+        """Machine-readable summary (the BENCH_swap.json row shape)."""
+        out: Dict[str, Any] = {
+            "source": self.source,
+            "planner": self.config.planner,
+            "peak_bytes": self.peak_bytes,
+            "host_pool_bytes": self.host_pool_bytes,
+            "dma_bytes": self.dma_bytes,
+            "hbm_bytes_saved": self.hbm_bytes_saved,
+            "n_swaps": len(self.swapped_names()),
+        }
+        if self.source == "graph":
+            out["graph"] = self.graph.name
+            out["batch"] = self.batch
+            out["baseline_peak_bytes"] = self.baseline.arena_bytes
+        if self.coopt is not None:
+            out["coopt_rounds"] = self.coopt.rounds
+            out["coopt_dropped"] = list(self.coopt.dropped)
+            out["single_pass_peak_bytes"] = self.coopt.single_pass_peak_bytes
+            out["single_pass_dma_bytes"] = self.coopt.single_pass_dma_bytes
+        if self.remat_plan is not None:
+            out["remat_saved"] = list(self.remat_plan.saved)
+            out["remat_dropped"] = list(self.remat_plan.dropped)
+            out["remat_offloaded"] = list(self.remat_plan.offloaded)
+            out["saved_bytes_per_layer"] = self.remat_plan.saved_bytes_per_layer
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Schedule/planner co-optimisation: iterate to a fixed point
+# ---------------------------------------------------------------------------
+
+def _cooptimize(ordered: OrderedTensors, schedule: OffloadSchedule,
+                plan: SwapAwarePlan, planner: str
+                ) -> Tuple[OffloadSchedule, SwapAwarePlan, int, List[str]]:
+    """Drop swaps whose vacated bytes reclaimed no packed peak; re-plan.
+
+    A swap is non-load-bearing when re-packing *without* it yields the same
+    (or a lower) arena peak: its two DMA transfers buy nothing.  Each
+    accepted drop restarts the scan on the shrunk schedule, so the loop
+    terminates (the decision set strictly shrinks) and the peak is monotone
+    non-increasing — never above the single-pass input plan.  At the fixed
+    point every remaining swap is load-bearing: removing any one of them
+    would raise the packed peak.
+    """
+    rounds = 0
+    dropped: List[str] = []
+    improved = True
+    while improved:
+        rounds += 1
+        improved = False
+        for d in schedule.decisions:
+            rest = tuple(o for o in schedule.decisions if o.name != d.name)
+            trial_sched = make_schedule(rest)
+            trial_plan = plan_memory_swapped(ordered, trial_sched,
+                                             planner=planner)
+            if trial_plan.arena_bytes <= plan.arena_bytes:
+                schedule, plan = trial_sched, trial_plan
+                dropped.append(d.name)
+                improved = True
+                break
+    return schedule, plan, rounds, dropped
+
+
+# ---------------------------------------------------------------------------
+# compile_plan: the single entry point
+# ---------------------------------------------------------------------------
+
+def compile_plan(graph_or_model, config: Optional[MemoryPlanConfig] = None,
+                 *, batch: int = 32,
+                 batch_tokens: Optional[int] = None) -> CompiledMemoryPlan:
+    """Compile a memory plan from a declarative config — the one entry point.
+
+    ``graph_or_model`` is either a :class:`LayerGraph` (``batch`` sizes the
+    EO analysis) or a transformer-shaped ``ModelConfig`` (``batch_tokens``
+    sizes the remat knapsack and is required).  ``config`` defaults to
+    :class:`MemoryPlanConfig()`.
+    """
+    config = config or MemoryPlanConfig()
+    if isinstance(graph_or_model, LayerGraph):
+        return _compile_graph_plan(graph_or_model, config, batch)
+    return _compile_model_plan(graph_or_model, config, batch_tokens)
+
+
+def _compile_graph_plan(graph: LayerGraph, config: MemoryPlanConfig,
+                        batch: int) -> CompiledMemoryPlan:
+    ordered = compute_execution_order(graph, batch)
+    baseline = PLANNERS[config.planner]().plan(ordered)
+
+    if not config.swap:
+        empty = make_schedule(())
+        return CompiledMemoryPlan(
+            config=config, source="graph", graph=graph, ordered=ordered,
+            schedule=empty, plan=baseline, baseline=baseline, batch=batch)
+
+    schedule = plan_offload(
+        ordered,
+        min_idle_phases=config.min_idle_phases,
+        min_bytes=config.min_bytes,
+        prefetch_margin=config.prefetch_margin,
+        hbm_budget_bytes=config.hbm_budget_bytes,
+    )
+    plan = plan_memory_swapped(ordered, schedule, planner=config.planner)
+    single_peak, single_dma = plan.arena_bytes, schedule.dma_bytes
+
+    coopt = None
+    if config.cooptimize:
+        schedule, plan, rounds, dropped = _cooptimize(
+            ordered, schedule, plan, config.planner)
+        coopt = CooptStats(rounds=rounds, dropped=tuple(dropped),
+                           single_pass_peak_bytes=single_peak,
+                           single_pass_dma_bytes=single_dma)
+
+    return CompiledMemoryPlan(
+        config=config, source="graph", graph=graph, ordered=ordered,
+        schedule=schedule, plan=plan, baseline=baseline, coopt=coopt,
+        batch=batch)
+
+
+def _compile_model_plan(cfg, config: MemoryPlanConfig,
+                        batch_tokens: Optional[int]) -> CompiledMemoryPlan:
+    if batch_tokens is None:
+        raise TypeError("compile_plan(model_config) requires batch_tokens=")
+    remat_on = config.remat if config.remat is not None \
+        else bool(getattr(cfg, "remat", False))
+    if not remat_on:
+        return CompiledMemoryPlan(config=config, source="model",
+                                  model_config=cfg, batch_tokens=batch_tokens)
+    budget = config.remat_budget_bytes if config.remat_budget_bytes is not None \
+        else getattr(cfg, "remat_budget_bytes", None)
+    offload_dropped = config.offload_dropped \
+        if config.offload_dropped is not None \
+        else bool(getattr(cfg, "offload", False))
+    inter = transformer_intermediates(
+        batch_tokens=batch_tokens, d_model=cfg.d_model,
+        d_ff=cfg.moe_d_ff if getattr(cfg, "is_moe", False) else cfg.d_ff,
+        n_q_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim,
+        moe_experts_per_token=getattr(cfg, "top_k", 0),
+    )
+    remat_plan = plan_checkpoint_policy(inter, budget,
+                                        offload_dropped=offload_dropped)
+    return CompiledMemoryPlan(config=config, source="model",
+                              model_config=cfg, remat_plan=remat_plan,
+                              batch_tokens=batch_tokens)

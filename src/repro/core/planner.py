@@ -384,11 +384,19 @@ def plan_memory_swapped(ordered: OrderedTensors, schedule: "OffloadSchedule",
     (``not d.vacates``) are kept resident — splitting them would reclaim
     nothing and cost two DMA transfers.
     """
-    baseline = PLANNERS[planner]().plan(ordered)
     by_name = {d.name: d for d in schedule.decisions if d.vacates}
 
     placeholders = [t for t in ordered.tensors.values()
                     if t.create_mode == CreateMode.PLACEHOLDER]
+    # Baseline over the SAME tensor universe the swapped re-pack sees
+    # (planned owners + placeholders), so hbm_bytes_saved compares like
+    # with like.  Planning ``ordered`` directly would let planners that
+    # look beyond planned_tensors() (WorstCasePlanner materialises merged
+    # views too) report phantom savings that have nothing to do with swaps.
+    baseline = PLANNERS[planner]().plan(_SpecSet(
+        [_clone_spec(t, t.name, t.exec_orders)
+         for t in ordered.planned_tensors()],
+        ordered.eo_max, placeholders))
     split_specs: List[TensorSpec] = []
     split_names: Dict[str, Tuple[str, ...]] = {}
     for t in ordered.planned_tensors():

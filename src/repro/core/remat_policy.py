@@ -164,21 +164,12 @@ def transformer_intermediates(*, batch_tokens: int, d_model: int, d_ff: int,
 
 
 def plan_for_config(cfg, batch_tokens: int) -> Optional[RematPlan]:
-    """The remat/offload plan for a transformer-shaped ``ModelConfig``.
+    """Deprecated shim: the remat/offload plan for a transformer-shaped
+    ``ModelConfig``.
 
-    Single source of truth for both the model code (which installs the
-    ``jax.checkpoint`` policy inside the scanned blocks) and the step
-    builder (which reports the plan for launch/roofline analysis).  Returns
-    None when the config disables remat entirely.
+    The single owner of this decision is now ``repro.core.compile_plan``;
+    this wrapper returns the compiled plan's ``remat_plan`` (None when the
+    config disables remat) so old call sites keep their exact behaviour.
     """
-    if not getattr(cfg, "remat", False):
-        return None
-    inter = transformer_intermediates(
-        batch_tokens=batch_tokens, d_model=cfg.d_model,
-        d_ff=cfg.moe_d_ff if getattr(cfg, "is_moe", False) else cfg.d_ff,
-        n_q_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
-        head_dim=cfg.head_dim,
-        moe_experts_per_token=getattr(cfg, "top_k", 0),
-    )
-    return plan_checkpoint_policy(inter, cfg.remat_budget_bytes,
-                                  offload_dropped=getattr(cfg, "offload", False))
+    from repro.core.plan import compile_plan  # local: plan imports this module
+    return compile_plan(cfg, batch_tokens=batch_tokens).remat_plan

@@ -12,8 +12,8 @@ Families:
             k layers (weight sharing == the paper's Tensor-sharing mode E)
 
 All stacks scan over layers with stacked parameters; the remat policy comes
-from the core planner (``plan_checkpoint_policy``) so the paper's lifespan
-analysis decides which intermediates stay resident in HBM.
+from the core compile facade (``repro.core.compile_plan``) so the paper's
+lifespan analysis decides which intermediates stay resident in HBM.
 """
 
 from __future__ import annotations
@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.remat_policy import plan_for_config
+from repro.core.plan import compile_plan
 from repro.models import attention as attn
 from repro.models import layers, moe, ssm, xlstm
 from repro.sharding.rules import constrain
@@ -125,8 +125,7 @@ def maybe_scan(cfg: ModelConfig, body, carry, xs):
 
 
 def _remat_policy(cfg: ModelConfig, batch_tokens: int):
-    plan = plan_for_config(cfg, batch_tokens)
-    return plan.policy() if plan is not None else None
+    return compile_plan(cfg, batch_tokens=batch_tokens).offload_policy
 
 
 def _scan_blocks(cfg: ModelConfig, stacked_params, x, positions, *,

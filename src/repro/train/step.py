@@ -25,7 +25,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.remat_policy import RematPlan, plan_for_config
+from repro.core.plan import CompiledMemoryPlan, compile_plan
+from repro.core.remat_policy import RematPlan
 from repro.models.model import Model, input_specs
 from repro.optim import Optimizer
 from repro.sharding import rules as R
@@ -43,10 +44,16 @@ class StepBundle:
     abstract_args: Tuple[Any, ...]
     act_rules: Dict
     mesh: Mesh
-    # The remat/offload decision the model's checkpoint policy installs
-    # (None for serve steps / remat off).  ``remat_plan.offloaded`` is the
-    # name set flowing into ``offload_policy`` inside the jitted step.
-    remat_plan: Optional[RematPlan] = None
+    # The compiled memory plan whose ``.offload_policy`` the model's
+    # checkpoint policy installs inside the jitted step (None for serve
+    # steps).  Produced by ``repro.core.compile_plan`` — the single owner
+    # of remat/offload decisions.
+    memory_plan: Optional[CompiledMemoryPlan] = None
+
+    @property
+    def remat_plan(self) -> Optional[RematPlan]:
+        """Deprecated alias for ``memory_plan.remat_plan``."""
+        return self.memory_plan.remat_plan if self.memory_plan else None
 
 
 def _batch_shardings(mesh: Mesh, specs, act_rules):
@@ -94,8 +101,16 @@ def opt_state_spec_tree(opt_state, param_spec_tree):
 
 
 def make_train_step(model: Model, optimizer: Optimizer, mesh: Mesh,
-                    shape: ShapeConfig, *, microbatches: int = 1,
-                    multi_pod: bool = False) -> StepBundle:
+                    shape: ShapeConfig, *, microbatches: int = 1
+                    ) -> StepBundle:
+    """Build the sharded train step for one (arch, shape) cell.
+
+    Pod topology comes from ``mesh`` (a multi-pod mesh carries its own
+    "pod" axis); there is no separate multi-pod switch here.  The memory
+    plan is compiled from the ``ModelConfig`` remat/offload knobs — the
+    same knobs the model's own checkpoint policy reads — so the reported
+    ``memory_plan`` always matches what the jitted step installs.
+    """
     cfg = model.cfg
     act_rules = activation_rules(cfg, shape, mesh)
     act_rules["qblocks"] = ("data", "model")
@@ -154,7 +169,7 @@ def make_train_step(model: Model, optimizer: Optimizer, mesh: Mesh,
         abstract_args=(abstract_p, abstract_opt, batch_specs),
         act_rules=act_rules,
         mesh=mesh,
-        remat_plan=plan_for_config(cfg, micro_tokens),
+        memory_plan=compile_plan(cfg, batch_tokens=micro_tokens),
     )
 
 

@@ -121,7 +121,9 @@ class Trainer:
                 self.ckpt.save(tcfg.steps, (params, opt_state),
                                data_state.as_dict(), blocking=True)
             return {"params": params, "opt_state": opt_state,
-                    "final_loss": loss, "history": self.history}
+                    "final_loss": loss, "history": self.history,
+                    "memory_plan": (self.bundle.memory_plan.report()
+                                    if self.bundle.memory_plan else None)}
         finally:
             queue.close()
 

@@ -11,10 +11,10 @@ import pytest
 from repro.core.execution_order import compute_execution_order
 from repro.core.lifespan import CreateMode, Lifespan, TensorSpec
 from repro.core.offload import OffloadSchedule, offload_policy, plan_offload
+from repro.core.plan import MemoryPlanConfig, compile_plan
 from repro.core.planned_exec import (init_params, reference_loss_and_grads,
                                      swap_planned_loss_and_grads)
-from repro.core.planner import (SortingPlanner, plan_memory,
-                                plan_memory_swapped)
+from repro.core.planner import plan_memory, plan_memory_swapped
 from repro.core.zoo import ZOO
 
 
@@ -175,13 +175,14 @@ def test_non_vacating_decisions_stay_resident():
 @pytest.mark.parametrize("name,batch", [("vgg16", 16), ("resnet18", 16)])
 def test_swap_peak_strictly_below_sorting_baseline(name, batch):
     """Acceptance: swap-aware arena peak strictly below no-swap sorting."""
-    ordered = compute_execution_order(ZOO[name](), batch)
-    baseline = SortingPlanner().plan(ordered)
-    sched = plan_offload(ordered, min_idle_phases=4, min_bytes=1 << 16)
-    plan = plan_memory_swapped(ordered, sched, planner="sorting")
-    plan.validate()
-    assert plan.arena_bytes < baseline.arena_bytes
-    assert plan.hbm_bytes_saved > 0
+    cp = compile_plan(
+        ZOO[name](), MemoryPlanConfig(min_idle_phases=4, min_bytes=1 << 16),
+        batch=batch)
+    cp.plan.validate()
+    assert cp.peak_bytes < cp.baseline.arena_bytes
+    assert cp.hbm_bytes_saved > 0
+    # co-optimisation never raises the peak above the single-pass plan
+    assert cp.peak_bytes <= cp.coopt.single_pass_peak_bytes
 
 
 def test_plan_memory_offload_kwarg_dispatches():
@@ -207,19 +208,20 @@ def _shrink(graph):
 
 
 def _run_swap_case(g, batch, one_hot=False):
-    ordered = compute_execution_order(g, batch)
-    sched = plan_offload(ordered, min_idle_phases=3, min_bytes=1,
-                         prefetch_margin=2)
-    assert sched.decisions, "case must actually exercise swapping"
-    plan = plan_memory_swapped(ordered, sched)
-    params = init_params(g, jax.random.PRNGKey(0))
+    # cooptimize=False: these cases exist to exercise the swap executor, so
+    # keep even the swaps the fixed point would drop as non-load-bearing
+    cp = compile_plan(
+        g, MemoryPlanConfig(min_idle_phases=3, min_bytes=1,
+                            prefetch_margin=2, cooptimize=False),
+        batch=batch)
+    assert cp.schedule.decisions, "case must actually exercise swapping"
+    params = cp.init_params(jax.random.PRNGKey(0))
     kx, ky = jax.random.split(jax.random.PRNGKey(1))
     x = jax.random.normal(kx, (batch,) + tuple(g.input_shape))
     y = jax.random.normal(ky, (batch,) + tuple(g.label_shape))
     if one_hot:
         y = jax.nn.one_hot(jnp.argmax(y, -1), y.shape[-1])
-    loss_s, grads_s, stats = swap_planned_loss_and_grads(
-        g, params, x, y, schedule=sched, ordered=ordered, plan=plan)
+    loss_s, grads_s, stats = cp.loss_and_grads(params, x, y)
     loss_r, grads_r = reference_loss_and_grads(g, params, x, y)
     np.testing.assert_allclose(float(loss_s), float(loss_r), rtol=1e-5)
     la = jax.tree_util.tree_leaves(grads_s)

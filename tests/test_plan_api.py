@@ -1,0 +1,230 @@
+"""The unified MemoryPlan compile API: ``compile_plan`` from graph (or model
+config) to executor, including the schedule/planner co-optimisation fixed
+point that ships as a behaviour of the facade.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.offload import make_schedule
+from repro.core.plan import (CompiledMemoryPlan, MemoryPlanConfig,
+                             compile_plan)
+from repro.core.planned_exec import reference_loss_and_grads
+from repro.core.planner import plan_memory_swapped
+from repro.core.zoo import ZOO
+
+PLAN_CFG = MemoryPlanConfig(min_idle_phases=3, min_bytes=1 << 12)
+
+
+def _shrink(graph):
+    for l in graph.layers:
+        if l.attrs.get("in_features") == 150528:
+            l.attrs["in_features"] = 96
+    if graph.input_shape == (150528,):
+        object.__setattr__(graph, "input_shape", (96,))
+    from repro.core.graph import infer_shapes
+    infer_shapes(graph)
+    return graph
+
+
+# ---------------------------------------------------------------------------
+# Every zoo model compiles through the facade
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_every_zoo_model_compiles(name):
+    cp = compile_plan(ZOO[name](), PLAN_CFG, batch=8)
+    assert cp.source == "graph"
+    cp.plan.validate()
+    # acceptance: peak never above the no-swap sorting planner
+    assert cp.peak_bytes <= cp.baseline.arena_bytes
+    # co-optimisation never raises the peak above the single pass
+    assert cp.peak_bytes <= cp.coopt.single_pass_peak_bytes
+    assert cp.dma_bytes <= cp.coopt.single_pass_dma_bytes
+    r = cp.report()
+    for key in ("peak_bytes", "baseline_peak_bytes", "dma_bytes",
+                "host_pool_bytes", "n_swaps", "coopt_rounds"):
+        assert key in r, key
+
+
+# ---------------------------------------------------------------------------
+# Co-optimisation fixed point: terminates with only load-bearing swaps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["vgg16", "resnet18"])
+def test_coopt_fixed_point_leaves_no_droppable_swaps(name):
+    cp = compile_plan(ZOO[name](), PLAN_CFG, batch=8)
+    assert cp.schedule.decisions, "models must keep load-bearing swaps"
+    # all scheduled swaps vacate bytes (non-vacating never scheduled)
+    assert all(d.vacates for d in cp.schedule.decisions)
+    # fixed point: removing ANY remaining swap raises the packed peak,
+    # i.e. there are zero non-vacating (non-load-bearing) swaps left
+    for d in cp.schedule.decisions:
+        rest = tuple(o for o in cp.schedule.decisions if o.name != d.name)
+        trial = plan_memory_swapped(cp.ordered, make_schedule(rest),
+                                    planner=cp.config.planner)
+        assert trial.arena_bytes > cp.peak_bytes, d.name
+
+
+def test_coopt_drops_non_load_bearing_swaps():
+    # model_a's swaps reclaim no packed bytes: the fixed point removes them
+    # all, at equal peak and zero DMA traffic
+    cp = compile_plan(_shrink(ZOO["model_a_linear"]()),
+                      MemoryPlanConfig(min_idle_phases=3, min_bytes=1),
+                      batch=4)
+    assert cp.coopt.dropped
+    assert not cp.schedule.decisions
+    assert cp.dma_bytes == 0
+    assert cp.peak_bytes <= cp.coopt.single_pass_peak_bytes
+
+
+def test_cooptimize_off_reproduces_single_pass():
+    cfg = dataclasses.replace(PLAN_CFG, cooptimize=False)
+    cp = compile_plan(ZOO["vgg16"](), cfg, batch=8)
+    assert cp.coopt is None
+    on = compile_plan(ZOO["vgg16"](), PLAN_CFG, batch=8)
+    assert on.coopt.single_pass_peak_bytes == cp.peak_bytes
+    assert on.coopt.single_pass_dma_bytes == cp.dma_bytes
+
+
+# ---------------------------------------------------------------------------
+# The compiled executor: grads match jax.grad through the facade
+# ---------------------------------------------------------------------------
+
+def _exec_case(g, batch, one_hot=False):
+    cp = compile_plan(
+        g, MemoryPlanConfig(min_idle_phases=3, min_bytes=1,
+                            prefetch_margin=2), batch=batch)
+    params = cp.init_params(jax.random.PRNGKey(0))
+    kx, ky = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(kx, (batch,) + tuple(g.input_shape))
+    y = jax.random.normal(ky, (batch,) + tuple(g.label_shape))
+    if one_hot:
+        y = jax.nn.one_hot(jnp.argmax(y, -1), y.shape[-1])
+    loss_s, grads_s, stats = cp.loss_and_grads(params, x, y)
+    loss_r, grads_r = reference_loss_and_grads(g, params, x, y)
+    np.testing.assert_allclose(float(loss_s), float(loss_r), rtol=1e-5)
+    la = jax.tree_util.tree_leaves(grads_s)
+    lb = jax.tree_util.tree_leaves(grads_r)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+    return cp, stats
+
+
+def test_compiled_exec_grads_match_lenet5():
+    cp, stats = _exec_case(ZOO["lenet5"](), 4, one_hot=True)
+    assert cp.schedule.decisions          # swaps survive co-optimisation
+    assert stats.swap_outs == stats.prefetches > 0
+    assert stats.late_swap_ins == 0
+    assert stats.hbm_high_water <= stats.planned_peak
+
+
+def test_compiled_exec_grads_match_model_b():
+    _exec_case(_shrink(ZOO["model_b_linear"]()), 4)
+
+
+def test_compiled_exec_grads_match_unrolled_lstm():
+    g = ZOO["tacotron2_decoder"](time_steps=4, mel_dim=8, prenet_dim=8,
+                                 lstm_dim=8)
+    cp, stats = _exec_case(g, 2)
+    assert stats.late_swap_ins == 0
+
+
+def test_worstcase_planner_reports_no_phantom_savings():
+    # the no-swap baseline must be packed over the same tensor universe as
+    # the swapped re-pack: with every swap dropped, savings must be zero
+    # even for WorstCasePlanner (which materialises merged views too)
+    cp = compile_plan(
+        ZOO["lenet5"](),
+        MemoryPlanConfig(planner="worstcase", min_idle_phases=3,
+                         min_bytes=1 << 12), batch=8)
+    if not cp.swapped_names():
+        assert cp.hbm_bytes_saved == 0
+
+
+def test_graph_plan_has_no_checkpoint_policy():
+    # graph plans execute swaps via loss_and_grads; their arena names would
+    # match no checkpoint_name tag, so no jax.checkpoint policy is faked
+    cp = compile_plan(ZOO["lenet5"](), PLAN_CFG, batch=8)
+    assert cp.swapped_names()
+    assert cp.offload_policy is None
+
+
+def test_swap_disabled_is_plain_plan():
+    g = ZOO["lenet5"]()
+    cp = compile_plan(g, MemoryPlanConfig(swap=False), batch=4)
+    assert not cp.schedule.decisions
+    assert cp.peak_bytes == cp.baseline.arena_bytes
+    assert cp.coopt is None and cp.dma_bytes == 0
+    params = cp.init_params(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4,) + tuple(g.input_shape))
+    y = jax.nn.one_hot(jnp.arange(4) % 10, 10)
+    _, _, stats = cp.loss_and_grads(params, x, y)
+    assert stats.swap_outs == stats.dma_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# Model-config path: the remat/offload knapsack behind the same facade
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg(**kw):
+    return ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=128, vocab=256, **kw)
+
+
+def test_model_config_path_produces_policy():
+    cp = compile_plan(_tiny_cfg(remat=True), batch_tokens=1024)
+    assert cp.source == "model"
+    assert cp.remat_plan is not None
+    assert cp.offload_policy is not None
+    assert cp.peak_bytes == cp.remat_plan.saved_bytes_per_layer * 2
+    assert cp.report()["remat_saved"] == list(cp.remat_plan.saved)
+
+
+def test_model_config_remat_off_is_empty_plan():
+    cp = compile_plan(_tiny_cfg(remat=False), batch_tokens=1024)
+    assert cp.remat_plan is None and cp.offload_policy is None
+    assert cp.peak_bytes == 0
+
+
+def test_model_config_knobs_override_cfg():
+    cfg = _tiny_cfg(remat=True, offload=False)
+    cp = compile_plan(cfg, MemoryPlanConfig(remat_budget_bytes=0,
+                                            offload_dropped=True),
+                      batch_tokens=1024)
+    assert cp.remat_plan.saved == ()
+    assert cp.remat_plan.offloaded       # everything streams through host
+
+
+def test_model_config_requires_batch_tokens():
+    with pytest.raises(TypeError):
+        compile_plan(_tiny_cfg(remat=True))
+
+
+def test_graph_executor_unavailable_for_model_config():
+    cp = compile_plan(_tiny_cfg(remat=True), batch_tokens=1024)
+    with pytest.raises(TypeError):
+        cp.loss_and_grads(None, None, None)
+    with pytest.raises(TypeError):
+        cp.init_params(jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: old entry points still import, with a warning
+# ---------------------------------------------------------------------------
+
+def test_deprecated_core_reexports_warn():
+    import repro.core as core
+    with pytest.warns(DeprecationWarning):
+        fn = core.plan_memory
+    from repro.core.planner import plan_memory
+    assert fn is plan_memory
+    with pytest.warns(DeprecationWarning):
+        assert core.compute_execution_order is not None

@@ -9,3 +9,28 @@ cd "$(dirname "$0")/.."
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 python -m pytest -q -m "not slow" "$@"
+
+# compile_plan smoke: the facade must take a zoo model from graph to a
+# validated, co-optimised plan (peak <= no-swap baseline) in one call.
+PYTHONPATH=src python - <<'EOF'
+from repro.core import MemoryPlanConfig, compile_plan
+from repro.core.zoo import ZOO
+
+for name in ("lenet5", "resnet18"):
+    cp = compile_plan(ZOO[name](),
+                      MemoryPlanConfig(min_idle_phases=3, min_bytes=1 << 12),
+                      batch=8)
+    cp.plan.validate()
+    assert cp.peak_bytes <= cp.baseline.arena_bytes, name
+    assert cp.peak_bytes <= cp.coopt.single_pass_peak_bytes, name
+    print(f"compile_plan smoke {name}: peak={cp.peak_bytes} "
+          f"base={cp.baseline.arena_bytes} swaps={len(cp.swapped_names())} "
+          f"dropped={len(cp.coopt.dropped)}")
+EOF
+
+# benchmark JSON emission: the swap benches must keep producing the
+# machine-readable perf-trajectory file.
+PYTHONPATH=src python -m benchmarks.run --only swap_tradeoff \
+    --bench-json results/BENCH_swap.json > /dev/null
+test -s results/BENCH_swap.json
+echo "BENCH_swap.json emitted ($(wc -c < results/BENCH_swap.json) bytes)"
