@@ -11,9 +11,13 @@ entry point from graph to executor — sweeping the declarative
 Each row reports the swap-aware device-arena peak (MiB, middle column)
 against the no-swap baseline of the same planner, plus host-pool bytes,
 total DMA traffic, and what the schedule/planner co-optimisation fixed
-point dropped.  A final set of rows runs the compiled plan's executor
-end-to-end on small models and reports *measured* high-water marks and DMA
-bytes, proving schedule and execution agree (late_swap_ins must be 0).
+point dropped.  ``swap_model`` rows cover the model-config (TPU) path: the
+joint keep/recompute/offload planner over transformer archs and budget
+sweeps, with per-plan DMA bytes, decisions, and the estimated step-time
+cost against the pure-remat and offload-everything alternatives.  A final
+set of rows runs the compiled plan's executor end-to-end on small models
+and reports *measured* high-water marks and DMA bytes, proving schedule
+and execution agree (late_swap_ins must be 0).
 
 Besides the CSV rows, every run collects machine-readable records; the
 driver (``benchmarks/run.py``) writes them to ``results/BENCH_swap.json``
@@ -92,6 +96,69 @@ def bench_swap_tradeoff():
     return rows
 
 
+# Model-config path: the joint keep/recompute/offload planner over
+# transformer archs, swept over per-layer HBM budget fractions.  Each row
+# reports the plan's DMA traffic (middle column) plus the estimated
+# per-layer step-time cost of the joint plan against the two single-knob
+# alternatives (pure remat, offload-everything) priced under the same
+# hardware model — the model-path perf trajectory for BENCH_swap.json.
+MODEL_PLAN_CASES = (("llama3.2-3b", 2048), ("granite-moe-1b-a400m", 2048))
+MODEL_BUDGET_FRACTIONS = (0.5, 0.25, 0.0)
+MODEL_HW = {"dma_gbps": 80.0, "device_tflops": 200.0}
+
+
+def bench_swap_model():
+    import warnings
+
+    from repro.configs import ARCHS
+    from repro.core.plan import MemoryPlanConfig, compile_plan
+    from repro.core.remat_policy import (plan_step_time_s,
+                                         transformer_intermediates)
+
+    rows = []
+    for arch, bt in MODEL_PLAN_CASES:
+        cfg = ARCHS[arch]
+        inter = transformer_intermediates(
+            batch_tokens=bt, d_model=cfg.d_model,
+            d_ff=cfg.moe_d_ff if cfg.is_moe else cfg.d_ff,
+            n_q_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, moe_experts_per_token=cfg.top_k)
+        total = sum(i.bytes_per_layer for i in inter)
+        for frac in MODEL_BUDGET_FRACTIONS:
+            budget = int(total * frac)
+            joint = compile_plan(cfg, MemoryPlanConfig(
+                remat=True, remat_budget_bytes=budget, offload=True,
+                **MODEL_HW), batch_tokens=bt)
+            remat = compile_plan(cfg, MemoryPlanConfig(
+                remat=True, remat_budget_bytes=budget, offload=False),
+                batch_tokens=bt)
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                offall = compile_plan(cfg, MemoryPlanConfig(
+                    remat=True, remat_budget_bytes=budget,
+                    offload_dropped=True), batch_tokens=bt)
+            price = lambda cp: plan_step_time_s(  # noqa: E731
+                cp.remat_plan, inter, **MODEL_HW)
+            r = joint.report()
+            rows.append((
+                f"swap_model/{arch}/budget{int(frac * 100)}pct",
+                joint.dma_bytes / MIB,
+                f"MiB_dma est_joint={price(joint) * 1e3:.3f}ms/layer "
+                f"est_remat={price(remat) * 1e3:.3f} "
+                f"est_offall={price(offall) * 1e3:.3f} "
+                f"keep={len(r['remat_saved'])} "
+                f"rec={len(r['remat_dropped'])} "
+                f"off={len(r['remat_offloaded'])}"))
+            JSON_RECORDS.append({
+                "bench": "swap_model", "model": arch, "batch_tokens": bt,
+                "budget_fraction": frac, "budget_bytes_per_layer": budget,
+                "est_step_time_s_per_layer_joint": price(joint),
+                "est_step_time_s_per_layer_pure_remat": price(remat),
+                "est_step_time_s_per_layer_offload_all": price(offall),
+                **r})
+    return rows
+
+
 EXEC_MODELS = (("lenet5", 16), ("model_b_conv2d", 8))
 
 
@@ -135,5 +202,6 @@ def bench_swap_exec():
 
 ALL = {
     "swap_tradeoff": bench_swap_tradeoff,
+    "swap_model": bench_swap_model,
     "swap_exec": bench_swap_exec,
 }

@@ -26,8 +26,10 @@ def main() -> None:
         # the report travels with the run result
         mp = out["memory_plan"]
         print(f"memory plan: peak={mp['peak_bytes'] / 2**20:.2f} MiB "
-              f"saved={mp.get('remat_saved', [])} "
-              f"offloaded={mp.get('remat_offloaded', [])}")
+              f"decisions={mp.get('remat_decisions', {})} "
+              f"dma={mp.get('dma_bytes', 0) / 2**20:.2f} MiB "
+              f"recompute_flops/layer="
+              f"{mp.get('recompute_flops_per_layer', 0.0):.3g}")
         first = out["history"][0]["loss"]
         print(f"loss: {first:.3f} -> {out['final_loss']:.3f}")
         assert out["final_loss"] < first, "training did not reduce loss"

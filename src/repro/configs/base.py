@@ -68,10 +68,15 @@ class ModelConfig:
     block_q: int = 512
     block_kv: int = 1024
 
-    # Remat / memory planning
+    # Remat / memory planning.  ``offload`` enables the host-offload
+    # eviction lane: budget-missing intermediates then get a joint
+    # keep/recompute/offload decision priced by the hardware cost model
+    # below (see repro.core.remat_policy.plan_joint_policy).
     remat: bool = True
     remat_budget_bytes: Optional[int] = None   # per-layer activation budget
     offload: bool = False
+    dma_gbps: Optional[float] = None           # host-DMA GB/s (None = default)
+    device_tflops: Optional[float] = None      # recompute TFLOP/s (None = default)
 
     # Parallelism
     pipeline_stages: int = 1

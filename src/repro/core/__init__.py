@@ -19,7 +19,9 @@ The pipeline stages remain importable as composable pieces:
 * :mod:`repro.core.ideal`           — §3 ideal-memory calculator (Table 4)
 * :mod:`repro.core.inplace`         — derivative-from-output activation calculus
 * :mod:`repro.core.planned_exec`    — layer-basis F/CG/CD training executor
-* :mod:`repro.core.remat_policy`    — lifespan analysis -> jax.checkpoint policy
+* :mod:`repro.core.remat_policy`    — joint keep/recompute/offload planner
+                                      (priced by dma_gbps vs device_tflops)
+                                      -> jax.checkpoint policy
 * :mod:`repro.core.offload`         — EO-driven proactive-swap schedule (§6)
 * :mod:`repro.core.plan`            — the compile facade + co-optimisation
 
@@ -34,10 +36,15 @@ import warnings as _warnings
 
 from repro.core.plan import (CompiledMemoryPlan, CooptStats, MemoryPlanConfig,
                              compile_plan)
+from repro.core.remat_policy import (RematPlan, plan_joint_policy,
+                                     plan_step_time_s)
 
 __all__ = [
     # the compile API
     "MemoryPlanConfig", "CompiledMemoryPlan", "CooptStats", "compile_plan",
+    # the joint keep/recompute/offload planner (model-config path internals,
+    # exported for cost-model comparisons and tests)
+    "RematPlan", "plan_joint_policy", "plan_step_time_s",
     # deprecated hand-wired entry points (resolved lazily, with a warning)
     "CreateMode", "Lifespan", "TensorSpec", "SwapAwarePlan",
     "compute_execution_order", "ideal_memory", "plan_memory",

@@ -19,9 +19,9 @@ Two input kinds are accepted:
 * a :class:`repro.core.graph.LayerGraph` — the layer-basis path: EO
   analysis, proactive-swap scheduling, swap-aware arena packing and the
   phase-ticked swap executor;
-* a transformer-shaped ``ModelConfig`` — the TPU path: the remat/offload
-  knapsack over tagged intermediates, lowered to a ``jax.checkpoint``
-  policy for the jitted train step.
+* a transformer-shaped ``ModelConfig`` — the TPU path: the joint
+  keep/recompute/offload planner over tagged intermediates, lowered to a
+  ``jax.checkpoint`` policy for the jitted train step.
 
 Schedule/planner co-optimisation (ROADMAP item, now a behaviour of this
 API): ``plan_offload`` picks swap candidates by byte-phase product *before*
@@ -32,18 +32,32 @@ point where (a) removing any remaining swap would raise the packed peak and
 (b) the peak never exceeds the single-pass ``plan_memory_swapped`` result.
 DMA traffic shrinks at equal peak — exactly the ``swap/vgg16`` diminishing-
 returns observation.
+
+The model-config path runs the same remat knapsack and swap scheduler as
+*one* planner (ROADMAP's "swap the remat knapsack jointly"): every tagged
+intermediate gets a three-way keep / recompute / offload decision priced by
+the :class:`MemoryPlanConfig` hardware cost model (``dma_gbps`` host
+bandwidth vs ``device_tflops`` recompute throughput) under the per-layer
+HBM budget — see :func:`repro.core.remat_policy.plan_joint_policy`.  The
+resulting :class:`CompiledMemoryPlan` reports honest prices for both
+eviction lanes (``dma_bytes`` covers model plans too, not just graph
+schedules).  The deprecated ``offload_dropped`` knob survives as an alias
+meaning "DMA is free" (offload everything that misses the budget).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
+import warnings
 from typing import Any, Dict, List, Optional, Tuple, Union
 
 from repro.core.execution_order import OrderedTensors, compute_execution_order
 from repro.core.graph import LayerGraph
-from repro.core.offload import OffloadSchedule, make_schedule, plan_offload
+from repro.core.offload import (OffloadSchedule, make_schedule,
+                                offload_lowering, plan_offload)
 from repro.core.planner import PLANNERS, Plan, SwapAwarePlan, plan_memory_swapped
-from repro.core.remat_policy import (RematPlan, plan_checkpoint_policy,
+from repro.core.remat_policy import (RematPlan, plan_joint_policy,
                                      transformer_intermediates)
 
 
@@ -64,13 +78,27 @@ class MemoryPlanConfig:
                          dropping swaps whose vacated bytes reclaimed no
                          packed peak
 
-    Remat / offload knobs (model-config path):
+    Remat / offload knobs (model-config path — the joint planner):
 
     ``remat``              None = follow ``cfg.remat``; bool overrides
     ``remat_budget_bytes`` per-layer activation budget for the knapsack
                            (None = follow ``cfg.remat_budget_bytes``)
-    ``offload_dropped``    swap budget-missing intermediates to host instead
-                           of recomputing (None = follow ``cfg.offload``)
+    ``offload``            enable the host-offload eviction lane so budget-
+                           missing intermediates get a priced three-way
+                           keep/recompute/offload decision instead of the
+                           pure remat knapsack (None = follow ``cfg.offload``)
+    ``dma_gbps``           host-DMA bandwidth (GB/s) pricing the offload
+                           lane: one round trip costs 2*bytes/bandwidth
+                           (None = follow ``cfg.dma_gbps``, else the
+                           remat_policy default, 32 GB/s)
+    ``device_tflops``      device throughput (TFLOP/s) pricing the recompute
+                           lane (None = follow ``cfg.device_tflops``, else
+                           the remat_policy default, 200 TFLOP/s)
+    ``offload_dropped``    DEPRECATED alias meaning "DMA is free": True
+                           offloads *every* budget-missing intermediate
+                           regardless of whether recomputing it would be
+                           cheaper; False forces the offload lane off.
+                           Prefer ``offload`` + the hardware knobs.
     """
 
     planner: str = "sorting"
@@ -83,6 +111,9 @@ class MemoryPlanConfig:
 
     remat: Optional[bool] = None
     remat_budget_bytes: Optional[int] = None
+    offload: Optional[bool] = None
+    dma_gbps: Optional[float] = None
+    device_tflops: Optional[float] = None
     offload_dropped: Optional[bool] = None
 
 
@@ -139,7 +170,14 @@ class CompiledMemoryPlan:
 
     @property
     def dma_bytes(self) -> int:
-        return self.schedule.dma_bytes if self.schedule is not None else 0
+        """Total device<->host traffic: the swap schedule's (graph path) or
+        the offloaded intermediates' round trips across layers (model)."""
+        if self.schedule is not None:
+            return self.schedule.dma_bytes
+        if self.remat_plan is not None and self.model_config is not None:
+            return (self.remat_plan.offload_dma_bytes_per_layer
+                    * self.model_config.n_layers)
+        return 0
 
     @property
     def hbm_bytes_saved(self) -> int:
@@ -217,10 +255,20 @@ class CompiledMemoryPlan:
             out["single_pass_peak_bytes"] = self.coopt.single_pass_peak_bytes
             out["single_pass_dma_bytes"] = self.coopt.single_pass_dma_bytes
         if self.remat_plan is not None:
-            out["remat_saved"] = list(self.remat_plan.saved)
-            out["remat_dropped"] = list(self.remat_plan.dropped)
-            out["remat_offloaded"] = list(self.remat_plan.offloaded)
-            out["saved_bytes_per_layer"] = self.remat_plan.saved_bytes_per_layer
+            rp = self.remat_plan
+            out["remat_saved"] = list(rp.saved)
+            out["remat_dropped"] = list(rp.dropped)
+            out["remat_offloaded"] = list(rp.offloaded)
+            out["remat_decisions"] = rp.decisions()
+            out["saved_bytes_per_layer"] = rp.saved_bytes_per_layer
+            out["recompute_flops_per_layer"] = rp.recompute_flops_per_layer
+            out["offload_dma_bytes_per_layer"] = rp.offload_dma_bytes_per_layer
+            out["est_step_time_s_per_layer"] = rp.est_step_time_s_per_layer
+            if rp.offloaded:
+                # how the offload decisions actually lower on this JAX:
+                # "fallback_save" means the policy degrades to plain saves
+                # and the planned HBM budget will be exceeded
+                out["offload_lowering"] = offload_lowering()
         return out
 
 
@@ -234,12 +282,14 @@ def _cooptimize(ordered: OrderedTensors, schedule: OffloadSchedule,
     """Drop swaps whose vacated bytes reclaimed no packed peak; re-plan.
 
     A swap is non-load-bearing when re-packing *without* it yields the same
-    (or a lower) arena peak: its two DMA transfers buy nothing.  Each
-    accepted drop restarts the scan on the shrunk schedule, so the loop
-    terminates (the decision set strictly shrinks) and the peak is monotone
-    non-increasing — never above the single-pass input plan.  At the fixed
-    point every remaining swap is load-bearing: removing any one of them
-    would raise the packed peak.
+    (or a lower) arena peak: its two DMA transfers buy nothing.  An accepted
+    drop continues the scan from the *next* decision (restarting from the
+    first would cost O(n^2) full re-packs per fixed point); one more full
+    pass runs after any pass that dropped something, so the loop only stops
+    when a complete scan accepts nothing.  The decision set strictly shrinks
+    and the peak is monotone non-increasing — never above the single-pass
+    input plan.  At the fixed point every remaining swap is load-bearing:
+    removing any one of them would raise the packed peak.
     """
     rounds = 0
     dropped: List[str] = []
@@ -247,16 +297,15 @@ def _cooptimize(ordered: OrderedTensors, schedule: OffloadSchedule,
     while improved:
         rounds += 1
         improved = False
-        for d in schedule.decisions:
-            rest = tuple(o for o in schedule.decisions if o.name != d.name)
+        for name in [d.name for d in schedule.decisions]:
+            rest = tuple(o for o in schedule.decisions if o.name != name)
             trial_sched = make_schedule(rest)
             trial_plan = plan_memory_swapped(ordered, trial_sched,
                                              planner=planner)
             if trial_plan.arena_bytes <= plan.arena_bytes:
                 schedule, plan = trial_sched, trial_plan
-                dropped.append(d.name)
+                dropped.append(name)
                 improved = True
-                break
     return schedule, plan, rounds, dropped
 
 
@@ -326,9 +375,27 @@ def _compile_model_plan(cfg, config: MemoryPlanConfig,
                                   model_config=cfg, batch_tokens=batch_tokens)
     budget = config.remat_budget_bytes if config.remat_budget_bytes is not None \
         else getattr(cfg, "remat_budget_bytes", None)
-    offload_dropped = config.offload_dropped \
-        if config.offload_dropped is not None \
-        else bool(getattr(cfg, "offload", False))
+
+    # Offload-lane resolution: the deprecated binary flag wins when set
+    # (True = the old cost-blind behaviour, realised as free DMA); the
+    # ``offload`` knob / ``cfg.offload`` enables the priced joint planner.
+    free_dma = False
+    if config.offload_dropped is not None:
+        warnings.warn(
+            "MemoryPlanConfig.offload_dropped is deprecated: True prices "
+            "DMA as free and offloads every budget-missing intermediate; "
+            "use MemoryPlanConfig(offload=True, dma_gbps=..., "
+            "device_tflops=...) for the priced keep/recompute/offload "
+            "decision", DeprecationWarning, stacklevel=3)
+        offload_on = free_dma = bool(config.offload_dropped)
+    else:
+        offload_on = config.offload if config.offload is not None \
+            else bool(getattr(cfg, "offload", False))
+    dma_gbps = config.dma_gbps if config.dma_gbps is not None \
+        else getattr(cfg, "dma_gbps", None)
+    device_tflops = config.device_tflops if config.device_tflops is not None \
+        else getattr(cfg, "device_tflops", None)
+
     inter = transformer_intermediates(
         batch_tokens=batch_tokens, d_model=cfg.d_model,
         d_ff=cfg.moe_d_ff if getattr(cfg, "is_moe", False) else cfg.d_ff,
@@ -336,8 +403,24 @@ def _compile_model_plan(cfg, config: MemoryPlanConfig,
         head_dim=cfg.head_dim,
         moe_experts_per_token=getattr(cfg, "top_k", 0),
     )
-    remat_plan = plan_checkpoint_policy(inter, budget,
-                                        offload_dropped=offload_dropped)
+    if free_dma and budget is None:
+        budget = 0   # legacy quirk: offload with no budget streams everything
+    elif offload_on and budget is None:
+        # keeping everything is cost-optimal without budget pressure, so a
+        # budget-less "offload lane on" config offloads nothing — say so
+        # instead of silently no-opping (the failure mode the old
+        # offload-everything quirk existed to prevent)
+        warnings.warn(
+            "offload lane enabled but no per-layer HBM budget is set "
+            "(remat_budget_bytes is None): keeping every intermediate is "
+            "cost-optimal, so nothing will be offloaded; set a budget to "
+            "create eviction pressure (or offload_dropped=True for the "
+            "deprecated stream-everything behaviour)",
+            UserWarning, stacklevel=3)
+    remat_plan = plan_joint_policy(
+        inter, budget, offload=offload_on,
+        dma_gbps=math.inf if free_dma else dma_gbps,
+        device_tflops=device_tflops)
     return CompiledMemoryPlan(config=config, source="model",
                               model_config=cfg, remat_plan=remat_plan,
                               batch_tokens=batch_tokens)

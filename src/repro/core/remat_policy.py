@@ -1,20 +1,37 @@
-"""Planner-driven rematerialisation policy — NNTrainer's lifespan analysis
-adapted to the TPU memory hierarchy.
+"""Joint keep / recompute / offload planning for tagged intermediates —
+NNTrainer's lifespan analysis adapted to the TPU memory hierarchy.
 
 On-device NNTrainer packs activations into a planned arena because embedded
 RAM is the binding constraint.  On a TPU pod the binding constraint is HBM
-per chip, and the degree of freedom is not *where* a tensor lives but
-*whether it is kept at all*: XLA's buffer assignment already performs
-arena-style interval packing (the moral equivalent of Algorithm 2), so the
-lever our planner controls is the save-vs-recompute decision per named
-intermediate — i.e. which tensors get Forward+CalcGrad lifespans (saved)
-and which get Forward-only lifespans (recomputed in backward).
+per chip, and the degree of freedom is not *where* a tensor lives but what
+happens to it between its forward write and its backward read.  Per named
+intermediate there are three choices, each with a step-time price:
 
-``plan_checkpoint_policy`` solves the same problem as the paper's Memory
-Planner, one level up: given per-intermediate byte costs and recompute-FLOP
-costs, keep the intermediates with the worst recompute-cost/byte ratio and
-drop the rest until the per-device activation budget is met.  The output is
-a ``jax.checkpoint`` policy usable inside scanned transformer blocks.
+    keep       — stays resident in HBM; free at step time, but consumes
+                 budget bytes for the whole Forward+CalcGrad lifespan;
+    recompute  — Forward-only lifespan; the backward pass rebuilds it at
+                 ``recompute_flops / device FLOP/s`` seconds;
+    offload    — proactive swap to pinned host memory (NNTrainer §6); the
+                 round trip costs ``2 * bytes / host-DMA bandwidth`` seconds
+                 and vacates the HBM bytes during the gap.
+
+:func:`plan_joint_policy` solves the three-way problem *jointly*: keeping an
+intermediate is worth the cheaper of its two eviction prices, so the keep
+set is the knapsack maximising evicted-cost-avoided under the per-layer HBM
+budget (solved exactly for the small per-block tag sets, greedily by
+cost-density beyond that), and every evicted intermediate takes whichever
+eviction lane — recompute or offload — is cheaper under the
+:class:`~repro.core.plan.MemoryPlanConfig` hardware cost model
+(``dma_gbps``, ``device_tflops``).  The output is a
+:class:`RematPlan` with honest accounting (``recompute_flops_per_layer``,
+``offload_dma_bytes_per_layer``) and a ``jax.checkpoint`` policy usable
+inside scanned transformer blocks.
+
+:func:`plan_checkpoint_policy` is the deprecated two-knob predecessor:
+``offload_dropped=False`` restricts the planner to the recompute lane and
+``offload_dropped=True`` prices DMA as free (every budget-missing
+intermediate offloads — the old cost-blind behaviour, now with its DMA
+traffic at least accounted for).
 
 Intermediates are tagged with ``jax.ad_checkpoint.checkpoint_name`` inside
 the model code; standard tag names used across repro models:
@@ -32,11 +49,28 @@ the model code; standard tag names used across repro models:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+import math
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax import ad_checkpoint
+
+# Hardware cost-model defaults: a TPU-class accelerator (bf16 matmul
+# throughput) attached to host memory over a PCIe-class link.  Overridable
+# per compile via MemoryPlanConfig(dma_gbps=..., device_tflops=...) or per
+# architecture via the same-named ModelConfig fields.
+DEFAULT_DMA_GBPS = 32.0
+DEFAULT_DEVICE_TFLOPS = 200.0
+
+# Exact knapsack cutoff: per-block tag sets are tiny (4-8 names), so the
+# optimal keep set is found by subset enumeration; beyond this the planner
+# falls back to the greedy cost-density fill.
+_EXACT_KNAPSACK_MAX_ITEMS = 16
+
+KEEP = "keep"
+RECOMPUTE = "recompute"
+OFFLOAD = "offload"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +83,20 @@ class Intermediate:
 
 @dataclasses.dataclass
 class RematPlan:
+    """Per-layer keep/recompute/offload decisions with honest accounting.
+
+    ``dropped`` holds the intermediates the backward pass recomputes and
+    ``offloaded`` the ones round-tripped through pinned host memory; their
+    union is exactly the budget-missing set (no decision is ever erased).
+    ``recompute_flops_per_layer`` sums over ``dropped`` only and
+    ``offload_dma_bytes_per_layer`` counts both DMA directions over
+    ``offloaded`` — the two observable prices a plan pays.
+    ``est_step_time_s_per_layer`` is their combined step-time estimate under
+    the hardware cost model the plan was made with (zero DMA contribution
+    when that model priced DMA as free — see :func:`plan_step_time_s` to
+    re-price a plan under an honest model).
+    """
+
     saved: Tuple[str, ...]
     dropped: Tuple[str, ...]
     saved_bytes_per_layer: int
@@ -57,6 +105,15 @@ class RematPlan:
     # EO-analysis offload schedule's decision set, lowered to XLA via
     # ``repro.core.offload.offload_policy``.
     offloaded: Tuple[str, ...] = ()
+    offload_dma_bytes_per_layer: int = 0
+    est_step_time_s_per_layer: float = 0.0
+
+    def decisions(self) -> Dict[str, str]:
+        """Per-intermediate choice: name -> keep | recompute | offload."""
+        out = {n: KEEP for n in self.saved}
+        out.update({n: RECOMPUTE for n in self.dropped})
+        out.update({n: OFFLOAD for n in self.offloaded})
+        return out
 
     def policy(self):
         """A jax.checkpoint policy saving (and offloading) the planned names."""
@@ -68,39 +125,49 @@ class RematPlan:
         return jax.checkpoint_policies.save_only_these_names(*self.saved)
 
 
-def plan_checkpoint_policy(
-    intermediates: Sequence[Intermediate],
-    budget_bytes_per_layer: Optional[int],
-    *,
-    offload_dropped: bool = False,
-) -> RematPlan:
-    """Greedy knapsack: keep high recompute-cost-per-byte intermediates.
+def _lane_costs_s(i: Intermediate, dma_gbps: float,
+                  device_tflops: float) -> Tuple[float, float]:
+    """(recompute, offload) step-time prices in seconds for one eviction.
 
-    ``budget_bytes_per_layer`` of None means "save everything" (no remat).
-    A budget of 0 means full remat (save nothing beyond scan carries).
-    With ``offload_dropped`` the intermediates that miss the HBM budget are
-    swapped to host memory instead of recomputed (proactive swapping, §6):
-    they cost DMA traffic rather than backward FLOPs.  Offload with *no*
-    budget means "keep no HBM residents" — every intermediate streams
-    through host; otherwise ``cfg.offload=True`` with the default
-    (budget-less) config would silently do nothing.
+    A non-positive rate means that lane is unusable (infinite price):
+    ``dma_gbps=0`` is "no DMA engine" and forces every eviction down the
+    recompute lane; ``dma_gbps=inf`` is the deprecated free-DMA pricing.
     """
-    if budget_bytes_per_layer is None:
-        names = tuple(i.name for i in intermediates)
-        if offload_dropped:
-            return RematPlan(saved=(), dropped=(), saved_bytes_per_layer=0,
-                             recompute_flops_per_layer=0.0, offloaded=names)
-        return RematPlan(
-            saved=names,
-            dropped=(),
-            saved_bytes_per_layer=sum(i.bytes_per_layer for i in intermediates),
-            recompute_flops_per_layer=0.0,
-        )
-    # Sort by recompute-FLOPs per byte, descending: the intermediates that
-    # are most expensive to rebuild per byte of HBM are kept first.
+    recompute_s = math.inf if device_tflops <= 0 \
+        else i.recompute_flops / (device_tflops * 1e12)
+    if math.isinf(dma_gbps):
+        offload_s = 0.0
+    elif dma_gbps <= 0:
+        offload_s = math.inf
+    else:
+        offload_s = 2.0 * i.bytes_per_layer / (dma_gbps * 1e9)
+    return recompute_s, offload_s
+
+
+def _evict_cost_s(i: Intermediate, *, offload: bool, dma_gbps: float,
+                  device_tflops: float) -> Tuple[float, str]:
+    """Cheapest eviction lane for one intermediate: (seconds, lane)."""
+    recompute_s, offload_s = _lane_costs_s(i, dma_gbps, device_tflops)
+    if not offload:
+        return recompute_s, RECOMPUTE
+    # ties go to the offload lane so the deprecated free-DMA mode keeps the
+    # old offload-everything decision set
+    if offload_s <= recompute_s:
+        return offload_s, OFFLOAD
+    return recompute_s, RECOMPUTE
+
+
+def _greedy_keep_set(intermediates: Sequence[Intermediate],
+                     budget_bytes_per_layer: int,
+                     evict_s: Dict[str, float]) -> List[str]:
+    """Greedy fill: highest avoided-cost per byte first, recompute density
+    as the tiebreak — with every avoided cost zero (the deprecated free-DMA
+    mode) this degenerates to the historical flops-per-byte order exactly.
+    """
     ranked = sorted(
         intermediates,
-        key=lambda i: i.recompute_flops / max(i.bytes_per_layer, 1),
+        key=lambda i: (evict_s[i.name] / max(i.bytes_per_layer, 1),
+                       i.recompute_flops / max(i.bytes_per_layer, 1)),
         reverse=True,
     )
     saved: List[str] = []
@@ -109,24 +176,148 @@ def plan_checkpoint_policy(
         if used + i.bytes_per_layer <= budget_bytes_per_layer:
             saved.append(i.name)
             used += i.bytes_per_layer
+    return saved
+
+
+def _keep_set(intermediates: Sequence[Intermediate],
+              budget_bytes_per_layer: int,
+              evict_s: Dict[str, float]) -> List[str]:
+    """Keep set maximising evicted-cost-avoided under the byte budget.
+
+    Keeping an intermediate avoids exactly its cheapest eviction price, so
+    the optimal keep set is a 0/1 knapsack with value ``evict_s`` and weight
+    ``bytes_per_layer`` — solved exactly for the small per-block tag sets
+    (ties prefer more kept bytes: fewer evictions to account for), greedily
+    by cost density for larger universes.
+    """
+    items = list(intermediates)
+    if len(items) <= _EXACT_KNAPSACK_MAX_ITEMS:
+        best_mask, best_value, best_bytes = 0, -1.0, -1
+        for mask in range(1 << len(items)):
+            used = value = 0
+            for bit, i in enumerate(items):
+                if mask >> bit & 1:
+                    used += i.bytes_per_layer
+                    value += evict_s[i.name]
+            if used > budget_bytes_per_layer:
+                continue
+            if value > best_value or (value == best_value and used > best_bytes):
+                best_mask, best_value, best_bytes = mask, value, used
+        return [i.name for bit, i in enumerate(items) if best_mask >> bit & 1]
+    return _greedy_keep_set(items, budget_bytes_per_layer, evict_s)
+
+
+def plan_joint_policy(
+    intermediates: Sequence[Intermediate],
+    budget_bytes_per_layer: Optional[int],
+    *,
+    offload: bool = True,
+    dma_gbps: Optional[float] = None,
+    device_tflops: Optional[float] = None,
+) -> RematPlan:
+    """Jointly choose keep / recompute / offload per intermediate.
+
+    Minimises the estimated per-layer step-time cost (recompute FLOPs at
+    ``device_tflops`` vs DMA round trips at ``dma_gbps``) subject to the
+    per-layer HBM budget.  ``budget_bytes_per_layer`` of None means "save
+    everything" (keeping is free at step time, so with no budget pressure
+    nothing is ever evicted); 0 means every intermediate is evicted down
+    its cheaper lane.  ``offload=False`` disables the offload lane (pure
+    save-vs-recompute — the classic remat knapsack).  ``dma_gbps`` of
+    ``math.inf`` prices DMA as free, reproducing the deprecated
+    ``offload_dropped=True`` decisions (with the traffic still accounted).
+    """
+    dma_gbps = DEFAULT_DMA_GBPS if dma_gbps is None else dma_gbps
+    device_tflops = DEFAULT_DEVICE_TFLOPS if device_tflops is None \
+        else device_tflops
+
+    cost: Dict[str, float] = {}
+    lane: Dict[str, str] = {}
+    for i in intermediates:
+        cost[i.name], lane[i.name] = _evict_cost_s(
+            i, offload=offload, dma_gbps=dma_gbps,
+            device_tflops=device_tflops)
+
+    if budget_bytes_per_layer is None:
+        saved = [i.name for i in intermediates]
+    elif offload and math.isinf(dma_gbps):
+        # deprecated free-DMA mode: every avoided cost is zero, so the
+        # knapsack is degenerate — use the historical greedy flops-per-byte
+        # fill so the alias reproduces its old keep/offload sets exactly
+        saved = _greedy_keep_set(intermediates, budget_bytes_per_layer, cost)
+    else:
+        saved = _keep_set(intermediates, budget_bytes_per_layer, cost)
+
     saved_set = set(saved)
-    dropped = tuple(i.name for i in intermediates if i.name not in saved_set)
-    if offload_dropped:
-        return RematPlan(
-            saved=tuple(saved),
-            dropped=(),
-            saved_bytes_per_layer=used,
-            recompute_flops_per_layer=0.0,
-            offloaded=dropped,
-        )
+    by_name = {i.name: i for i in intermediates}
+    dropped = tuple(i.name for i in intermediates
+                    if i.name not in saved_set and lane[i.name] == RECOMPUTE)
+    offloaded = tuple(i.name for i in intermediates
+                      if i.name not in saved_set and lane[i.name] == OFFLOAD)
     return RematPlan(
-        saved=tuple(saved),
+        saved=tuple(i.name for i in intermediates if i.name in saved_set),
         dropped=dropped,
-        saved_bytes_per_layer=used,
+        saved_bytes_per_layer=sum(
+            by_name[n].bytes_per_layer for n in saved_set),
         recompute_flops_per_layer=sum(
-            i.recompute_flops for i in intermediates if i.name not in saved_set
-        ),
+            by_name[n].recompute_flops for n in dropped),
+        offloaded=offloaded,
+        offload_dma_bytes_per_layer=sum(
+            2 * by_name[n].bytes_per_layer for n in offloaded),
+        est_step_time_s_per_layer=sum(
+            cost[n] for n in dropped + offloaded),
     )
+
+
+def plan_step_time_s(plan: RematPlan, intermediates: Sequence[Intermediate],
+                     *, dma_gbps: Optional[float] = None,
+                     device_tflops: Optional[float] = None) -> float:
+    """Re-price a plan's decisions under a given hardware cost model.
+
+    The honest per-layer step-time estimate of *any* RematPlan — including
+    plans made under the deprecated free-DMA pricing — so alternatives can
+    be compared on equal terms (the joint-optimality acceptance check).
+    """
+    dma_gbps = DEFAULT_DMA_GBPS if dma_gbps is None else dma_gbps
+    device_tflops = DEFAULT_DEVICE_TFLOPS if device_tflops is None \
+        else device_tflops
+    by_name = {i.name: i for i in intermediates}
+    total = 0.0
+    for n in plan.dropped:
+        total += _lane_costs_s(by_name[n], dma_gbps, device_tflops)[0]
+    for n in plan.offloaded:
+        total += _lane_costs_s(by_name[n], dma_gbps, device_tflops)[1]
+    return total
+
+
+def plan_checkpoint_policy(
+    intermediates: Sequence[Intermediate],
+    budget_bytes_per_layer: Optional[int],
+    *,
+    offload_dropped: bool = False,
+) -> RematPlan:
+    """Deprecated two-knob planner — use :func:`plan_joint_policy`.
+
+    ``offload_dropped=False`` is the classic save-vs-recompute knapsack
+    (the joint planner with the offload lane disabled — decisions are
+    identical).  ``offload_dropped=True`` prices DMA as free, so every
+    budget-missing intermediate offloads regardless of whether recomputing
+    it would be cheaper; it keeps its historical quirk that offload with
+    *no* budget streams every intermediate through host (a budget-less
+    config would otherwise keep everything and silently never offload).
+    """
+    if offload_dropped:
+        warnings.warn(
+            "offload_dropped=True is deprecated: it prices DMA as free and "
+            "offloads every budget-missing intermediate regardless of cost; "
+            "use plan_joint_policy(..., offload=True, dma_gbps=...) for the "
+            "priced three-way decision",
+            DeprecationWarning, stacklevel=2)
+        budget = 0 if budget_bytes_per_layer is None else budget_bytes_per_layer
+        return plan_joint_policy(intermediates, budget, offload=True,
+                                 dma_gbps=math.inf)
+    return plan_joint_policy(intermediates, budget_bytes_per_layer,
+                             offload=False)
 
 
 def tag(name: str, x):

@@ -118,7 +118,7 @@ def moe_forward(cfg: ModelConfig, params, x: jax.Array) -> Tuple[jax.Array, jax.
         gate = jnp.einsum("gecd,edf->gecf", expert_in,
                           params["gate"].astype(dt))
         up = jnp.einsum("gecd,edf->gecf", expert_in, params["up"].astype(dt))
-        hidden = jax.nn.silu(gate) * up
+        hidden = tag("mlp_hidden", jax.nn.silu(gate) * up)
         hidden = constrain(hidden, "batch", "expert", None, "mlp")
         expert_out = jnp.einsum("gecf,efd->gecd", hidden,
                                 params["down"].astype(dt))
@@ -153,7 +153,7 @@ def moe_forward(cfg: ModelConfig, params, x: jax.Array) -> Tuple[jax.Array, jax.
         gate = jnp.einsum("gecd,edf->gecf", expert_in,
                           params["gate"].astype(dt))
         up = jnp.einsum("gecd,edf->gecf", expert_in, params["up"].astype(dt))
-        hidden = jax.nn.silu(gate) * up
+        hidden = tag("mlp_hidden", jax.nn.silu(gate) * up)
         hidden = constrain(hidden, "batch", "expert", None, "mlp")
         expert_out = jnp.einsum("gecf,efd->gecd", hidden,
                                 params["down"].astype(dt))

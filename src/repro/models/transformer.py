@@ -13,7 +13,10 @@ Families:
 
 All stacks scan over layers with stacked parameters; the remat policy comes
 from the core compile facade (``repro.core.compile_plan``) so the paper's
-lifespan analysis decides which intermediates stay resident in HBM.
+lifespan analysis decides, per tagged intermediate, whether it stays
+resident in HBM, is recomputed in backward, or is offloaded to pinned host
+memory — the joint keep/recompute/offload planner priced by the
+``ModelConfig`` hardware knobs (``dma_gbps``, ``device_tflops``).
 """
 
 from __future__ import annotations
@@ -94,10 +97,11 @@ def block_forward(cfg: ModelConfig, p, x, positions, *,
     hn = layers.rmsnorm(p["ln2"], h, cfg.norm_eps)
     if cfg.is_moe:
         mo, aux = moe.moe_forward(cfg, p["moe"], hn)
-        h = h + mo
+        h = h + tag("mlp_out", mo)
     elif cfg.d_ff:
-        h = h + layers.swiglu(p["mlp"], hn, layers._dtype(cfg.dtype),
-                              skip=cfg.mlp_skip)
+        h = h + tag("mlp_out", layers.swiglu(p["mlp"], hn,
+                                             layers._dtype(cfg.dtype),
+                                             skip=cfg.mlp_skip))
     h = tag("block_out", h)
     h = constrain(h, "batch", "seq", "embed")
     return h, aux
@@ -125,6 +129,9 @@ def maybe_scan(cfg: ModelConfig, body, carry, xs):
 
 
 def _remat_policy(cfg: ModelConfig, batch_tokens: int):
+    # default MemoryPlanConfig: every remat/offload/hardware knob follows
+    # cfg, so the installed policy always matches the plan make_train_step
+    # reports for the same config
     return compile_plan(cfg, batch_tokens=batch_tokens).offload_policy
 
 

@@ -109,7 +109,11 @@ def make_train_step(model: Model, optimizer: Optimizer, mesh: Mesh,
     "pod" axis); there is no separate multi-pod switch here.  The memory
     plan is compiled from the ``ModelConfig`` remat/offload knobs — the
     same knobs the model's own checkpoint policy reads — so the reported
-    ``memory_plan`` always matches what the jitted step installs.
+    ``memory_plan`` always matches what the jitted step installs.  With
+    ``cfg.offload`` on, that plan is the joint keep/recompute/offload
+    decision priced by ``cfg.dma_gbps``/``cfg.device_tflops``; its honest
+    costs (``dma_bytes``, ``recompute_flops_per_layer``) travel with the
+    bundle's ``memory_plan.report()``.
     """
     cfg = model.cfg
     act_rules = activation_rules(cfg, shape, mesh)

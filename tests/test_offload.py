@@ -262,16 +262,20 @@ def test_pool_cd_read_is_a_recorded_access():
 
 
 def test_offload_dropped_with_no_budget_streams_everything():
-    """cfg.offload=True must not silently no-op under the default
-    (budget-less) config: no budget + offload == keep nothing on device."""
+    """The deprecated free-DMA alias must not silently no-op under the
+    default (budget-less) config: no budget + offload == keep nothing on
+    device — and its DMA traffic is now accounted, not zeroed."""
     from repro.core.remat_policy import (plan_checkpoint_policy,
                                          transformer_intermediates)
     inter = transformer_intermediates(
         batch_tokens=1024, d_model=256, d_ff=1024, n_q_heads=4,
         n_kv_heads=2, head_dim=64)
-    plan = plan_checkpoint_policy(inter, None, offload_dropped=True)
+    with pytest.warns(DeprecationWarning):
+        plan = plan_checkpoint_policy(inter, None, offload_dropped=True)
     assert set(plan.offloaded) == {i.name for i in inter}
     assert plan.saved == () and plan.dropped == ()
+    assert plan.offload_dma_bytes_per_layer == \
+        2 * sum(i.bytes_per_layer for i in inter)
     assert plan.policy() is not None
 
 

@@ -196,11 +196,20 @@ def test_model_config_remat_off_is_empty_plan():
 
 def test_model_config_knobs_override_cfg():
     cfg = _tiny_cfg(remat=True, offload=False)
-    cp = compile_plan(cfg, MemoryPlanConfig(remat_budget_bytes=0,
-                                            offload_dropped=True),
-                      batch_tokens=1024)
+    # deprecated alias: free-DMA offload-everything, now with a warning
+    with pytest.warns(DeprecationWarning):
+        cp = compile_plan(cfg, MemoryPlanConfig(remat_budget_bytes=0,
+                                                offload_dropped=True),
+                          batch_tokens=1024)
     assert cp.remat_plan.saved == ()
     assert cp.remat_plan.offloaded       # everything streams through host
+    assert cp.dma_bytes > 0              # the traffic is no longer hidden
+    # the replacement knob: priced offload lane through the same facade
+    cp2 = compile_plan(cfg, MemoryPlanConfig(remat_budget_bytes=0,
+                                             offload=True),
+                       batch_tokens=1024)
+    assert set(cp2.remat_plan.dropped) | set(cp2.remat_plan.offloaded) \
+        == {"qkv", "attn_out", "mlp_hidden", "mlp_out"}
 
 
 def test_model_config_requires_batch_tokens():

@@ -11,10 +11,14 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 python -m pytest -q -m "not slow" "$@"
 
 # compile_plan smoke: the facade must take a zoo model from graph to a
-# validated, co-optimised plan (peak <= no-swap baseline) in one call.
+# validated, co-optimised plan (peak <= no-swap baseline) in one call,
+# and a transformer ModelConfig to a joint keep/recompute/offload plan
+# with honest DMA accounting.
 PYTHONPATH=src python - <<'EOF'
-from repro.core import MemoryPlanConfig, compile_plan
+from repro.core import MemoryPlanConfig, compile_plan, plan_step_time_s
+from repro.core.remat_policy import transformer_intermediates
 from repro.core.zoo import ZOO
+from repro.configs import ARCHS
 
 for name in ("lenet5", "resnet18"):
     cp = compile_plan(ZOO[name](),
@@ -26,11 +30,43 @@ for name in ("lenet5", "resnet18"):
     print(f"compile_plan smoke {name}: peak={cp.peak_bytes} "
           f"base={cp.baseline.arena_bytes} swaps={len(cp.swapped_names())} "
           f"dropped={len(cp.coopt.dropped)}")
+
+# model-config joint-plan smoke: a tight budget must force evictions down
+# both priced lanes, and the plan's DMA traffic must be visible end-to-end.
+cfg = ARCHS["llama3.2-3b"]
+hw = {"dma_gbps": 80.0, "device_tflops": 200.0}
+inter = transformer_intermediates(
+    batch_tokens=2048, d_model=cfg.d_model, d_ff=cfg.d_ff,
+    n_q_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim)
+cp = compile_plan(cfg, MemoryPlanConfig(remat=True,
+                                        remat_budget_bytes=1 << 20,
+                                        offload=True, **hw),
+                  batch_tokens=2048)
+r = cp.report()
+assert cp.remat_plan.dropped and cp.remat_plan.offloaded, "joint plan must mix lanes"
+assert cp.dma_bytes == r["offload_dma_bytes_per_layer"] * cfg.n_layers > 0
+assert r["recompute_flops_per_layer"] > 0
+pure = compile_plan(cfg, MemoryPlanConfig(remat=True,
+                                          remat_budget_bytes=1 << 20,
+                                          offload=False), batch_tokens=2048)
+assert (plan_step_time_s(cp.remat_plan, inter, **hw)
+        < plan_step_time_s(pure.remat_plan, inter, **hw))
+print(f"compile_plan smoke {cfg.name}: decisions={r['remat_decisions']} "
+      f"dma={cp.dma_bytes} est={r['est_step_time_s_per_layer']:.6f}s/layer "
+      f"lowering={r.get('offload_lowering')}")
 EOF
 
-# benchmark JSON emission: the swap benches must keep producing the
-# machine-readable perf-trajectory file.
-PYTHONPATH=src python -m benchmarks.run --only swap_tradeoff \
+# benchmark JSON emission: the swap benches (graph + model path) must keep
+# producing the machine-readable perf-trajectory file.
+PYTHONPATH=src python -m benchmarks.run --only swap_tradeoff,swap_model \
     --bench-json results/BENCH_swap.json > /dev/null
 test -s results/BENCH_swap.json
+PYTHONPATH=src python - <<'EOF'
+import json
+recs = json.load(open("results/BENCH_swap.json"))["records"]
+model_rows = [r for r in recs if r["bench"] == "swap_model"]
+assert model_rows, "BENCH_swap.json must carry model-path rows"
+assert any(r["dma_bytes"] > 0 for r in model_rows)
+assert all("remat_decisions" in r for r in model_rows)
+EOF
 echo "BENCH_swap.json emitted ($(wc -c < results/BENCH_swap.json) bytes)"
