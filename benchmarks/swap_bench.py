@@ -14,10 +14,14 @@ total DMA traffic, and what the schedule/planner co-optimisation fixed
 point dropped.  ``swap_model`` rows cover the model-config (TPU) path: the
 joint keep/recompute/offload planner over transformer archs and budget
 sweeps, with per-plan DMA bytes, decisions, and the estimated step-time
-cost against the pure-remat and offload-everything alternatives.  A final
-set of rows runs the compiled plan's executor end-to-end on small models
-and reports *measured* high-water marks and DMA bytes, proving schedule
-and execution agree (late_swap_ins must be 0).
+cost against the pure-remat and offload-everything alternatives.
+``host_planner`` rows sweep the pinned-host pool's ArenaAllocator
+(sorting | bestfit | segregated | buddy) and report packed bytes,
+fragmentation and in-place-prefetch elisions against the legacy
+pack-every-copy baseline.  A final set of rows runs the compiled plan's
+executor end-to-end on small models and reports *measured* high-water
+marks (HBM and host pool) and DMA bytes, proving schedule and execution
+agree (late_swap_ins must be 0).
 
 Besides the CSV rows, every run collects machine-readable records; the
 driver (``benchmarks/run.py``) writes them to ``results/BENCH_swap.json``
@@ -159,6 +163,47 @@ def bench_swap_model():
     return rows
 
 
+# Host-pool allocator sweep: pack the pinned-host pool with each registered
+# ArenaAllocator and report bytes + fragmentation (1 - utilization) per
+# planner, plus the in-place-prefetch elisions that removed copies from the
+# pool entirely.  ``legacy_host_bytes`` is what the pre-allocator-layer
+# code charged: a SortingPlanner pack over EVERY offloaded copy (elision
+# ignored, reuse across disjoint windows included) — the baseline the
+# fragmentation-aware pool must strictly beat.
+HOST_PLANNERS = ("sorting", "bestfit", "segregated", "buddy")
+# lenet5 at batch 16 keeps several ragged-size copies in the pool, so the
+# class-rounding planners' internal padding is visible in the sweep
+HOST_SWEEP_MODELS = (("vgg16", 32), ("resnet18", 32), ("lenet5", 16))
+
+
+def bench_host_planner():
+    from repro.core.plan import MemoryPlanConfig, compile_plan
+    from repro.core.planner import legacy_host_pool_bytes
+    from repro.core.zoo import ZOO
+
+    rows = []
+    for name, batch in HOST_SWEEP_MODELS:
+        graph = ZOO[name]()
+        for hp in HOST_PLANNERS:
+            cp = compile_plan(
+                graph, MemoryPlanConfig(planner="bestfit", host_planner=hp,
+                                        min_idle_phases=3,
+                                        min_bytes=1 << 12), batch=batch)
+            r = cp.report()
+            legacy = legacy_host_pool_bytes(cp.ordered, cp.schedule)
+            rows.append((
+                f"host_pool/{name}/{hp}",
+                r["host_pool_bytes"] / MIB,
+                f"MiB_host legacy={legacy / MIB:.2f} "
+                f"frag={1.0 - r['host_utilization']:.3f} "
+                f"inplace={r['inplace_prefetch_count']} "
+                f"nswap={r['n_swaps']} dma={r['dma_bytes'] / MIB:.2f}"))
+            JSON_RECORDS.append({
+                "bench": "host_planner", "model": name, "batch": batch,
+                "legacy_host_bytes": legacy, **r})
+    return rows
+
+
 EXEC_MODELS = (("lenet5", 16), ("model_b_conv2d", 8))
 
 
@@ -182,20 +227,25 @@ def bench_swap_exec():
         if g.layers[-1].kind == "loss_ce":
             y = jax.nn.one_hot(np.argmax(np.asarray(y), -1), y.shape[-1])
         _, _, stats = cp.loss_and_grads(params, x, y)
+        replay_match = stats.replayed_ops == cp.lowered.ops
         rows.append((
             f"swap_exec/{name}",
             stats.hbm_high_water / MIB,
             f"MiB_measured planned={stats.planned_peak / MIB:.2f} "
+            f"host={stats.host_high_water / MIB:.2f} "
             f"dma={stats.dma_bytes / MIB:.2f} "
             f"swaps={stats.swap_outs}/{stats.prefetches} "
-            f"late={stats.late_swap_ins}"))
+            f"late={stats.late_swap_ins} replay_match={replay_match}"))
         JSON_RECORDS.append({
             "bench": "swap_exec", "model": name, "batch": batch,
             "hbm_high_water": stats.hbm_high_water,
             "planned_peak": stats.planned_peak,
+            "host_high_water": stats.host_high_water,
+            "planned_host_pool": stats.planned_host_pool,
             "measured_dma_bytes": stats.dma_bytes,
             "swap_outs": stats.swap_outs, "prefetches": stats.prefetches,
             "late_swap_ins": stats.late_swap_ins,
+            "replay_matches_compiled": replay_match,
             **cp.report()})
     return rows
 
@@ -203,5 +253,6 @@ def bench_swap_exec():
 ALL = {
     "swap_tradeoff": bench_swap_tradeoff,
     "swap_model": bench_swap_model,
+    "host_planner": bench_host_planner,
     "swap_exec": bench_swap_exec,
 }

@@ -1,5 +1,6 @@
 """Quickstart: train a small LM with the full stack (data pipeline ->
-sharded train step -> checkpoint -> restore), on whatever devices exist.
+sharded train step -> checkpoint -> restore), on whatever devices exist,
+then compile a layer-basis graph down to its lowered ExecutionSchedule.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,6 +12,33 @@ import jax
 from repro.configs import ARCHS
 from repro.models.model import build_model, reduce_config
 from repro.train.trainer import quick_train
+
+
+def graph_plan_demo() -> None:
+    """The layer-basis path: one compile step from graph to executor ops,
+    with the pinned-host pool packed by its own allocator."""
+    from repro.core import MemoryPlanConfig, compile_plan
+    from repro.core.zoo import ZOO
+
+    cp = compile_plan(
+        ZOO["lenet5"](),
+        MemoryPlanConfig(planner="bestfit", host_planner="segregated",
+                         min_idle_phases=3, min_bytes=1 << 12),
+        batch=16)
+    r = cp.report()
+    print(f"== lenet5 graph plan (planner={r['planner']}, "
+          f"host_planner={r['host_planner']}) ==")
+    print(f"peak={r['peak_bytes'] / 2**20:.2f} MiB "
+          f"(baseline {r['baseline_peak_bytes'] / 2**20:.2f}) "
+          f"host={r['host_pool_bytes'] / 2**20:.2f} MiB "
+          f"dma={r['dma_bytes'] / 2**20:.2f} MiB")
+    print(f"device_utilization={r['device_utilization']:.3f} "
+          f"host_utilization={r['host_utilization']:.3f} "
+          f"inplace_prefetches={r['inplace_prefetch_count']}")
+    print(f"lowered schedule ops: {r['schedule_ops']}")
+    for op in cp.lowered.transfers()[:4]:
+        print(f"  {type(op).__name__:8s} eo={op.eo:3d} {op.tensor} "
+              f"dev@{op.device_offset} host@{op.host_offset}")
 
 
 def main() -> None:
@@ -39,6 +67,8 @@ def main() -> None:
         out2 = quick_train(cfg, steps=40, seq_len=64, global_batch=8,
                            ckpt_dir=ckpt_dir)
         print(f"resumed loss: {out2['final_loss']:.3f}")
+
+    graph_plan_demo()
 
 
 if __name__ == "__main__":

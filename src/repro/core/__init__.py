@@ -34,14 +34,21 @@ the schedule/planner co-optimisation the free functions skip.
 
 import warnings as _warnings
 
-from repro.core.plan import (CompiledMemoryPlan, CooptStats, MemoryPlanConfig,
-                             compile_plan)
+from repro.core.plan import (CompiledMemoryPlan, Compute, CooptStats,
+                             ExecutionSchedule, Free, MemoryPlanConfig,
+                             Prefetch, SwapOut, compile_plan, lower_schedule)
+from repro.core.planner import PLANNERS, ArenaAllocator, get_planner
 from repro.core.remat_policy import (RematPlan, plan_joint_policy,
                                      plan_step_time_s)
 
 __all__ = [
     # the compile API
     "MemoryPlanConfig", "CompiledMemoryPlan", "CooptStats", "compile_plan",
+    # the lowered executor-facing IR
+    "ExecutionSchedule", "Compute", "SwapOut", "Prefetch", "Free",
+    "lower_schedule",
+    # the pluggable allocator layer (device arena + host pool)
+    "ArenaAllocator", "PLANNERS", "get_planner",
     # the joint keep/recompute/offload planner (model-config path internals,
     # exported for cost-model comparisons and tests)
     "RematPlan", "plan_joint_policy", "plan_step_time_s",

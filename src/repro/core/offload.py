@@ -18,10 +18,17 @@ The schedule produced here is consumed in two places:
 * :func:`repro.core.planner.plan_memory_swapped` — plans the device arena
   with swapped tensors *split* into two residency intervals (pre-swap and
   post-prefetch), so the vacated bytes are reusable by other tensors, plus
-  a second host-pool arena for the offloaded copies;
-* :func:`repro.core.planned_exec.swap_planned_loss_and_grads` — executes
-  the schedule phase-by-phase during the layer-basis walk, with an HBM
-  high-water-mark tracker proving the planned peak is respected.
+  a second host-pool arena for the offloaded copies packed by its own
+  :class:`repro.core.planner.ArenaAllocator`.  The swap-aware placement
+  pass there may lower a decision to an *in-place prefetch*
+  (``OffloadDecision.inplace``): the packed arena kept its bytes untouched
+  at a stable offset, so the swap moves no data at all;
+* :func:`repro.core.plan.lower_schedule` — lowers the decisions (plus the
+  compute phases and frees) into the flat, typed
+  :class:`repro.core.plan.ExecutionSchedule` that
+  :func:`repro.core.planned_exec.swap_planned_loss_and_grads` replays op
+  by op, with HBM and host-pool high-water trackers proving the planned
+  bounds are respected.
 
 On TPU the same decisions lower to ``jax.checkpoint`` offload policies via
 :func:`offload_policy` (device->pinned-host copies overlapped with compute
@@ -76,6 +83,12 @@ class OffloadDecision:
     write_eo: int
     read_eo: int
     prefetch_at_eo: int
+    # Set by the swap-aware placement pass (plan_memory_swapped): the packed
+    # arena kept this tensor's bytes untouched at a stable offset through
+    # the idle window, so re-residency needs no copy — the decision moves
+    # no data (no host slot, no DMA) but keeps the planner's freedom to
+    # reuse the bytes.  See SwapAwarePlan.inplace_prefetch_count.
+    inplace: bool = False
 
     @property
     def idle_phases(self) -> int:
@@ -121,14 +134,17 @@ def make_schedule(decisions: Sequence[OffloadDecision]) -> OffloadSchedule:
     prefetch) so callers can restrict a schedule to a subset of decisions —
     the primitive the schedule/planner co-optimisation loop in
     :mod:`repro.core.plan` iterates on.  Non-vacating decisions are dropped,
-    matching :func:`plan_offload`'s own filtering.
+    matching :func:`plan_offload`'s own filtering.  In-place decisions stay
+    in the schedule (their residency split is part of the packed plan) but
+    move no data, so they contribute to no aggregate.
     """
     chosen = tuple(d for d in decisions if d.vacates)
-    saved = sum(d.nbytes for d in chosen)
+    moved = tuple(d for d in chosen if not d.inplace)
+    saved = sum(d.nbytes for d in moved)
     peak = 0
-    for d in chosen:
+    for d in moved:
         inflight = sum(
-            o.nbytes for o in chosen
+            o.nbytes for o in moved
             if o.prefetch_at_eo <= d.prefetch_at_eo <= o.read_eo
         )
         peak = max(peak, inflight)

@@ -43,6 +43,38 @@ resulting :class:`CompiledMemoryPlan` reports honest prices for both
 eviction lanes (``dma_bytes`` covers model plans too, not just graph
 schedules).  The deprecated ``offload_dropped`` knob survives as an alias
 meaning "DMA is free" (offload everything that misses the budget).
+
+Graph plans additionally lower to an :class:`ExecutionSchedule` — a flat
+list of typed ops (:class:`Compute`, :class:`SwapOut`, :class:`Prefetch`,
+:class:`Free`), each carrying the tensor name, its arena offset and its EO
+index — which the layer-basis executor walks directly instead of
+re-interpreting the :class:`OffloadSchedule` at run time.  Each
+``SwapOut``/``Prefetch`` op names one stream-ready transfer, the staging
+point for lowering onto real async device streams.
+
+MemoryPlanConfig knob table
+---------------------------
+
+======================  =====================================================
+knob (default)          meaning
+======================  =====================================================
+``planner``             device-arena allocator: sorting | bestfit |
+(``"sorting"``)         segregated | buddy | worstcase
+``host_planner``        pinned-host pool allocator (same registry); the
+(``"sorting"``)         host pool is packed over offloaded-copy lifetimes
+``swap`` (True)         enable proactive host swapping (False = plain plan)
+``min_idle_phases``     minimum EO idle window for a swap candidate (4)
+``min_bytes``           minimum tensor size worth a DMA descriptor (1 MiB)
+``prefetch_margin``     phases before the post-gap read to prefetch (2)
+``hbm_budget_bytes``    stop choosing candidates past this reclaim (None)
+``cooptimize`` (True)   iterate schedule <-> packer to a fixed point
+``remat`` (None)        model path: None = follow ``cfg.remat``
+``remat_budget_bytes``  per-layer activation budget for the knapsack (None)
+``offload`` (None)      model path: enable the priced offload eviction lane
+``dma_gbps`` (None)     host-DMA bandwidth pricing the offload lane
+``device_tflops``       device throughput pricing the recompute lane (None)
+``offload_dropped``     DEPRECATED "DMA is free" alias (None)
+======================  =====================================================
 """
 
 from __future__ import annotations
@@ -56,7 +88,8 @@ from repro.core.execution_order import OrderedTensors, compute_execution_order
 from repro.core.graph import LayerGraph
 from repro.core.offload import (OffloadSchedule, make_schedule,
                                 offload_lowering, plan_offload)
-from repro.core.planner import PLANNERS, Plan, SwapAwarePlan, plan_memory_swapped
+from repro.core.planner import (Plan, SwapAwarePlan, get_planner,
+                                plan_memory_swapped)
 from repro.core.remat_policy import (RematPlan, plan_joint_policy,
                                      transformer_intermediates)
 
@@ -68,7 +101,10 @@ class MemoryPlanConfig:
     Arena / swap knobs (layer-graph path; see :mod:`repro.core.offload` for
     the knob reference):
 
-    ``planner``          arena packing strategy: sorting | bestfit | worstcase
+    ``planner``          device-arena allocator: sorting | bestfit |
+                         segregated | buddy | worstcase
+    ``host_planner``     pinned-host pool allocator (same registry); packs
+                         the offloaded copies' [swap_out, read] lifetimes
     ``swap``             enable proactive host swapping (False = plain plan)
     ``min_idle_phases``  minimum EO idle window for a swap candidate
     ``min_bytes``        minimum tensor size worth a DMA descriptor
@@ -102,6 +138,7 @@ class MemoryPlanConfig:
     """
 
     planner: str = "sorting"
+    host_planner: str = "sorting"
     swap: bool = True
     min_idle_phases: int = 4
     min_bytes: int = 1 << 20
@@ -127,6 +164,147 @@ class CooptStats:
     single_pass_dma_bytes: int       # DMA traffic before co-optimisation
 
 
+# ---------------------------------------------------------------------------
+# ExecutionSchedule: the lowered, executor-facing IR
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Compute:
+    """Run one layer phase (``kind`` is "F" / "CG" / "CD") at EO ``eo``."""
+    eo: int
+    layer: str
+    kind: str
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapOut:
+    """Background D2H DMA during phase ``eo``: copy ``tensor`` from device
+    arena offset ``device_offset`` to host-pool offset ``host_offset`` and
+    release the device bytes when the phase completes."""
+    eo: int
+    tensor: str
+    nbytes: int
+    device_offset: int
+    host_offset: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Prefetch:
+    """H2D DMA issued at the start of phase ``eo``: copy ``tensor`` back
+    from host-pool offset ``host_offset`` into device arena offset
+    ``device_offset``; the transfer must complete by ``read_eo`` (the
+    double-buffer slot retires there)."""
+    eo: int
+    tensor: str
+    nbytes: int
+    device_offset: int
+    host_offset: int
+    read_eo: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Free:
+    """Release ``tensor``'s arena bytes after its last access (phase ``eo``)."""
+    eo: int
+    tensor: str
+    nbytes: int
+    device_offset: int
+
+
+# Within one EO phase: prefetches start the phase, compute runs, the
+# background swap-out drains at the end, then expired tensors are freed.
+_OP_RANK = {Prefetch: 0, Compute: 1, SwapOut: 2, Free: 3}
+
+ScheduleOp = Union[Compute, SwapOut, Prefetch, Free]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionSchedule:
+    """The lowered memory plan: one flat op list the executor walks.
+
+    Every scheduling decision is resolved at compile time — which tensor
+    moves, when, between which arena offsets — so the executor carries no
+    policy of its own: it replays the ops in order.  In-place-prefetch
+    decisions emit no ops (no data moves for them); their re-residency is a
+    plan-level fact.  Each ``SwapOut``/``Prefetch`` names one stream-ready
+    transfer: the staging point for the async double-buffer lowering.
+    """
+
+    ops: Tuple[ScheduleOp, ...]
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for op in self.ops:
+            key = type(op).__name__.lower()
+            out[key] = out.get(key, 0) + 1
+        return out
+
+    def transfers(self) -> Tuple[ScheduleOp, ...]:
+        """The DMA ops only, in issue order."""
+        return tuple(op for op in self.ops
+                     if isinstance(op, (SwapOut, Prefetch)))
+
+
+def lower_schedule(ordered: OrderedTensors, schedule: OffloadSchedule,
+                   plan: Optional[Union[Plan, SwapAwarePlan]] = None
+                   ) -> ExecutionSchedule:
+    """Lower (EO analysis, swap schedule, packed plan) to the flat op list.
+
+    ``plan`` provides arena offsets; without one (hand-wired callers) the
+    offsets are -1 ("unplaced").  Only ``X:`` decisions lower to transfer
+    ops: ``S:`` scratch tensors never enter the layer-output store, so
+    their swap is plan-level only (arena residency), nothing to move.
+    In-place decisions lower to nothing — their bytes never move.
+    """
+    swap_aware = isinstance(plan, SwapAwarePlan)
+
+    def device_offset(name: str, *, post: bool) -> int:
+        if swap_aware:
+            rs = plan.residencies.get(name)
+            if rs:
+                ordered_rs = sorted(rs, key=lambda r: r.min_eo)
+                return ordered_rs[-1 if post else 0].offset
+        elif isinstance(plan, Plan) and name in plan.placements:
+            return plan.placements[name].offset
+        return -1
+
+    def host_offset(name: str) -> int:
+        if swap_aware:
+            hp = plan.host.placements.get(name + "@host")
+            if hp is not None:
+                return hp.offset
+        return -1
+
+    ops: List[ScheduleOp] = [
+        Compute(eo=eo, layer=lname, kind=kind)
+        for eo, lname, kind in ordered.phase_schedule()
+    ]
+    for d in schedule.decisions:
+        if not d.vacates or d.inplace or not d.name.startswith("X:"):
+            continue
+        if d.name not in ordered.tensors:
+            raise ValueError(
+                f"offload schedule references {d.name!r}, which the "
+                f"execution-order analysis does not know — schedule and "
+                f"ordered tensors come from different graphs?")
+        ops.append(SwapOut(eo=d.swap_out_eo, tensor=d.name, nbytes=d.nbytes,
+                           device_offset=device_offset(d.name, post=False),
+                           host_offset=host_offset(d.name)))
+        ops.append(Prefetch(eo=d.prefetch_at_eo, tensor=d.name,
+                            nbytes=d.nbytes,
+                            device_offset=device_offset(d.name, post=True),
+                            host_offset=host_offset(d.name),
+                            read_eo=d.read_eo))
+    for t in ordered.planned_tensors():
+        if t.name.startswith("X:"):
+            ops.append(Free(eo=t.max_eo, tensor=t.name, nbytes=t.nbytes,
+                            device_offset=device_offset(t.name, post=True)))
+    ops.sort(key=lambda op: (op.eo, _OP_RANK[type(op)],
+                             getattr(op, "tensor", ""),
+                             getattr(op, "layer", "")))
+    return ExecutionSchedule(ops=tuple(ops))
+
+
 @dataclasses.dataclass
 class CompiledMemoryPlan:
     """Everything one compile step produced, behind one handle.
@@ -146,6 +324,8 @@ class CompiledMemoryPlan:
     baseline: Optional[Plan] = None                      # no-swap, same planner
     coopt: Optional[CooptStats] = None
     batch: Optional[int] = None
+    # the lowered, executor-facing op list (graph path)
+    lowered: Optional[ExecutionSchedule] = None
 
     model_config: Any = None
     remat_plan: Optional[RematPlan] = None
@@ -189,6 +369,25 @@ class CompiledMemoryPlan:
             if isinstance(self.plan, SwapAwarePlan) else ()
 
     @property
+    def inplace_prefetch_count(self) -> int:
+        """Swaps whose bytes survived in place: no host slot, no DMA."""
+        return self.plan.inplace_prefetch_count \
+            if isinstance(self.plan, SwapAwarePlan) else 0
+
+    @property
+    def device_utilization(self) -> Optional[float]:
+        if isinstance(self.plan, SwapAwarePlan):
+            return self.plan.device.utilization()
+        if self.plan is not None:
+            return self.plan.utilization()
+        return None
+
+    @property
+    def host_utilization(self) -> Optional[float]:
+        return self.plan.host.utilization() \
+            if isinstance(self.plan, SwapAwarePlan) else None
+
+    @property
     def offload_policy(self):
         """The ``jax.checkpoint`` policy realising this plan's keep/offload
         decisions, or None when no policy applies.
@@ -224,6 +423,7 @@ class CompiledMemoryPlan:
             schedule=self.schedule,
             ordered=self.ordered,
             plan=self.plan if isinstance(self.plan, SwapAwarePlan) else None,
+            lowered=self.lowered,
         )
 
     def _require_graph(self, what: str) -> None:
@@ -249,6 +449,14 @@ class CompiledMemoryPlan:
             out["graph"] = self.graph.name
             out["batch"] = self.batch
             out["baseline_peak_bytes"] = self.baseline.arena_bytes
+            out["host_planner"] = self.config.host_planner
+            out["inplace_prefetch_count"] = self.inplace_prefetch_count
+            if self.device_utilization is not None:
+                out["device_utilization"] = self.device_utilization
+            if self.host_utilization is not None:
+                out["host_utilization"] = self.host_utilization
+            if self.lowered is not None:
+                out["schedule_ops"] = self.lowered.counts()
         if self.coopt is not None:
             out["coopt_rounds"] = self.coopt.rounds
             out["coopt_dropped"] = list(self.coopt.dropped)
@@ -276,20 +484,23 @@ class CompiledMemoryPlan:
 # Schedule/planner co-optimisation: iterate to a fixed point
 # ---------------------------------------------------------------------------
 
-def _cooptimize(ordered: OrderedTensors, schedule: OffloadSchedule,
-                plan: SwapAwarePlan, planner: str
-                ) -> Tuple[OffloadSchedule, SwapAwarePlan, int, List[str]]:
+def _cooptimize(ordered: OrderedTensors, plan: SwapAwarePlan, planner: str,
+                host_planner: str
+                ) -> Tuple[SwapAwarePlan, int, List[str]]:
     """Drop swaps whose vacated bytes reclaimed no packed peak; re-plan.
 
     A swap is non-load-bearing when re-packing *without* it yields the same
-    (or a lower) arena peak: its two DMA transfers buy nothing.  An accepted
-    drop continues the scan from the *next* decision (restarting from the
-    first would cost O(n^2) full re-packs per fixed point); one more full
-    pass runs after any pass that dropped something, so the loop only stops
-    when a complete scan accepts nothing.  The decision set strictly shrinks
-    and the peak is monotone non-increasing — never above the single-pass
-    input plan.  At the fixed point every remaining swap is load-bearing:
-    removing any one of them would raise the packed peak.
+    (or a lower) arena peak: its two DMA transfers buy nothing.  In-place
+    decisions are never scan candidates — they already move no data, so
+    dropping them saves nothing and only removes planner freedom.  An
+    accepted drop continues the scan from the *next* decision (restarting
+    from the first would cost O(n^2) full re-packs per fixed point); one
+    more full pass runs after any pass that dropped something, so the loop
+    only stops when a complete scan accepts nothing.  The decision set
+    strictly shrinks and the peak is monotone non-increasing — never above
+    the single-pass input plan.  At the fixed point every remaining
+    data-moving swap is load-bearing: removing any one of them would raise
+    the packed peak.
     """
     rounds = 0
     dropped: List[str] = []
@@ -297,16 +508,25 @@ def _cooptimize(ordered: OrderedTensors, schedule: OffloadSchedule,
     while improved:
         rounds += 1
         improved = False
-        for name in [d.name for d in schedule.decisions]:
-            rest = tuple(o for o in schedule.decisions if o.name != name)
-            trial_sched = make_schedule(rest)
-            trial_plan = plan_memory_swapped(ordered, trial_sched,
-                                             planner=planner)
+        for name in [d.name for d in plan.schedule.decisions
+                     if not d.inplace]:
+            # an earlier drop in this pass re-packed the arena and may have
+            # re-flagged this decision as in-place — re-check the CURRENT
+            # plan, not the pass-start snapshot, before trialing a drop
+            cur = next((d for d in plan.schedule.decisions
+                        if d.name == name), None)
+            if cur is None or cur.inplace:
+                continue
+            rest = tuple(o for o in plan.schedule.decisions
+                         if o.name != name)
+            trial_plan = plan_memory_swapped(ordered, make_schedule(rest),
+                                             planner=planner,
+                                             host_planner=host_planner)
             if trial_plan.arena_bytes <= plan.arena_bytes:
-                schedule, plan = trial_sched, trial_plan
+                plan = trial_plan
                 dropped.append(name)
                 improved = True
-    return schedule, plan, rounds, dropped
+    return plan, rounds, dropped
 
 
 # ---------------------------------------------------------------------------
@@ -331,14 +551,19 @@ def compile_plan(graph_or_model, config: Optional[MemoryPlanConfig] = None,
 
 def _compile_graph_plan(graph: LayerGraph, config: MemoryPlanConfig,
                         batch: int) -> CompiledMemoryPlan:
+    # fail fast on planner-name typos, before any analysis runs
+    get_planner(config.planner)
+    get_planner(config.host_planner)
+
     ordered = compute_execution_order(graph, batch)
-    baseline = PLANNERS[config.planner]().plan(ordered)
+    baseline = get_planner(config.planner).plan(ordered)
 
     if not config.swap:
         empty = make_schedule(())
         return CompiledMemoryPlan(
             config=config, source="graph", graph=graph, ordered=ordered,
-            schedule=empty, plan=baseline, baseline=baseline, batch=batch)
+            schedule=empty, plan=baseline, baseline=baseline, batch=batch,
+            lowered=lower_schedule(ordered, empty, baseline))
 
     schedule = plan_offload(
         ordered,
@@ -347,21 +572,24 @@ def _compile_graph_plan(graph: LayerGraph, config: MemoryPlanConfig,
         prefetch_margin=config.prefetch_margin,
         hbm_budget_bytes=config.hbm_budget_bytes,
     )
-    plan = plan_memory_swapped(ordered, schedule, planner=config.planner)
-    single_peak, single_dma = plan.arena_bytes, schedule.dma_bytes
+    plan = plan_memory_swapped(ordered, schedule, planner=config.planner,
+                               host_planner=config.host_planner)
+    # the swap-aware placement pass may have lowered some swaps to in-place
+    # prefetches: the plan's rebuilt schedule is the authoritative one
+    single_peak, single_dma = plan.arena_bytes, plan.schedule.dma_bytes
 
     coopt = None
     if config.cooptimize:
-        schedule, plan, rounds, dropped = _cooptimize(
-            ordered, schedule, plan, config.planner)
+        plan, rounds, dropped = _cooptimize(
+            ordered, plan, config.planner, config.host_planner)
         coopt = CooptStats(rounds=rounds, dropped=tuple(dropped),
                            single_pass_peak_bytes=single_peak,
                            single_pass_dma_bytes=single_dma)
 
     return CompiledMemoryPlan(
         config=config, source="graph", graph=graph, ordered=ordered,
-        schedule=schedule, plan=plan, baseline=baseline, coopt=coopt,
-        batch=batch)
+        schedule=plan.schedule, plan=plan, baseline=baseline, coopt=coopt,
+        batch=batch, lowered=lower_schedule(ordered, plan.schedule, plan))
 
 
 def _compile_model_plan(cfg, config: MemoryPlanConfig,

@@ -12,9 +12,11 @@ is the JAX realisation of the paper's layer-basis engine:
   D tensors are consumed exactly once, matching Backward lifespans;
 * unrolled recurrences accumulate gradients across time and the optimizer
   applies them once per iteration (Iteration lifespan, §5.2);
-* :func:`swap_planned_loss_and_grads` additionally executes a proactive
-  host-swap schedule (§6) phase-by-phase, with high-water-mark accounting
-  proving the swap-aware plan's residency peak is respected.
+* :func:`swap_planned_loss_and_grads` additionally replays the compiled
+  :class:`repro.core.plan.ExecutionSchedule` — the proactive host-swap
+  plan (§6) lowered to typed ``Compute``/``SwapOut``/``Prefetch``/``Free``
+  ops — with high-water-mark accounting proving the swap-aware plan's
+  residency peak and packed host pool are respected.
 
 Gradients are validated against whole-graph ``jax.grad`` (see
 ``reference_loss_and_grads``) to 1e-5 in tests — the paper's own CI gate
@@ -410,19 +412,25 @@ def sgd_update(params, grads, lr=1e-2):
 
 
 # ---------------------------------------------------------------------------
-# Proactive swap engine (NNTrainer §6): the planned step, phase by phase
+# Proactive swap execution (NNTrainer §6): replay the compiled op list
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class SwapExecStats:
-    """What the swap engine actually did during one iteration."""
+    """What the swap executor actually did during one iteration."""
     swap_outs: int = 0
     prefetches: int = 0
+    inplace_prefetches: int = 0    # re-residencies that needed no copy
     dma_bytes: int = 0             # device<->host bytes moved
     late_swap_ins: int = 0         # schedule misses: access before prefetch
     hbm_high_water: int = 0        # peak resident planned-activation bytes
+    host_high_water: int = 0       # peak resident host-pool bytes
     planned_peak: Optional[int] = None   # SwapAwarePlan's residency bound
+    planned_host_pool: Optional[int] = None  # packed host arena bound
     peak_inflight_prefetch: int = 0      # double-buffer occupancy peak
+    # the ops actually executed, in order — equals the compiled
+    # ExecutionSchedule.ops exactly when no schedule miss occurred
+    replayed_ops: Tuple = ()
 
 
 class _HbmTracker:
@@ -447,12 +455,16 @@ class _ActivationStore:
     post-merge ``X:`` CREATE owner), so an in-place activation output that
     aliases its producer's storage is neither double-counted nor separately
     swapped — swapping an owner moves every alias with it, exactly like one
-    arena region moving to host.
+    arena region moving to host.  The store holds no scheduling logic: the
+    executor drives it by replaying the compiled
+    :class:`repro.core.plan.ExecutionSchedule` op by op.
     """
 
-    def __init__(self, ordered: OrderedTensors, hbm: _HbmTracker):
+    def __init__(self, ordered: OrderedTensors, hbm: _HbmTracker,
+                 host_pool: Optional[_HbmTracker] = None):
         self.ordered = ordered
         self.hbm = hbm
+        self.host_pool = host_pool or _HbmTracker()
         self.device: Dict[str, jax.Array] = {}
         self.host: Dict[str, np.ndarray] = {}
         self.members: Dict[str, Set[str]] = {}     # owner -> layer names
@@ -498,6 +510,7 @@ class _ActivationStore:
                 self.host[m] = np.asarray(self.device.pop(m))
         self.alive.discard(owner)
         self.hbm.free(nbytes)
+        self.host_pool.alloc(nbytes)
         stats.swap_outs += 1
         stats.dma_bytes += nbytes
 
@@ -508,68 +521,20 @@ class _ActivationStore:
                 self.device[m] = jnp.asarray(self.host.pop(m))
         self.alive.add(owner)
         self.hbm.alloc(nbytes)
+        self.host_pool.free(nbytes)
         stats.prefetches += 1
         stats.dma_bytes += nbytes
 
     def free_owner(self, owner: str) -> None:
+        on_host = False
         for m in self.members.get(owner, ()):
             self.device.pop(m, None)
-            self.host.pop(m, None)
+            on_host |= self.host.pop(m, None) is not None
+        if on_host:
+            self.host_pool.free(self.ordered.tensors[owner].nbytes)
         if owner in self.alive:
             self.alive.discard(owner)
             self.hbm.free(self.ordered.tensors[owner].nbytes)
-
-
-class _SwapEngine:
-    """Ticks the offload schedule along the 3N-phase walk.
-
-    Swap-out DMA runs in the background *during* phase ``write_eo + 1`` and
-    the bytes are released when that phase completes; the (double-buffered)
-    prefetch starts at ``prefetch_at_eo``, re-occupying the bytes, and must
-    complete before ``read_eo`` — exactly the residency intervals
-    :func:`repro.core.planner.plan_memory_swapped` planned around.
-    """
-
-    def __init__(self, schedule: OffloadSchedule, store: _ActivationStore,
-                 stats: SwapExecStats):
-        self.store = store
-        self.stats = stats
-        self.out_at: Dict[int, List] = {}
-        self.in_at: Dict[int, List] = {}
-        self.inflight = 0
-        self.done_at: Dict[int, int] = {}
-        for d in schedule.decisions:
-            # S: scratch tensors never enter the layer-output store; their
-            # swap is plan-level only (arena residency), nothing to move.
-            if not d.vacates or not d.name.startswith("X:"):
-                continue
-            if d.name not in store.ordered.tensors:
-                raise ValueError(
-                    f"offload schedule references {d.name!r}, which the "
-                    f"execution-order analysis does not know — schedule and "
-                    f"ordered tensors come from different graphs?")
-            self.out_at.setdefault(d.swap_out_eo, []).append(d)
-            self.in_at.setdefault(d.prefetch_at_eo, []).append(d)
-
-    def tick_before(self, eo: int) -> None:
-        """Start-of-phase: issue prefetches scheduled at this EO."""
-        for d in self.in_at.get(eo, ()):
-            if d.name in self.store.alive:
-                continue  # late swap-in already brought it back
-            self.store.swap_in(d.name, self.stats)
-            self.inflight += d.nbytes
-            self.done_at.setdefault(d.read_eo, 0)
-            self.done_at[d.read_eo] += d.nbytes
-        self.stats.peak_inflight_prefetch = max(
-            self.stats.peak_inflight_prefetch, self.inflight)
-        # prefetches complete by their read EO: retire their buffer slot
-        self.inflight -= self.done_at.pop(eo, 0)
-
-    def tick_after(self, eo: int) -> None:
-        """End-of-phase: the background swap-out DMA has drained; release."""
-        for d in self.out_at.get(eo, ()):
-            if d.name in self.store.alive:
-                self.store.swap_out(d.name, self.stats)
 
 
 def swap_planned_loss_and_grads(
@@ -579,28 +544,33 @@ def swap_planned_loss_and_grads(
     schedule: OffloadSchedule,
     ordered: Optional[OrderedTensors] = None,
     plan: Optional["SwapAwarePlan"] = None,  # noqa: F821
+    lowered: Optional["ExecutionSchedule"] = None,  # noqa: F821
 ) -> Tuple[jax.Array, Dict[str, Dict[str, jax.Array]], SwapExecStats]:
-    """One layer-basis iteration executing the proactive-swap schedule.
+    """One layer-basis iteration replaying the compiled op list.
 
     Identical numerics to :func:`planned_loss_and_grads` (arrays round-trip
-    through host exactly), but walks the 3N phases in EO order, ticking the
-    swap engine at every phase boundary, and accounts planned-activation HBM
-    residency.  When a :class:`SwapAwarePlan` is given, asserts the measured
-    high-water mark never exceeds the plan's residency peak.
+    through host exactly), but walks the lowered
+    :class:`repro.core.plan.ExecutionSchedule` directly: every ``Compute``,
+    ``SwapOut``, ``Prefetch`` and ``Free`` was decided at compile time, so
+    the executor holds no scheduling policy — it replays ops and accounts
+    HBM / host-pool residency high-water marks.  When no ``lowered``
+    schedule is supplied (hand-wired callers) it is derived here from
+    ``schedule``/``plan``.  With a :class:`SwapAwarePlan`, asserts the
+    measured high-water marks never exceed the planned residency peak and
+    the packed host pool.
     """
+    from repro.core.plan import (Compute, Free, Prefetch, SwapOut,
+                                 lower_schedule)
     if ordered is None:
         ordered = compute_execution_order(graph, int(x.shape[0]))
+    if lowered is None:
+        lowered = lower_schedule(ordered, schedule, plan)
     stats = SwapExecStats()
+    stats.inplace_prefetches = sum(
+        1 for d in schedule.decisions if d.inplace)
     hbm = _HbmTracker()
     store = _ActivationStore(ordered, hbm)
-    engine = _SwapEngine(schedule, store, stats)
     store.device["__input__"] = x
-
-    # owners expire after their last access: free device bytes right there
-    expire_at: Dict[int, List[str]] = {}
-    for t in ordered.planned_tensors():
-        if t.name.startswith("X:"):
-            expire_at.setdefault(t.max_eo, []).append(t.name)
 
     def resolve_ctx(ctx: Any) -> Any:
         return tuple(
@@ -615,98 +585,136 @@ def swap_planned_loss_and_grads(
     pending_cd: Dict[str, Tuple[jax.Array, List[str]]] = {}
     grads: Dict[str, Dict[str, jax.Array]] = {}
     loss_val = None
+    replayed: List[Any] = []
+    inflight = 0
+    done_at: Dict[int, int] = {}      # read EO -> prefetched bytes retiring
+    retired_eo = -1
 
-    for eo, lname, kind in ordered.phase_schedule():
-        engine.tick_before(eo)
-        l = graph.layer(lname)
-        if kind == "F":
-            if l.kind in LOSS_KINDS:
-                loss_val = loss_forward(l.kind, store.get(l.inputs[0], stats),
-                                        label)
-            else:
-                xs = [store.get(i, stats) for i in l.inputs]
-                p = params.get(_param_owner(graph, l))
-                y, ctx = layer_forward(l, xs, p)
-                store.put(lname, y)
-                # keep saved activations by *reference* into the store, so a
-                # swap moves the residual too (same bytes in a real arena)
-                sym = []
-                for e in ctx:
-                    hit = next((i for i, xi in enumerate(xs) if e is xi), None)
-                    if hit is not None:
-                        sym.append(("@act", l.inputs[hit]))
-                    elif e is y:
-                        sym.append(("@act", lname))
-                    else:
-                        sym.append(e)
-                ctxs[lname] = tuple(sym)
-        elif kind == "CG":
-            if l.kind in LOSS_KINDS:
-                pred = l.inputs[0]
-                derivs[pred] = loss_derivative(l.kind,
-                                               store.get(pred, stats), label)
-            else:
-                dy = derivs.pop(lname, None)
-                if dy is not None:
-                    if l.trainable and l.weight_shapes():
-                        p = params.get(_param_owner(graph, l))
-                        g = layer_calc_gradient(
-                            l, resolve_ctx(ctxs[lname]), dy, p)
-                        owner = _param_owner(graph, l)
-                        if owner in grads:
-                            grads[owner] = {k: grads[owner][k] + g[k]
-                                            for k in g}
-                        else:
-                            grads[owner] = g
-                    upstream_needed = [
-                        i for i in l.inputs
-                        if i != "__input__" and _needs_deriv(graph, i)
-                    ]
-                    if not upstream_needed:
-                        pass
-                    elif l.kind in WEIGHTED_KINDS:
-                        # A weighted layer's saved input has a F+CG lifespan
-                        # — it is freed (or swapped) right after this phase —
-                        # so its derivative is computed here, on the same
-                        # resident context the CG just used, and *published*
-                        # at the adjacent CD phase (EO_CD = EO_CG + 1).
-                        p = params.get(_param_owner(graph, l))
-                        dxs = layer_calc_derivative(
-                            l, resolve_ctx(ctxs[lname]), dy, p)
-                        pending_dxs[lname] = [
-                            (inp, dx) for inp, dx in zip(l.inputs, dxs)
-                            if inp != "__input__" and inp in upstream_needed
-                        ]
-                    else:
-                        # In-place / pool / view layers have F+CD contexts
-                        # (e.g. max-pool argmax source, activation output) —
-                        # residency and prefetches target the CD phase.
-                        pending_cd[lname] = (dy, upstream_needed)
-        else:  # CD: compute deferred derivatives, publish D:<inp>
-            dxs_out = pending_dxs.pop(lname, [])
-            if lname in pending_cd:
-                dy, upstream_needed = pending_cd.pop(lname)
-                p = params.get(_param_owner(graph, l))
-                dxs = layer_calc_derivative(
-                    l, resolve_ctx(ctxs[lname]), dy, p)
-                dxs_out = [
-                    (inp, dx) for inp, dx in zip(l.inputs, dxs)
-                    if inp != "__input__" and inp in upstream_needed
-                ]
-            for inp, dx in dxs_out:
-                if inp in derivs:
-                    derivs[inp] = derivs[inp] + dx
+    for op in lowered.ops:
+        if isinstance(op, Prefetch):
+            if op.tensor in store.alive:
+                continue  # late swap-in already brought it back
+            store.swap_in(op.tensor, stats)
+            inflight += op.nbytes
+            done_at[op.read_eo] = done_at.get(op.read_eo, 0) + op.nbytes
+            stats.peak_inflight_prefetch = max(
+                stats.peak_inflight_prefetch, inflight)
+            replayed.append(op)
+        elif isinstance(op, Compute):
+            # prefetches issued at earlier phases complete by their read
+            # EO: retire their double-buffer slots at the phase boundary
+            if op.eo > retired_eo:
+                for eo in list(done_at):
+                    if eo <= op.eo:
+                        inflight -= done_at.pop(eo)
+                retired_eo = op.eo
+            l = graph.layer(op.layer)
+            lname, kind = op.layer, op.kind
+            if kind == "F":
+                if l.kind in LOSS_KINDS:
+                    loss_val = loss_forward(
+                        l.kind, store.get(l.inputs[0], stats), label)
                 else:
-                    derivs[inp] = dx
-        engine.tick_after(eo)
-        for owner in expire_at.get(eo, ()):
-            store.free_owner(owner)
+                    xs = [store.get(i, stats) for i in l.inputs]
+                    p = params.get(_param_owner(graph, l))
+                    y, ctx = layer_forward(l, xs, p)
+                    store.put(lname, y)
+                    # keep saved activations by *reference* into the store,
+                    # so a swap moves the residual too (same bytes in a real
+                    # arena)
+                    sym = []
+                    for e in ctx:
+                        hit = next(
+                            (i for i, xi in enumerate(xs) if e is xi), None)
+                        if hit is not None:
+                            sym.append(("@act", l.inputs[hit]))
+                        elif e is y:
+                            sym.append(("@act", lname))
+                        else:
+                            sym.append(e)
+                    ctxs[lname] = tuple(sym)
+            elif kind == "CG":
+                if l.kind in LOSS_KINDS:
+                    pred = l.inputs[0]
+                    derivs[pred] = loss_derivative(
+                        l.kind, store.get(pred, stats), label)
+                else:
+                    dy = derivs.pop(lname, None)
+                    if dy is not None:
+                        if l.trainable and l.weight_shapes():
+                            p = params.get(_param_owner(graph, l))
+                            g = layer_calc_gradient(
+                                l, resolve_ctx(ctxs[lname]), dy, p)
+                            owner = _param_owner(graph, l)
+                            if owner in grads:
+                                grads[owner] = {k: grads[owner][k] + g[k]
+                                                for k in g}
+                            else:
+                                grads[owner] = g
+                        upstream_needed = [
+                            i for i in l.inputs
+                            if i != "__input__" and _needs_deriv(graph, i)
+                        ]
+                        if not upstream_needed:
+                            pass
+                        elif l.kind in WEIGHTED_KINDS:
+                            # A weighted layer's saved input has a F+CG
+                            # lifespan — it is freed (or swapped) right
+                            # after this phase — so its derivative is
+                            # computed here, on the same resident context
+                            # the CG just used, and *published* at the
+                            # adjacent CD phase (EO_CD = EO_CG + 1).
+                            p = params.get(_param_owner(graph, l))
+                            dxs = layer_calc_derivative(
+                                l, resolve_ctx(ctxs[lname]), dy, p)
+                            pending_dxs[lname] = [
+                                (inp, dx) for inp, dx in zip(l.inputs, dxs)
+                                if inp != "__input__"
+                                and inp in upstream_needed
+                            ]
+                        else:
+                            # In-place / pool / view layers have F+CD
+                            # contexts (e.g. max-pool argmax source,
+                            # activation output) — residency and prefetches
+                            # target the CD phase.
+                            pending_cd[lname] = (dy, upstream_needed)
+            else:  # CD: compute deferred derivatives, publish D:<inp>
+                dxs_out = pending_dxs.pop(lname, [])
+                if lname in pending_cd:
+                    dy, upstream_needed = pending_cd.pop(lname)
+                    p = params.get(_param_owner(graph, l))
+                    dxs = layer_calc_derivative(
+                        l, resolve_ctx(ctxs[lname]), dy, p)
+                    dxs_out = [
+                        (inp, dx) for inp, dx in zip(l.inputs, dxs)
+                        if inp != "__input__" and inp in upstream_needed
+                    ]
+                for inp, dx in dxs_out:
+                    if inp in derivs:
+                        derivs[inp] = derivs[inp] + dx
+                    else:
+                        derivs[inp] = dx
+            replayed.append(op)
+        elif isinstance(op, SwapOut):
+            if op.tensor in store.alive:
+                store.swap_out(op.tensor, stats)
+                replayed.append(op)
+        elif isinstance(op, Free):
+            store.free_owner(op.tensor)
+            replayed.append(op)
 
     stats.hbm_high_water = hbm.high_water
+    stats.host_high_water = store.host_pool.high_water
+    stats.replayed_ops = tuple(replayed)
     if plan is not None:
         stats.planned_peak = plan.activation_residency_peak()
+        stats.planned_host_pool = plan.host_pool_bytes
         if stats.hbm_high_water > stats.planned_peak:
             raise AssertionError(
                 f"swap executor exceeded the planned residency peak: "
                 f"{stats.hbm_high_water} > {stats.planned_peak} bytes")
+        if stats.host_high_water > stats.planned_host_pool:
+            raise AssertionError(
+                f"swap executor exceeded the packed host pool: "
+                f"{stats.host_high_water} > {stats.planned_host_pool} bytes")
     return loss_val, grads, stats

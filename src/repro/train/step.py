@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.plan import CompiledMemoryPlan, compile_plan
+from repro.core.plan import CompiledMemoryPlan, MemoryPlanConfig, compile_plan
 from repro.core.remat_policy import RematPlan
 from repro.models.model import Model, input_specs
 from repro.optim import Optimizer
@@ -101,7 +101,8 @@ def opt_state_spec_tree(opt_state, param_spec_tree):
 
 
 def make_train_step(model: Model, optimizer: Optimizer, mesh: Mesh,
-                    shape: ShapeConfig, *, microbatches: int = 1
+                    shape: ShapeConfig, *, microbatches: int = 1,
+                    plan_config: Optional[MemoryPlanConfig] = None
                     ) -> StepBundle:
     """Build the sharded train step for one (arch, shape) cell.
 
@@ -113,7 +114,10 @@ def make_train_step(model: Model, optimizer: Optimizer, mesh: Mesh,
     ``cfg.offload`` on, that plan is the joint keep/recompute/offload
     decision priced by ``cfg.dma_gbps``/``cfg.device_tflops``; its honest
     costs (``dma_bytes``, ``recompute_flops_per_layer``) travel with the
-    bundle's ``memory_plan.report()``.
+    bundle's ``memory_plan.report()``.  ``plan_config`` overrides
+    individual :class:`MemoryPlanConfig` knobs (hardware cost model,
+    budgets) without touching the ``ModelConfig`` — the remat/offload
+    resolution order (explicit knob, else ``cfg``) is unchanged.
     """
     cfg = model.cfg
     act_rules = activation_rules(cfg, shape, mesh)
@@ -173,7 +177,7 @@ def make_train_step(model: Model, optimizer: Optimizer, mesh: Mesh,
         abstract_args=(abstract_p, abstract_opt, batch_specs),
         act_rules=act_rules,
         mesh=mesh,
-        memory_plan=compile_plan(cfg, batch_tokens=micro_tokens),
+        memory_plan=compile_plan(cfg, plan_config, batch_tokens=micro_tokens),
     )
 
 
@@ -240,11 +244,13 @@ def make_decode_step(model: Model, mesh: Mesh,
 
 
 def build_step(model: Model, optimizer: Optional[Optimizer], mesh: Mesh,
-               shape: ShapeConfig, *, microbatches: int = 1) -> StepBundle:
+               shape: ShapeConfig, *, microbatches: int = 1,
+               plan_config: Optional[MemoryPlanConfig] = None) -> StepBundle:
     if shape.kind == "train":
         assert optimizer is not None
         return make_train_step(model, optimizer, mesh, shape,
-                               microbatches=microbatches)
+                               microbatches=microbatches,
+                               plan_config=plan_config)
     if shape.kind == "prefill":
         return make_prefill_step(model, mesh, shape)
     return make_decode_step(model, mesh, shape)

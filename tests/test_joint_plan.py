@@ -230,10 +230,20 @@ def test_coopt_fixed_point_invariant_on_every_zoo_model(name):
     cp = compile_plan(
         ZOO[name](), MemoryPlanConfig(min_idle_phases=3, min_bytes=1 << 12),
         batch=8)
-    # fixed point: no remaining swap is droppable — removing any one of
-    # them must raise the packed peak
+    # fixed point: no remaining data-moving swap is droppable — removing
+    # any one of them must raise the packed peak.  In-place decisions are
+    # exempt: they move no data (no host slot, no DMA), so the scan keeps
+    # them for the planner freedom they preserve.
     for d in cp.schedule.decisions:
+        if d.inplace:
+            continue
         rest = tuple(o for o in cp.schedule.decisions if o.name != d.name)
         trial = plan_memory_swapped(cp.ordered, make_schedule(rest),
                                     planner=cp.config.planner)
         assert trial.arena_bytes > cp.peak_bytes, d.name
+    # the exempt decisions really are free: zero bytes in every aggregate
+    inplace = [d for d in cp.schedule.decisions if d.inplace]
+    assert cp.schedule.dma_bytes == 2 * sum(
+        d.nbytes for d in cp.schedule.decisions if not d.inplace)
+    for d in inplace:
+        assert d.name + "@host" not in cp.plan.host.placements

@@ -239,6 +239,39 @@ def test_swap_exec_grads_match_lenet5():
     assert stats.late_swap_ins == 0
     assert stats.hbm_high_water <= stats.planned_peak
     assert stats.dma_bytes > 0
+    # host-pool residency is tracked alongside HBM and bounded by the
+    # packed host arena
+    assert 0 < stats.host_high_water <= stats.planned_host_pool
+
+
+@pytest.mark.parametrize("host_planner",
+                         ["sorting", "bestfit", "segregated", "buddy"])
+def test_swap_exec_host_high_water_bounded_per_host_planner(host_planner):
+    """Executor acceptance across the allocator layer: grads match
+    jax.grad, HBM high-water <= planned peak, and the measured host-pool
+    high-water stays within every packer's host_pool_bytes."""
+    g = ZOO["lenet5"]()
+    cp = compile_plan(
+        g, MemoryPlanConfig(planner="bestfit", host_planner=host_planner,
+                            min_idle_phases=3, min_bytes=1,
+                            cooptimize=False), batch=4)
+    assert cp.schedule.decisions
+    params = init_params(g, jax.random.PRNGKey(0))
+    kx, ky = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(kx, (4,) + tuple(g.input_shape))
+    y = jax.nn.one_hot(jnp.argmax(
+        jax.random.normal(ky, (4,) + tuple(g.label_shape)), -1), 10)
+    loss_s, grads_s, stats = cp.loss_and_grads(params, x, y)
+    loss_r, grads_r = reference_loss_and_grads(g, params, x, y)
+    np.testing.assert_allclose(float(loss_s), float(loss_r), rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(grads_s),
+                    jax.tree_util.tree_leaves(grads_r)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+    assert stats.hbm_high_water <= stats.planned_peak <= cp.peak_bytes
+    assert stats.host_high_water <= cp.host_pool_bytes
+    assert stats.late_swap_ins == 0
+    assert stats.replayed_ops == cp.lowered.ops
 
 
 def test_pool_cd_read_is_a_recorded_access():

@@ -62,9 +62,12 @@ def test_coopt_fixed_point_leaves_no_droppable_swaps(name):
     assert cp.schedule.decisions, "models must keep load-bearing swaps"
     # all scheduled swaps vacate bytes (non-vacating never scheduled)
     assert all(d.vacates for d in cp.schedule.decisions)
-    # fixed point: removing ANY remaining swap raises the packed peak,
-    # i.e. there are zero non-vacating (non-load-bearing) swaps left
+    # fixed point: removing ANY remaining data-moving swap raises the
+    # packed peak.  In-place decisions are exempt — they move no data, so
+    # the co-optimisation keeps them regardless of peak impact.
     for d in cp.schedule.decisions:
+        if d.inplace:
+            continue
         rest = tuple(o for o in cp.schedule.decisions if o.name != d.name)
         trial = plan_memory_swapped(cp.ordered, make_schedule(rest),
                                     planner=cp.config.planner)
@@ -226,6 +229,103 @@ def test_graph_executor_unavailable_for_model_config():
 
 
 # ---------------------------------------------------------------------------
+# host_planner knob: pluggable host-pool allocator behind the same facade
+# ---------------------------------------------------------------------------
+
+def test_unknown_planner_names_raise_clear_valueerror():
+    g = ZOO["lenet5"]()
+    with pytest.raises(ValueError, match="unknown planner 'firstfit'"):
+        compile_plan(g, MemoryPlanConfig(planner="firstfit"), batch=4)
+    with pytest.raises(ValueError, match="unknown planner 'slab'"):
+        compile_plan(g, MemoryPlanConfig(host_planner="slab"), batch=4)
+
+
+@pytest.mark.parametrize("name", ["lenet5", "vgg16", "model_d"])
+def test_host_planner_default_is_bit_for_bit_sorting(name):
+    """The knob's default must reproduce the explicit "sorting" choice
+    exactly: same arenas, same placements, same schedule."""
+    g1, g2 = ZOO[name](), ZOO[name]()
+    cfg = MemoryPlanConfig(min_idle_phases=3, min_bytes=1 << 12)
+    dflt = compile_plan(g1, cfg, batch=8)
+    expl = compile_plan(
+        g2, dataclasses.replace(cfg, host_planner="sorting"), batch=8)
+    assert dflt.config.host_planner == "sorting"
+    assert dflt.peak_bytes == expl.peak_bytes
+    assert dflt.host_pool_bytes == expl.host_pool_bytes
+    assert dflt.schedule.decisions == expl.schedule.decisions
+    assert dflt.lowered.ops == expl.lowered.ops
+    for arena in ("device", "host"):
+        a = getattr(dflt.plan, arena).placements
+        b = getattr(expl.plan, arena).placements
+        assert {n: (p.offset, p.nbytes) for n, p in a.items()} \
+            == {n: (p.offset, p.nbytes) for n, p in b.items()}
+
+
+def test_host_planner_sweep_packs_validly():
+    g = ZOO["resnet18"]()
+    seen = {}
+    for hp in ("sorting", "bestfit", "segregated", "buddy"):
+        cp = compile_plan(
+            g, MemoryPlanConfig(planner="bestfit", host_planner=hp,
+                                min_idle_phases=3, min_bytes=1 << 12),
+            batch=8)
+        cp.plan.validate()
+        r = cp.report()
+        assert r["host_planner"] == hp
+        assert 0.0 < r["host_utilization"] <= 1.0
+        assert 0.0 < r["device_utilization"] <= 1.0
+        seen[hp] = cp.host_pool_bytes
+    # the host workload is the same for every packer; all must cover the
+    # peak-live lower bound, none may be wildly fragmented
+    assert min(seen.values()) > 0
+
+
+# ---------------------------------------------------------------------------
+# The lowered ExecutionSchedule: typed ops the executor replays verbatim
+# ---------------------------------------------------------------------------
+
+def test_lowered_schedule_op_ordering_and_offsets():
+    from repro.core.plan import Compute, Free, Prefetch, SwapOut
+
+    cp = compile_plan(ZOO["lenet5"](), PLAN_CFG, batch=8)
+    ops = cp.lowered.ops
+    rank = {Prefetch: 0, Compute: 1, SwapOut: 2, Free: 3}
+    keys = [(op.eo, rank[type(op)]) for op in ops]
+    assert keys == sorted(keys), "ops must be sorted by (eo, phase rank)"
+    counts = cp.lowered.counts()
+    assert counts["compute"] == len(cp.ordered.phase_schedule())
+    moving = [d for d in cp.schedule.decisions
+              if d.vacates and not d.inplace and d.name.startswith("X:")]
+    assert counts.get("swapout", 0) == len(moving)
+    assert counts.get("prefetch", 0) == len(moving)
+    for op in cp.lowered.transfers():
+        assert op.nbytes > 0
+        assert op.device_offset >= 0, "compiled plans carry real offsets"
+        assert op.host_offset >= 0
+        hp = cp.plan.host.placements[op.tensor + "@host"]
+        assert op.host_offset == hp.offset
+    # Free ops release every planned X: tensor exactly once, at its last
+    # access
+    frees = {op.tensor: op.eo for op in ops if isinstance(op, Free)}
+    for t in cp.ordered.planned_tensors():
+        if t.name.startswith("X:"):
+            assert frees[t.name] == t.max_eo
+
+
+def test_executor_replays_compiled_schedule_exactly():
+    cp, stats = _exec_case(ZOO["lenet5"](), 4, one_hot=True)
+    assert stats.replayed_ops == cp.lowered.ops
+    assert stats.late_swap_ins == 0
+
+
+def test_swap_disabled_lowers_to_compute_and_free_only():
+    cp = compile_plan(ZOO["lenet5"](), MemoryPlanConfig(swap=False), batch=4)
+    counts = cp.lowered.counts()
+    assert set(counts) == {"compute", "free"}
+    assert cp.lowered.transfers() == ()
+
+
+# ---------------------------------------------------------------------------
 # Deprecation shims: old entry points still import, with a warning
 # ---------------------------------------------------------------------------
 
@@ -237,3 +337,29 @@ def test_deprecated_core_reexports_warn():
     assert fn is plan_memory
     with pytest.warns(DeprecationWarning):
         assert core.compute_execution_order is not None
+
+
+def test_deprecated_shim_covers_every_legacy_name():
+    """Every name in the deprecation table resolves (warning included) to
+    the real attribute of its home module, and unknown names still raise."""
+    import importlib
+
+    import repro.core as core
+
+    for name, (module_name, attr) in core._DEPRECATED.items():
+        with pytest.warns(DeprecationWarning, match=name):
+            got = getattr(core, name)
+        assert got is getattr(importlib.import_module(module_name), attr), name
+    with pytest.raises(AttributeError):
+        core.definitely_not_a_symbol
+
+
+def test_new_compile_surface_imports_without_warning(recwarn):
+    from repro.core import (PLANNERS, ArenaAllocator, ExecutionSchedule,
+                            get_planner, lower_schedule)
+    assert {"sorting", "bestfit", "segregated", "buddy",
+            "worstcase"} <= set(PLANNERS)
+    assert ExecutionSchedule is not None and lower_schedule is not None
+    assert isinstance(get_planner("buddy"), ArenaAllocator)
+    assert not [w for w in recwarn.list
+                if issubclass(w.category, DeprecationWarning)]

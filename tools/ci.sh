@@ -31,6 +31,34 @@ for name in ("lenet5", "resnet18"):
           f"base={cp.baseline.arena_bytes} swaps={len(cp.swapped_names())} "
           f"dropped={len(cp.coopt.dropped)}")
 
+# allocator-layer smoke: one zoo model compiled with every host_planner;
+# the executor must replay the lowered ExecutionSchedule EXACTLY (op list
+# equality — no late swap-ins, no skipped transfers) and respect both
+# planned high-water bounds.
+import jax
+import jax.numpy as jnp
+
+g = ZOO["lenet5"]()
+for hp in ("sorting", "bestfit", "segregated", "buddy"):
+    cp = compile_plan(g, MemoryPlanConfig(planner="bestfit", host_planner=hp,
+                                          min_idle_phases=3,
+                                          min_bytes=1 << 12), batch=8)
+    cp.plan.validate()
+    params = cp.init_params(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (8,) + tuple(g.input_shape))
+    y = jax.nn.one_hot(jnp.arange(8) % 10, 10)
+    _, _, stats = cp.loss_and_grads(params, x, y)
+    assert stats.replayed_ops == cp.lowered.ops, \
+        f"host_planner={hp}: executor replay diverged from compiled schedule"
+    assert stats.late_swap_ins == 0, hp
+    assert stats.hbm_high_water <= stats.planned_peak, hp
+    assert stats.host_high_water <= cp.host_pool_bytes, hp
+    print(f"exec-schedule smoke lenet5/{hp}: "
+          f"ops={cp.lowered.counts()} host={cp.host_pool_bytes} "
+          f"host_hw={stats.host_high_water} "
+          f"inplace={cp.inplace_prefetch_count}")
+
 # model-config joint-plan smoke: a tight budget must force evictions down
 # both priced lanes, and the plan's DMA traffic must be visible end-to-end.
 cfg = ARCHS["llama3.2-3b"]
@@ -57,8 +85,10 @@ print(f"compile_plan smoke {cfg.name}: decisions={r['remat_decisions']} "
 EOF
 
 # benchmark JSON emission: the swap benches (graph + model path) must keep
-# producing the machine-readable perf-trajectory file.
-PYTHONPATH=src python -m benchmarks.run --only swap_tradeoff,swap_model \
+# producing the machine-readable perf-trajectory file, now including the
+# per-planner host-pool fragmentation sweep.
+PYTHONPATH=src python -m benchmarks.run \
+    --only swap_tradeoff,swap_model,host_planner \
     --bench-json results/BENCH_swap.json > /dev/null
 test -s results/BENCH_swap.json
 PYTHONPATH=src python - <<'EOF'
@@ -68,5 +98,15 @@ model_rows = [r for r in recs if r["bench"] == "swap_model"]
 assert model_rows, "BENCH_swap.json must carry model-path rows"
 assert any(r["dma_bytes"] > 0 for r in model_rows)
 assert all("remat_decisions" in r for r in model_rows)
+host_rows = [r for r in recs if r["bench"] == "host_planner"]
+assert host_rows, "BENCH_swap.json must carry host-planner sweep rows"
+assert {r["host_planner"] for r in host_rows} \
+    == {"sorting", "bestfit", "segregated", "buddy"}
+assert all("host_utilization" in r and "legacy_host_bytes" in r
+           for r in host_rows)
+# the fragmentation-aware pool must strictly beat the legacy
+# pack-every-copy bytes somewhere in the sweep
+assert any(r["host_pool_bytes"] < r["legacy_host_bytes"]
+           for r in host_rows if r["host_planner"] in ("segregated", "buddy"))
 EOF
 echo "BENCH_swap.json emitted ($(wc -c < results/BENCH_swap.json) bytes)"
