@@ -18,7 +18,13 @@ The pipeline stages remain importable as composable pieces:
 * :mod:`repro.core.planner`         — Algorithm 2 + best-fit planner (beyond paper)
 * :mod:`repro.core.ideal`           — §3 ideal-memory calculator (Table 4)
 * :mod:`repro.core.inplace`         — derivative-from-output activation calculus
-* :mod:`repro.core.planned_exec`    — layer-basis F/CG/CD training executor
+* :mod:`repro.core.exec`            — executor subsystem: per-layer math
+                                      (``exec.layers``), activation store +
+                                      transfer engines (``exec.store``) and
+                                      pluggable backends (``exec.backends``:
+                                      SimulatedBackend | AsyncDeviceBackend,
+                                      selected by ``MemoryPlanConfig.executor``;
+                                      ``repro.core.planned_exec`` is a shim)
 * :mod:`repro.core.remat_policy`    — joint keep/recompute/offload planner
                                       (priced by dma_gbps vs device_tflops)
                                       -> jax.checkpoint policy
@@ -32,8 +38,10 @@ below) but new code should go through :func:`compile_plan`, which also runs
 the schedule/planner co-optimisation the free functions skip.
 """
 
-import warnings as _warnings
-
+from repro.core.deprecation import warn_once as _warn_once
+from repro.core.exec.backends import (BACKENDS, AsyncDeviceBackend,
+                                      ExecutorBackend, SimulatedBackend,
+                                      get_backend)
 from repro.core.plan import (CompiledMemoryPlan, Compute, CooptStats,
                              ExecutionSchedule, Free, MemoryPlanConfig,
                              Prefetch, SwapOut, compile_plan, lower_schedule)
@@ -49,6 +57,9 @@ __all__ = [
     "lower_schedule",
     # the pluggable allocator layer (device arena + host pool)
     "ArenaAllocator", "PLANNERS", "get_planner",
+    # the pluggable executor-backend layer (repro.core.exec)
+    "ExecutorBackend", "SimulatedBackend", "AsyncDeviceBackend",
+    "BACKENDS", "get_backend",
     # the joint keep/recompute/offload planner (model-config path internals,
     # exported for cost-model comparisons and tests)
     "RematPlan", "plan_joint_policy", "plan_step_time_s",
@@ -61,7 +72,8 @@ __all__ = [
 
 # Deprecated package-level re-exports: name -> (module, attr).  Kept so old
 # call sites importing the pipeline stages from ``repro.core`` keep working;
-# each access warns once toward compile_plan.
+# each access warns once *per call site* (repro.core.deprecation.warn_once)
+# toward compile_plan.
 _DEPRECATED = {
     "CreateMode": ("repro.core.lifespan", "CreateMode"),
     "Lifespan": ("repro.core.lifespan", "Lifespan"),
@@ -85,7 +97,7 @@ def __getattr__(name: str):
     if entry is None:
         raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
     module_name, attr = entry
-    _warnings.warn(
+    _warn_once(
         f"importing {name!r} from repro.core is deprecated; use "
         f"repro.core.compile_plan (or import from {module_name} directly)",
         DeprecationWarning, stacklevel=2)

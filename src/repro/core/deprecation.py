@@ -1,0 +1,69 @@
+"""Call-site-deduplicated deprecation warnings.
+
+The deprecated shims (``StepBundle.remat_plan``, the ``offload_dropped``
+alias, the old ``repro.core`` free-function re-exports) sit on paths that
+run once per training step or once per compile — warning on *every*
+invocation buries the signal.  :func:`warn_once` warns once per call site
+(filename + line + message) per process instead.
+
+The dedup defers to the active warning filters: when the first filter
+matching the warning says ``"always"`` or ``"error"`` — which is what
+``pytest.warns`` / ``recwarn`` install, and what ``-W always`` requests —
+every invocation warns, so tests can keep asserting the warnings are
+alive with ``pytest.warns`` (and parametrized tests re-triggering the
+same call site keep seeing them).
+"""
+
+from __future__ import annotations
+
+import sys
+import warnings
+from typing import Set, Tuple, Type
+
+_seen: Set[Tuple[str, int, str, type]] = set()
+
+
+def _always_shown(category: Type[Warning], text: str) -> bool:
+    """Whether the first matching filter forces the warning through.
+
+    Mirrors the stdlib resolution order over ``warnings.filters`` for the
+    filters we can evaluate here: message pattern + category subclass.
+    Module- or line-scoped filters cannot be matched without the caller's
+    module, so they are skipped rather than guessed — a module-specific
+    ``ignore`` ahead of a global ``always`` (pytest's default) must not
+    shadow it and re-enable the dedup."""
+    for action, msg, cat, module, lineno in warnings.filters:
+        if module is not None or lineno != 0:
+            continue
+        if not issubclass(category, cat):
+            continue
+        if msg is not None and not msg.match(text):
+            continue
+        return action in ("always", "error")
+    return False
+
+
+def warn_once(message: str, category: Type[Warning] = DeprecationWarning,
+              *, stacklevel: int = 2) -> None:
+    """Issue ``message`` at most once per call site.
+
+    ``stacklevel`` follows :func:`warnings.warn` semantics relative to the
+    function calling ``warn_once``: 2 (the default) attributes the warning
+    to that function's caller — the deprecated shim's call site, which is
+    also the dedup key."""
+    try:
+        frame = sys._getframe(stacklevel)
+        key = (frame.f_code.co_filename, frame.f_lineno, str(message),
+               category)
+    except ValueError:   # stack shallower than stacklevel: no site to key on
+        warnings.warn(message, category, stacklevel=stacklevel + 1)
+        return
+    if key in _seen and not _always_shown(category, str(message)):
+        return
+    _seen.add(key)
+    warnings.warn(message, category, stacklevel=stacklevel + 1)
+
+
+def reset_seen_call_sites() -> None:
+    """Forget every deduped call site (test isolation hook)."""
+    _seen.clear()

@@ -1,0 +1,47 @@
+"""Executor subsystem: layer math, activation store, pluggable backends.
+
+The layer-operation-basis training executor (NNTrainer §3/§4, Figure 2(b))
+split along its three concerns:
+
+* :mod:`repro.core.exec.layers`   — pure per-layer F/CG/CD math, loss
+  calculus, the plain planned walk and the ``jax.grad`` reference;
+* :mod:`repro.core.exec.store`    — residency trackers + activation store
+  with the :class:`TransferEngine` seam (sync host round trips vs real
+  device-stream copies);
+* :mod:`repro.core.exec.backends` — the :class:`ExecutorBackend` protocol
+  and its two implementations, :class:`SimulatedBackend` (default) and
+  :class:`AsyncDeviceBackend`, both replaying the compiled
+  :class:`repro.core.plan.ExecutionSchedule` verbatim.
+
+Select a backend declaratively via ``MemoryPlanConfig(executor=...)``;
+``repro.core.planned_exec`` remains as a compatibility shim over this
+package.
+"""
+
+from repro.core.exec.backends import (BACKENDS, AsyncDeviceBackend,
+                                      ExecutorBackend, SimulatedBackend,
+                                      get_backend,
+                                      swap_planned_loss_and_grads)
+from repro.core.exec.layers import (init_params, layer_calc_derivative,
+                                    layer_calc_gradient, layer_forward,
+                                    loss_derivative, loss_forward,
+                                    planned_loss_and_grads,
+                                    reference_forward,
+                                    reference_loss_and_grads, sgd_update)
+from repro.core.exec.store import (ActivationStore, DeviceStreamEngine,
+                                   HbmTracker, SwapExecStats, SyncHostEngine,
+                                   TransferEngine)
+
+__all__ = [
+    # backends
+    "ExecutorBackend", "SimulatedBackend", "AsyncDeviceBackend",
+    "BACKENDS", "get_backend", "swap_planned_loss_and_grads",
+    # store + engines
+    "ActivationStore", "HbmTracker", "SwapExecStats", "TransferEngine",
+    "SyncHostEngine", "DeviceStreamEngine",
+    # layer math
+    "init_params", "layer_forward", "layer_calc_gradient",
+    "layer_calc_derivative", "loss_forward", "loss_derivative",
+    "planned_loss_and_grads", "reference_forward",
+    "reference_loss_and_grads", "sgd_update",
+]

@@ -1,0 +1,406 @@
+"""Pluggable executor backends replaying the lowered ExecutionSchedule.
+
+One interpreter, two realisations of its transfer ops:
+
+* :class:`SimulatedBackend` (``"sim"``, the default) — synchronous host
+  round trips through :class:`repro.core.exec.store.SyncHostEngine`;
+  bit-for-bit the accounting the planner validation suite gates on;
+* :class:`AsyncDeviceBackend` (``"async"``) — every ``SwapOut`` /
+  ``Prefetch`` op is issued as a real ``jax.device_put`` against the
+  device's (pinned) host memory space, *dispatched* at its scheduled EO
+  and fenced only when the consumer computes, so DMA overlaps the compute
+  in between (the ROADMAP "async double-buffer on real device streams"
+  item).  Swap-outs donate their device buffer.  The backend measures
+  ``inflight_high_water`` (achieved double-buffer occupancy) and the
+  achieved-overlap fraction against the plan's
+  ``peak_inflight_prefetch`` — see :meth:`AsyncDeviceBackend.report`.
+
+Both backends replay the compiled op list *verbatim*:
+``SwapExecStats.replayed_ops == lowered.ops`` is CI-gated per backend, so
+a backend cannot silently skip or reorder a planned transfer.
+
+Select a backend with ``MemoryPlanConfig(executor="sim" | "async")`` or by
+passing ``executor=`` to :func:`swap_planned_loss_and_grads`; registry
+lookups go through :func:`get_backend`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Protocol, Tuple, Union,\
+    runtime_checkable
+
+import jax
+
+from repro.core.exec.layers import (_needs_deriv, _param_owner,
+                                    layer_calc_derivative,
+                                    layer_calc_gradient, layer_forward,
+                                    loss_derivative, loss_forward)
+from repro.core.exec.store import (ActivationStore, DeviceStreamEngine,
+                                   HbmTracker, SwapExecStats, SyncHostEngine,
+                                   TransferEngine)
+from repro.core.execution_order import OrderedTensors, compute_execution_order
+from repro.core.graph import LOSS_KINDS, WEIGHTED_KINDS, LayerGraph
+from repro.core.offload import OffloadSchedule
+
+
+@runtime_checkable
+class ExecutorBackend(Protocol):
+    """One way to execute a lowered :class:`ExecutionSchedule`.
+
+    ``run`` performs one training iteration — replaying the op list
+    verbatim — and returns ``(loss, grads, SwapExecStats)``; ``report``
+    summarises what the last run did (transfer counts, high-water marks,
+    and for real-stream backends the achieved overlap).
+    """
+
+    name: str
+
+    def run(self, graph: LayerGraph, params, x, label, *,
+            schedule: OffloadSchedule,
+            ordered: Optional[OrderedTensors] = None,
+            plan=None, lowered=None
+            ) -> Tuple[jax.Array, Dict[str, Dict[str, jax.Array]],
+                       SwapExecStats]: ...
+
+    def report(self) -> Dict[str, Any]: ...
+
+
+class _ReplayBackend:
+    """Shared interpreter: walk the compiled op list, account residency.
+
+    Subclasses choose the :class:`TransferEngine` wired into the store;
+    everything else — layer math dispatch, alias-group accounting,
+    high-water assertions, replay-equality bookkeeping — is common, so the
+    two backends cannot drift apart semantically.
+    """
+
+    name = "replay"
+
+    def __init__(self):
+        self._last_stats: Optional[SwapExecStats] = None
+        self._planned_inflight: Optional[int] = None
+
+    def make_engine(self) -> TransferEngine:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------ run
+    def run(self, graph: LayerGraph, params, x, label, *,
+            schedule: OffloadSchedule,
+            ordered: Optional[OrderedTensors] = None,
+            plan=None, lowered=None):
+        from repro.core.plan import (Compute, Free, Prefetch, SwapOut,
+                                     lower_schedule)
+        if ordered is None:
+            ordered = compute_execution_order(graph, int(x.shape[0]))
+        if lowered is None:
+            lowered = lower_schedule(ordered, schedule, plan)
+        stats = SwapExecStats(backend=self.name)
+        stats.inplace_prefetches = sum(
+            1 for d in schedule.decisions if d.inplace)
+        engine = self.make_engine()
+        hbm = HbmTracker()
+        store = ActivationStore(ordered, hbm, engine=engine)
+        store.device["__input__"] = x
+
+        def resolve_ctx(ctx: Any) -> Any:
+            return tuple(
+                store.get(e[1], stats)
+                if isinstance(e, tuple) and len(e) == 2 and e[0] == "@act"
+                else e
+                for e in ctx
+            )
+
+        ctxs: Dict[str, Any] = {}
+        derivs: Dict[str, jax.Array] = {}
+        pending_dxs: Dict[str, List[Tuple[str, jax.Array]]] = {}
+        pending_cd: Dict[str, Tuple[jax.Array, List[str]]] = {}
+        grads: Dict[str, Dict[str, jax.Array]] = {}
+        loss_val = None
+        replayed: List[Any] = []
+        inflight = 0
+        done_at: Dict[int, int] = {}      # read EO -> prefetched bytes retiring
+        retired_eo = -1
+
+        for op in lowered.ops:
+            if isinstance(op, Prefetch):
+                if op.tensor in store.alive:
+                    continue  # late swap-in already brought it back
+                store.swap_in(op.tensor, stats)
+                inflight += op.nbytes
+                done_at[op.read_eo] = done_at.get(op.read_eo, 0) + op.nbytes
+                stats.peak_inflight_prefetch = max(
+                    stats.peak_inflight_prefetch, inflight)
+                replayed.append(op)
+            elif isinstance(op, Compute):
+                # prefetches issued at earlier phases complete by their read
+                # EO: retire their double-buffer slots at the phase boundary
+                if op.eo > retired_eo:
+                    for eo in list(done_at):
+                        if eo <= op.eo:
+                            inflight -= done_at.pop(eo)
+                    retired_eo = op.eo
+                l = graph.layer(op.layer)
+                lname, kind = op.layer, op.kind
+                if kind == "F":
+                    if l.kind in LOSS_KINDS:
+                        loss_val = loss_forward(
+                            l.kind, store.get(l.inputs[0], stats), label)
+                    else:
+                        xs = [store.get(i, stats) for i in l.inputs]
+                        p = params.get(_param_owner(graph, l))
+                        y, ctx = layer_forward(l, xs, p)
+                        store.put(lname, y)
+                        # keep saved activations by *reference* into the
+                        # store, so a swap moves the residual too (same
+                        # bytes in a real arena)
+                        sym = []
+                        for e in ctx:
+                            hit = next(
+                                (i for i, xi in enumerate(xs) if e is xi),
+                                None)
+                            if hit is not None:
+                                sym.append(("@act", l.inputs[hit]))
+                            elif e is y:
+                                sym.append(("@act", lname))
+                            else:
+                                sym.append(e)
+                        ctxs[lname] = tuple(sym)
+                elif kind == "CG":
+                    if l.kind in LOSS_KINDS:
+                        pred = l.inputs[0]
+                        derivs[pred] = loss_derivative(
+                            l.kind, store.get(pred, stats), label)
+                    else:
+                        dy = derivs.pop(lname, None)
+                        if dy is not None:
+                            if l.trainable and l.weight_shapes():
+                                p = params.get(_param_owner(graph, l))
+                                g = layer_calc_gradient(
+                                    l, resolve_ctx(ctxs[lname]), dy, p)
+                                owner = _param_owner(graph, l)
+                                if owner in grads:
+                                    grads[owner] = {k: grads[owner][k] + g[k]
+                                                    for k in g}
+                                else:
+                                    grads[owner] = g
+                            upstream_needed = [
+                                i for i in l.inputs
+                                if i != "__input__" and _needs_deriv(graph, i)
+                            ]
+                            if not upstream_needed:
+                                pass
+                            elif l.kind in WEIGHTED_KINDS:
+                                # A weighted layer's saved input has a F+CG
+                                # lifespan — it is freed (or swapped) right
+                                # after this phase — so its derivative is
+                                # computed here, on the same resident
+                                # context the CG just used, and *published*
+                                # at the adjacent CD phase
+                                # (EO_CD = EO_CG + 1).
+                                p = params.get(_param_owner(graph, l))
+                                dxs = layer_calc_derivative(
+                                    l, resolve_ctx(ctxs[lname]), dy, p)
+                                pending_dxs[lname] = [
+                                    (inp, dx)
+                                    for inp, dx in zip(l.inputs, dxs)
+                                    if inp != "__input__"
+                                    and inp in upstream_needed
+                                ]
+                            else:
+                                # In-place / pool / view layers have F+CD
+                                # contexts (e.g. max-pool argmax source,
+                                # activation output) — residency and
+                                # prefetches target the CD phase.
+                                pending_cd[lname] = (dy, upstream_needed)
+                else:  # CD: compute deferred derivatives, publish D:<inp>
+                    dxs_out = pending_dxs.pop(lname, [])
+                    if lname in pending_cd:
+                        dy, upstream_needed = pending_cd.pop(lname)
+                        p = params.get(_param_owner(graph, l))
+                        dxs = layer_calc_derivative(
+                            l, resolve_ctx(ctxs[lname]), dy, p)
+                        dxs_out = [
+                            (inp, dx) for inp, dx in zip(l.inputs, dxs)
+                            if inp != "__input__" and inp in upstream_needed
+                        ]
+                    for inp, dx in dxs_out:
+                        if inp in derivs:
+                            derivs[inp] = derivs[inp] + dx
+                        else:
+                            derivs[inp] = dx
+                replayed.append(op)
+            elif isinstance(op, SwapOut):
+                if op.tensor in store.alive:
+                    store.swap_out(op.tensor, stats)
+                    replayed.append(op)
+            elif isinstance(op, Free):
+                store.free_owner(op.tensor)
+                replayed.append(op)
+
+        engine.drain(stats)
+        stats.hbm_high_water = hbm.high_water
+        stats.host_high_water = store.host_pool.high_water
+        stats.replayed_ops = tuple(replayed)
+        self._finalize_stats(stats, engine)
+        self._last_stats = stats
+        self._planned_inflight = schedule.peak_inflight_prefetch
+        if plan is not None:
+            stats.planned_peak = plan.activation_residency_peak()
+            stats.planned_host_pool = plan.host_pool_bytes
+            if stats.hbm_high_water > stats.planned_peak:
+                raise AssertionError(
+                    f"swap executor exceeded the planned residency peak: "
+                    f"{stats.hbm_high_water} > {stats.planned_peak} bytes")
+            if stats.host_high_water > stats.planned_host_pool:
+                raise AssertionError(
+                    f"swap executor exceeded the packed host pool: "
+                    f"{stats.host_high_water} > {stats.planned_host_pool} "
+                    f"bytes")
+        return loss_val, grads, stats
+
+    def _finalize_stats(self, stats: SwapExecStats,
+                        engine: TransferEngine) -> None:
+        pass
+
+    # --------------------------------------------------------------- report
+    def report(self) -> Dict[str, Any]:
+        """Summary of the last :meth:`run` (transfer counts + high waters)."""
+        if self._last_stats is None:
+            raise RuntimeError(
+                f"{type(self).__name__}.report() needs a completed run()")
+        s = self._last_stats
+        return {
+            "backend": s.backend,
+            "swap_outs": s.swap_outs,
+            "prefetches": s.prefetches,
+            "dma_bytes": s.dma_bytes,
+            "late_swap_ins": s.late_swap_ins,
+            "hbm_high_water": s.hbm_high_water,
+            "host_high_water": s.host_high_water,
+            "peak_inflight_prefetch": s.peak_inflight_prefetch,
+            "planned_peak_inflight_prefetch": self._planned_inflight,
+        }
+
+
+class SimulatedBackend(_ReplayBackend):
+    """Today's synchronous replay — the default executor backend.
+
+    Every transfer op blocks until its bytes land, so scheduling effects
+    are fully deterministic and the measured stats are bit-for-bit the
+    values the planner-validation tests have always asserted."""
+
+    name = "sim"
+
+    def make_engine(self) -> TransferEngine:
+        return SyncHostEngine()
+
+
+class AsyncDeviceBackend(_ReplayBackend):
+    """Issue the compiled transfer ops on real device streams.
+
+    ``SwapOut`` lowers to ``jax.device_put(arr, <host memory>, donate=True)``
+    dispatched (not awaited) during its scheduled phase; ``Prefetch``
+    lowers to the host->device put issued ``prefetch_margin`` phases ahead
+    of the read and fenced only when the consuming compute actually touches
+    the tensor.  On platforms with a ``pinned_host`` memory space (TPU,
+    GPU) the copies are genuine DMA against pinned memory; on CPU the
+    ``unpinned_host`` space keeps the same dispatch/fence structure for
+    testing.  ``report()`` carries the achieved overlap."""
+
+    name = "async"
+
+    def __init__(self, device=None):
+        super().__init__()
+        self.device = device
+        self._last_engine: Optional[DeviceStreamEngine] = None
+
+    def make_engine(self) -> TransferEngine:
+        self._last_engine = DeviceStreamEngine(self.device)
+        return self._last_engine
+
+    def _finalize_stats(self, stats: SwapExecStats,
+                        engine: TransferEngine) -> None:
+        assert isinstance(engine, DeviceStreamEngine)
+        stats.inflight_high_water = engine.inflight_high_water
+        stats.fences = engine.fences
+        stats.stalled_fences = engine.stalled_fences
+        stats.achieved_overlap = (engine.ready_fences / engine.fences
+                                  if engine.fences else None)
+
+    def report(self) -> Dict[str, Any]:
+        out = super().report()
+        s = self._last_stats
+        planned = self._planned_inflight
+        out.update({
+            "host_memory_kind": (self._last_engine.host_memory_kind
+                                 if self._last_engine else None),
+            "inflight_high_water": s.inflight_high_water,
+            "fences": s.fences,
+            "stalled_fences": s.stalled_fences,
+            "achieved_overlap": s.achieved_overlap,
+            # measured double-buffer occupancy vs what the plan budgeted —
+            # <= 1.0 means the stream never held more than planned
+            "inflight_vs_planned": (s.inflight_high_water / planned
+                                    if planned else None),
+        })
+        return out
+
+
+# Registry: MemoryPlanConfig.executor values -> backend factories.
+BACKENDS = {
+    SimulatedBackend.name: SimulatedBackend,
+    AsyncDeviceBackend.name: AsyncDeviceBackend,
+}
+
+
+def get_backend(executor: Union[str, ExecutorBackend, None]
+                ) -> ExecutorBackend:
+    """Resolve an executor selection to a backend instance.
+
+    ``None`` means the default (``"sim"``); a string is looked up in
+    :data:`BACKENDS` (unknown names raise with the valid options); an
+    :class:`ExecutorBackend` instance passes through untouched, the hook
+    for custom backends."""
+    if executor is None:
+        executor = SimulatedBackend.name
+    if isinstance(executor, str):
+        cls = BACKENDS.get(executor)
+        if cls is None:
+            raise ValueError(
+                f"unknown executor backend {executor!r}; "
+                f"valid: {sorted(BACKENDS)}")
+        return cls()
+    if isinstance(executor, ExecutorBackend):
+        return executor
+    raise TypeError(
+        f"executor must be a backend name {sorted(BACKENDS)} or an "
+        f"ExecutorBackend instance, got {type(executor).__name__}")
+
+
+def swap_planned_loss_and_grads(
+    graph: LayerGraph,
+    params: Dict[str, Dict[str, jax.Array]],
+    x: jax.Array, label: jax.Array, *,
+    schedule: OffloadSchedule,
+    ordered: Optional[OrderedTensors] = None,
+    plan: Optional["SwapAwarePlan"] = None,  # noqa: F821
+    lowered: Optional["ExecutionSchedule"] = None,  # noqa: F821
+    executor: Union[str, ExecutorBackend, None] = None,
+) -> Tuple[jax.Array, Dict[str, Dict[str, jax.Array]], SwapExecStats]:
+    """One layer-basis iteration replaying the compiled op list.
+
+    Identical numerics to :func:`repro.core.exec.layers.planned_loss_and_grads`
+    (arrays round-trip through host exactly), but walks the lowered
+    :class:`repro.core.plan.ExecutionSchedule` directly: every ``Compute``,
+    ``SwapOut``, ``Prefetch`` and ``Free`` was decided at compile time, so
+    the executor holds no scheduling policy — it replays ops and accounts
+    HBM / host-pool residency high-water marks.  When no ``lowered``
+    schedule is supplied (hand-wired callers) it is derived here from
+    ``schedule``/``plan``.  With a :class:`SwapAwarePlan`, asserts the
+    measured high-water marks never exceed the planned residency peak and
+    the packed host pool.  ``executor`` picks the backend ("sim" default,
+    "async" for real device streams) — see :func:`get_backend`.
+    """
+    return get_backend(executor).run(
+        graph, params, x, label, schedule=schedule, ordered=ordered,
+        plan=plan, lowered=lowered)

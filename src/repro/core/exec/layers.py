@@ -1,0 +1,397 @@
+"""Pure per-layer forward / backward math (NNTrainer §3, Figure 2(b)).
+
+The layer-operation basis decomposes training into per-layer Forward,
+Compute-Gradient and Compute-Derivative callables; this module holds that
+math and nothing else — no stores, no swap scheduling, no backends.  The
+saved context of each layer honours the lifespan analysis: weighted layers
+save inputs (F+CG), in-place activations save only their OUTPUT (F+CD),
+views save nothing.
+
+Also here: the plain (no-swap) layer-basis walk
+:func:`planned_loss_and_grads` and the whole-graph ``jax.grad`` reference
+(:func:`reference_loss_and_grads`) every executor backend is validated
+against — the paper's own CI gate ("if a weight or activation value has an
+error over 1e-4 the commit is rejected").
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import inplace
+from repro.core.graph import (LOSS_KINDS, WEIGHTED_KINDS, LayerGraph,
+                              LayerNode)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(graph: LayerGraph, rng: jax.Array,
+                dtype=jnp.float32) -> Dict[str, Dict[str, jax.Array]]:
+    """He-init weights for every weighted layer; E-shared layers reuse the
+    first unrolled copy's parameters (Tensor-sharing, CreateMode.EXTEND)."""
+    params: Dict[str, Dict[str, jax.Array]] = {}
+    for l in graph.layers:
+        if l.shares_weights_with:
+            continue  # storage owned by the first copy
+        shapes = l.weight_shapes()
+        if not shapes:
+            continue
+        entry = {}
+        for wname, shape in shapes.items():
+            rng, sub = jax.random.split(rng)
+            if wname in ("b", "beta"):
+                entry[wname] = jnp.zeros(shape, dtype)
+            elif wname in ("gamma",):
+                entry[wname] = jnp.ones(shape, dtype)
+            else:
+                fan_in = shape[0] if len(shape) > 1 else shape[0]
+                if l.kind in ("conv2d", "conv1d"):
+                    fan_in = int(np.prod(shape[1:]))
+                scale = math.sqrt(2.0 / max(fan_in, 1))
+                entry[wname] = jax.random.normal(sub, shape, dtype) * scale
+        params[l.name] = entry
+    return params
+
+
+def _param_owner(graph: LayerGraph, l: LayerNode) -> str:
+    return l.shares_weights_with or l.name
+
+
+# ---------------------------------------------------------------------------
+# Per-layer forward / backward (layer basis: F, CG, CD as separate callables)
+# ---------------------------------------------------------------------------
+
+def _conv2d_fwd(x, w, b, stride, padding):
+    # x: (B, C, H, W), w: (O, I, K, K)
+    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape, ("NCHW", "OIHW", "NCHW"))
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding.upper(), dimension_numbers=dn)
+    if b is not None:
+        y = y + b[None, :, None, None]
+    return y
+
+
+def _pool2d_fwd(x, ksize, stride):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max,
+        (1, 1, ksize, ksize), (1, 1, stride, stride), "VALID")
+
+
+def _lstm_cell(x, h, c, wx, wh, b):
+    gates = x @ wx + h @ wh + b
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def layer_forward(l: LayerNode, xs: List[jax.Array],
+                  p: Optional[Dict[str, jax.Array]],
+                  state: Optional[Dict[str, jax.Array]] = None
+                  ) -> Tuple[jax.Array, Any]:
+    """Forward one layer; returns (output, saved-context for backward).
+
+    The saved context honours the lifespan analysis: weighted layers save
+    inputs (F+CG), in-place activations save only their OUTPUT (F+CD),
+    views save nothing.
+    """
+    a = l.attrs
+    x = xs[0]
+    if l.kind == "linear":
+        y = x @ p["w"]
+        if "b" in p:
+            y = y + p["b"]
+        return y, (x,)
+    if l.kind == "conv2d":
+        y = _conv2d_fwd(x, p["w"], p.get("b"), a.get("stride", 1),
+                        a.get("padding", "same"))
+        return y, (x,)
+    if l.kind == "activation":
+        y = inplace.apply_activation(a["fn"], x)
+        return y, (y,)     # output-only residual: the in-place property
+    if l.kind == "batchnorm":
+        mean = jnp.mean(x, axis=0, keepdims=True)
+        var = jnp.var(x, axis=0, keepdims=True)
+        inv_std = jax.lax.rsqrt(var + 1e-5)
+        y = p["gamma"] * (x - mean) * inv_std + p["beta"]
+        return y, (y, inv_std)   # output-based residual (paper §3)
+    if l.kind == "flatten":
+        return x.reshape(x.shape[0], -1), (x.shape,)
+    if l.kind == "reshape":
+        return x.reshape((x.shape[0],) + tuple(a["out_shape"])), (x.shape,)
+    if l.kind == "pool2d":
+        y = _pool2d_fwd(x, a["ksize"], a.get("stride", a["ksize"]))
+        return y, (x,)   # backward needs the argmax source only (F+CD input)
+    if l.kind == "add":
+        y = xs[0]
+        for other in xs[1:]:
+            y = y + other
+        return y, (len(xs),)
+    if l.kind == "concat":
+        axis = a.get("axis", -1)
+        return jnp.concatenate(xs, axis=axis), ([x.shape[axis] for x in xs], axis)
+    if l.kind == "multiout":
+        return x, ()
+    if l.kind == "embedding":
+        idx = x.astype(jnp.int32)
+        flat = idx[..., 0] if idx.ndim > 1 else idx
+        return jnp.take(p["w"], flat, axis=0), (flat,)
+    if l.kind == "lstm":
+        h = jnp.zeros(x.shape[:-1] + (a["hidden"],), x.dtype) if state is None \
+            else state["h"]
+        c = jnp.zeros_like(h) if state is None else state["c"]
+        h_new, c_new = _lstm_cell(x, h, c, p["wx"], p["wh"], p["b"])
+        return h_new, (x, h, c)   # backward recomputes gates; outputs unused
+    raise ValueError(f"forward not implemented for {l.kind}")
+
+
+def layer_calc_gradient(l: LayerNode, ctx: Any, dy: jax.Array,
+                        p: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """CG phase: weight gradients from saved context + incoming derivative."""
+    if l.kind == "linear":
+        (x,) = ctx
+        g = {"w": x.reshape(-1, x.shape[-1]).T @ dy.reshape(-1, dy.shape[-1])}
+        if "b" in p:
+            g["b"] = dy.reshape(-1, dy.shape[-1]).sum(0)
+        return g
+    if l.kind == "conv2d":
+        (x,) = ctx
+        # dW via autodiff of the conv primitive w.r.t. w only (keeps the
+        # layer-basis structure; XLA emits the standard conv-grad kernel).
+        a = l.attrs
+        _, vjp = jax.vjp(
+            lambda w: _conv2d_fwd(x, w, None, a.get("stride", 1),
+                                  a.get("padding", "same")), p["w"])
+        g = {"w": vjp(dy)[0]}
+        if "b" in p:
+            g["b"] = dy.sum(axis=(0, 2, 3))
+        return g
+    if l.kind == "batchnorm":
+        y, inv_std = ctx
+        gamma, beta = p["gamma"], p["beta"]
+        xhat = (y - beta) / jnp.where(gamma == 0, 1.0, gamma)
+        return {"gamma": jnp.sum(dy * xhat, axis=0), "beta": jnp.sum(dy, axis=0)}
+    if l.kind == "embedding":
+        (idx,) = ctx
+        g = jnp.zeros(p["w"].shape, dy.dtype)
+        flat_idx = idx.reshape(-1) if idx.ndim > 1 else idx
+        return {"w": g.at[flat_idx].add(dy.reshape(flat_idx.shape[0], -1))}
+    if l.kind == "lstm":
+        x, h0, c0 = ctx
+        def f(wx, wh, b):
+            h, _ = _lstm_cell(x, h0, c0, wx, wh, b)
+            return h
+        _, vjp = jax.vjp(f, p["wx"], p["wh"], p["b"])
+        gwx, gwh, gb = vjp(dy)
+        return {"wx": gwx, "wh": gwh, "b": gb}
+    return {}
+
+
+def layer_calc_derivative(l: LayerNode, ctx: Any, dy: jax.Array,
+                          p: Optional[Dict[str, jax.Array]]) -> List[jax.Array]:
+    """CD phase: derivative(s) w.r.t. the layer's input(s)."""
+    a = l.attrs
+    if l.kind == "linear":
+        return [dy @ p["w"].T]
+    if l.kind == "conv2d":
+        (x,) = ctx
+        _, vjp = jax.vjp(
+            lambda xx: _conv2d_fwd(xx, p["w"], None, a.get("stride", 1),
+                                   a.get("padding", "same")), x)
+        return [vjp(dy)[0]]
+    if l.kind == "activation":
+        (y,) = ctx
+        return [inplace.deriv_from_output(a["fn"], y, dy)]
+    if l.kind == "batchnorm":
+        y, inv_std = ctx
+        gamma, beta = p["gamma"], p["beta"]
+        n = y.shape[0]
+        xhat = (y - beta) / jnp.where(gamma == 0, 1.0, gamma)
+        dxhat = dy * gamma
+        s1 = jnp.sum(dxhat, axis=0, keepdims=True)
+        s2 = jnp.sum(dxhat * xhat, axis=0, keepdims=True)
+        return [(inv_std / n) * (n * dxhat - s1 - xhat * s2)]
+    if l.kind in ("flatten", "reshape"):
+        (shape,) = ctx
+        return [dy.reshape(shape)]
+    if l.kind == "pool2d":
+        (x,) = ctx
+        k, s = a["ksize"], a.get("stride", a["ksize"])
+        _, vjp = jax.vjp(lambda xx: _pool2d_fwd(xx, k, s), x)
+        return [vjp(dy)[0]]
+    if l.kind == "add":
+        (n,) = ctx
+        return [dy] * n
+    if l.kind == "concat":
+        sizes, axis = ctx
+        splits = np.cumsum(sizes)[:-1].tolist()
+        return list(jnp.split(dy, splits, axis=axis))
+    if l.kind == "multiout":
+        return [dy]
+    if l.kind == "embedding":
+        return []  # integer inputs: no derivative
+    if l.kind == "lstm":
+        x, h0, c0 = ctx
+        def f(xx):
+            h, _ = _lstm_cell(xx, h0, c0, p["wx"], p["wh"], p["b"])
+            return h
+        _, vjp = jax.vjp(f, x)
+        return [vjp(dy)[0]]
+    raise ValueError(f"calc_derivative not implemented for {l.kind}")
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def loss_forward(kind: str, pred: jax.Array, label: jax.Array) -> jax.Array:
+    if kind == "loss_mse":
+        return jnp.mean((pred - label) ** 2)
+    if kind == "loss_ce":
+        logp = jax.nn.log_softmax(pred, axis=-1)
+        return -jnp.mean(jnp.sum(label * logp, axis=-1))
+    raise ValueError(kind)
+
+
+def loss_derivative(kind: str, pred: jax.Array, label: jax.Array) -> jax.Array:
+    n = pred.size if kind == "loss_mse" else pred.shape[0]
+    if kind == "loss_mse":
+        return 2.0 * (pred - label) / n
+    if kind == "loss_ce":
+        # combined softmax+CE derivative (the Loss realizer removed softmax)
+        return (jax.nn.softmax(pred, axis=-1) - label) / n
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# The plain planned training step (no swap schedule)
+# ---------------------------------------------------------------------------
+
+def planned_loss_and_grads(graph: LayerGraph,
+                           params: Dict[str, Dict[str, jax.Array]],
+                           x: jax.Array, label: jax.Array
+                           ) -> Tuple[jax.Array, Dict[str, Dict[str, jax.Array]]]:
+    """One layer-basis training iteration: F sweep, then CG/CD sweep.
+
+    Returns (loss, grads) with grads keyed by parameter-owner layer name;
+    E-shared (unrolled) layers accumulate into their owner's entry.
+    """
+    acts: Dict[str, jax.Array] = {"__input__": x}
+    ctxs: Dict[str, Any] = {}
+    loss_node = None
+    loss_val = None
+
+    # ---- Forward (EO 0..N-1) ------------------------------------------------
+    for l in graph.layers:
+        if l.kind in ("loss_mse", "loss_ce"):
+            loss_node = l
+            loss_val = loss_forward(l.kind, acts[l.inputs[0]], label)
+            continue
+        xs = [acts[i] for i in l.inputs]
+        p = params.get(_param_owner(graph, l))
+        y, ctx = layer_forward(l, xs, p)
+        acts[l.name] = y
+        ctxs[l.name] = ctx
+
+    # ---- Backward (EO N..3N): CG then CD per layer, reverse order ----------
+    derivs: Dict[str, jax.Array] = {}
+    pred_name = loss_node.inputs[0]
+    derivs[pred_name] = loss_derivative(loss_node.kind, acts[pred_name], label)
+
+    grads: Dict[str, Dict[str, jax.Array]] = {}
+    for l in reversed(graph.layers):
+        if l.kind in ("loss_mse", "loss_ce"):
+            continue
+        dy = derivs.pop(l.name, None)   # Backward lifespan: consumed here
+        if dy is None:
+            continue  # dead derivative (pruned subgraph)
+        p = params.get(_param_owner(graph, l))
+        # CG phase
+        if l.trainable and l.weight_shapes():
+            g = layer_calc_gradient(l, ctxs[l.name], dy, p)
+            owner = _param_owner(graph, l)
+            if owner in grads:
+                grads[owner] = {k: grads[owner][k] + g[k] for k in g}
+            else:
+                grads[owner] = g
+        # CD phase — skipped when no upstream layer needs the derivative
+        # (first layer / frozen backbone: dead-derivative pruning).
+        upstream_needed = [
+            i for i in l.inputs if i != "__input__" and _needs_deriv(graph, i)
+        ]
+        if upstream_needed:
+            dxs = layer_calc_derivative(l, ctxs[l.name], dy, p)
+            for inp, dx in zip(l.inputs, dxs):
+                if inp == "__input__" or inp not in upstream_needed:
+                    continue
+                if inp in derivs:
+                    derivs[inp] = derivs[inp] + dx   # fan-out accumulation
+                else:
+                    derivs[inp] = dx
+    return loss_val, grads
+
+
+def _needs_deriv(graph: LayerGraph, name: str) -> bool:
+    from repro.core.graph import _has_trainable_upstream
+    node = graph.layer(name)
+    if node.kind in WEIGHTED_KINDS and node.trainable and node.weight_shapes():
+        return True
+    return _has_trainable_upstream(graph, node)
+
+
+# ---------------------------------------------------------------------------
+# Whole-graph reference (conventional tape autodiff) for validation
+# ---------------------------------------------------------------------------
+
+def reference_forward(graph: LayerGraph,
+                      params: Dict[str, Dict[str, jax.Array]],
+                      x: jax.Array) -> jax.Array:
+    acts: Dict[str, jax.Array] = {"__input__": x}
+    out = None
+    for l in graph.layers:
+        if l.kind in ("loss_mse", "loss_ce"):
+            out = acts[l.inputs[0]]
+            continue
+        xs = [acts[i] for i in l.inputs]
+        p = params.get(_param_owner(graph, l))
+        y, _ = layer_forward(l, xs, p)
+        acts[l.name] = y
+    return out if out is not None else acts[graph.layers[-1].name]
+
+
+def reference_loss_and_grads(graph: LayerGraph,
+                             params: Dict[str, Dict[str, jax.Array]],
+                             x: jax.Array, label: jax.Array):
+    loss_kind = next(l.kind for l in graph.layers if l.kind.startswith("loss"))
+    trainable_owners = {
+        _param_owner(graph, l) for l in graph.layers
+        if l.trainable and l.weight_shapes()
+    }
+    train_p = {k: v for k, v in params.items() if k in trainable_owners}
+    frozen_p = {k: v for k, v in params.items() if k not in trainable_owners}
+
+    def loss_fn(tp):
+        pred = reference_forward(graph, {**frozen_p, **tp}, x)
+        return loss_forward(loss_kind, pred, label)
+
+    loss, grads = jax.value_and_grad(loss_fn)(train_p)
+    return loss, grads
+
+
+def sgd_update(params, grads, lr=1e-2):
+    out = {}
+    for lname, entry in params.items():
+        if lname in grads:
+            out[lname] = {k: v - lr * grads[lname][k] for k, v in entry.items()}
+        else:
+            out[lname] = entry
+    return out

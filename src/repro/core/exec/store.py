@@ -1,0 +1,331 @@
+"""Activation store, residency trackers and the transfer-engine seam.
+
+The store owns *what lives where* (device tier, host tier, alias groups,
+byte accounting); it holds no scheduling policy and no opinion about *how*
+bytes move.  Data movement is delegated to a :class:`TransferEngine`:
+
+* :class:`SyncHostEngine` — synchronous ``numpy`` round trips, the
+  simulated-DMA behaviour the plan validation relies on;
+* :class:`DeviceStreamEngine` — real ``jax.device_put`` copies between the
+  device and its (pinned) host memory space, *dispatched* when the op is
+  replayed and *fenced* only when a consumer reads the tensor, so the DMA
+  overlaps the compute issued in between (NNTrainer §6's proactive swap on
+  actual device streams).  The engine measures the overlap it achieved:
+  how many fences found the transfer already complete, and the in-flight
+  byte high-water mark to compare against the plan's
+  ``peak_inflight_prefetch``.
+
+Backends (:mod:`repro.core.exec.backends`) pick the engine; everything
+else — alias groups, owner accounting, high-water marks — is shared.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Protocol, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.execution_order import OrderedTensors
+from repro.core.lifespan import CreateMode
+
+
+@dataclasses.dataclass
+class SwapExecStats:
+    """What the swap executor actually did during one iteration."""
+    swap_outs: int = 0
+    prefetches: int = 0
+    inplace_prefetches: int = 0    # re-residencies that needed no copy
+    dma_bytes: int = 0             # device<->host bytes moved
+    late_swap_ins: int = 0         # schedule misses: access before prefetch
+    hbm_high_water: int = 0        # peak resident planned-activation bytes
+    host_high_water: int = 0       # peak resident host-pool bytes
+    planned_peak: Optional[int] = None   # SwapAwarePlan's residency bound
+    planned_host_pool: Optional[int] = None  # packed host arena bound
+    peak_inflight_prefetch: int = 0      # double-buffer occupancy peak
+    # the ops actually executed, in order — equals the compiled
+    # ExecutionSchedule.ops exactly when no schedule miss occurred
+    replayed_ops: Tuple = ()
+    # ---- backend-specific fields (defaults describe the simulated path) ----
+    backend: str = "sim"
+    # async engine: peak bytes issued on the device stream but not yet
+    # fenced by a consumer — the measured double-buffer occupancy to hold
+    # against the plan's ``peak_inflight_prefetch``
+    inflight_high_water: int = 0
+    fences: int = 0                # consumer-side waits on in-flight copies
+    stalled_fences: int = 0        # fences that actually had to block
+    # fraction of fences that found the transfer already complete (the DMA
+    # fully overlapped compute); None when no real transfers were issued
+    achieved_overlap: Optional[float] = None
+
+
+class HbmTracker:
+    """High-water-mark accounting over the planned activation bytes."""
+
+    def __init__(self):
+        self.current = 0
+        self.high_water = 0
+
+    def alloc(self, nbytes: int) -> None:
+        self.current += nbytes
+        self.high_water = max(self.high_water, self.current)
+
+    def free(self, nbytes: int) -> None:
+        self.current -= nbytes
+
+
+class TransferEngine(Protocol):
+    """How activation bytes move between the device and host tiers.
+
+    ``swap_out``/``swap_in`` receive the member arrays of one owner group
+    and return the handles of the destination tier; ``fence`` blocks until
+    a previously issued ``swap_in`` of ``owner`` is complete (no-op for
+    synchronous engines and for owners with nothing in flight); ``drain``
+    fences everything still outstanding at the end of an iteration.
+    """
+
+    name: str
+
+    def swap_out(self, owner: str, members: Dict[str, jax.Array],
+                 nbytes: int) -> Dict[str, Any]: ...
+
+    def swap_in(self, owner: str, members: Dict[str, Any],
+                nbytes: int) -> Dict[str, jax.Array]: ...
+
+    def fence(self, owner: str, stats: SwapExecStats) -> None: ...
+
+    def drain(self, stats: SwapExecStats) -> None: ...
+
+
+class SyncHostEngine:
+    """Synchronous host round trips (simulated DMA, bit-for-bit stable).
+
+    ``np.asarray`` blocks until the device buffer is materialised on host;
+    ``jnp.asarray`` blocks the other way.  Nothing is ever in flight, so
+    fences are free and the measured overlap is undefined (None).
+    """
+
+    name = "sync_host"
+
+    def swap_out(self, owner: str, members: Dict[str, jax.Array],
+                 nbytes: int) -> Dict[str, Any]:
+        return {m: np.asarray(a) for m, a in members.items()}
+
+    def swap_in(self, owner: str, members: Dict[str, Any],
+                nbytes: int) -> Dict[str, jax.Array]:
+        return {m: jnp.asarray(h) for m, h in members.items()}
+
+    def fence(self, owner: str, stats: SwapExecStats) -> None:
+        pass
+
+    def drain(self, stats: SwapExecStats) -> None:
+        pass
+
+
+def _host_memory_kind(device) -> Optional[str]:
+    """The device's host memory space: pinned when the platform has one
+    (TPU/GPU), the unpinned host space otherwise (CPU), None when the
+    installed jax predates memory kinds."""
+    try:
+        kinds = {m.kind for m in device.addressable_memories()}
+    except Exception:  # pragma: no cover - very old jax
+        return None
+    if "pinned_host" in kinds:
+        return "pinned_host"
+    if "unpinned_host" in kinds:
+        return "unpinned_host"
+    return None
+
+
+class DeviceStreamEngine:
+    """Async device-stream transfers via ``jax.device_put``.
+
+    Swap-outs are dispatched as donated device->host copies the moment
+    their op is replayed — donation releases the device buffer without a
+    blocking copy-back.  Prefetches are dispatched host->device at their
+    scheduled EO and left *in flight*; the consumer's read fences them.
+    JAX's runtime orders a prefetch after its own swap-out automatically
+    (data dependency), so no manual event chaining is needed.
+
+    Measured stats:
+
+    * ``inflight_high_water`` — peak bytes issued-but-not-fenced, the
+      achieved double-buffer occupancy (compare: the plan's
+      ``peak_inflight_prefetch``);
+    * ``ready_fences / fences`` — the achieved overlap fraction: a fence
+      that finds its transfer complete means the DMA fully hid behind the
+      compute dispatched since the issue EO.
+    """
+
+    name = "device_stream"
+
+    def __init__(self, device=None):
+        self.device = device if device is not None else jax.devices()[0]
+        kind = _host_memory_kind(self.device)
+        Single = jax.sharding.SingleDeviceSharding
+        self.device_sharding = Single(self.device)
+        self.host_sharding = (Single(self.device, memory_kind=kind)
+                              if kind else Single(self.device))
+        self.host_memory_kind = kind
+        self._inflight: Dict[str, Tuple[int, List[jax.Array]]] = {}
+        self.inflight_bytes = 0
+        self.inflight_high_water = 0
+        self.fences = 0
+        self.ready_fences = 0
+        self.stalled_fences = 0
+        self.d2h_issued = 0
+        self.h2d_issued = 0
+
+    # ------------------------------------------------------------- issue
+    def swap_out(self, owner: str, members: Dict[str, jax.Array],
+                 nbytes: int) -> Dict[str, Any]:
+        out = {}
+        for m, a in members.items():
+            out[m] = jax.device_put(a, self.host_sharding, donate=True)
+            self.d2h_issued += 1
+        return out
+
+    def swap_in(self, owner: str, members: Dict[str, Any],
+                nbytes: int) -> Dict[str, jax.Array]:
+        arrays = {}
+        for m, h in members.items():
+            arrays[m] = jax.device_put(h, self.device_sharding)
+            self.h2d_issued += 1
+        if arrays:
+            self._inflight[owner] = (nbytes, list(arrays.values()))
+            self.inflight_bytes += nbytes
+            self.inflight_high_water = max(self.inflight_high_water,
+                                           self.inflight_bytes)
+        return arrays
+
+    # ------------------------------------------------------------- fence
+    def fence(self, owner: str, stats: SwapExecStats) -> None:
+        entry = self._inflight.pop(owner, None)
+        if entry is None:
+            return
+        nbytes, arrays = entry
+        ready = all(a.is_ready() for a in arrays
+                    if hasattr(a, "is_ready"))
+        jax.block_until_ready(arrays)
+        self.inflight_bytes -= nbytes
+        self.fences += 1
+        if ready:
+            self.ready_fences += 1
+        else:
+            self.stalled_fences += 1
+        stats.fences = self.fences
+        stats.stalled_fences = self.stalled_fences
+
+    def drain(self, stats: SwapExecStats) -> None:
+        for owner in list(self._inflight):
+            self.fence(owner, stats)
+
+
+class ActivationStore:
+    """Layer-output store with device/host tiers and post-merge alias groups.
+
+    Keys are layer names; bytes are accounted per *owner* tensor (the
+    post-merge ``X:`` CREATE owner), so an in-place activation output that
+    aliases its producer's storage is neither double-counted nor separately
+    swapped — swapping an owner moves every alias with it, exactly like one
+    arena region moving to host.  The store holds no scheduling logic: the
+    executor drives it by replaying the compiled
+    :class:`repro.core.plan.ExecutionSchedule` op by op, and the wired
+    :class:`TransferEngine` decides whether the bytes move synchronously
+    or on a real device stream.
+    """
+
+    def __init__(self, ordered: OrderedTensors, hbm: HbmTracker,
+                 host_pool: Optional[HbmTracker] = None,
+                 engine: Optional[TransferEngine] = None):
+        self.ordered = ordered
+        self.hbm = hbm
+        self.host_pool = host_pool or HbmTracker()
+        self.engine = engine or SyncHostEngine()
+        self.device: Dict[str, jax.Array] = {}
+        self.host: Dict[str, Any] = {}
+        self.members: Dict[str, Set[str]] = {}     # owner -> layer names
+        self.alive: Set[str] = set()               # owners holding HBM bytes
+        self._owner_cache: Dict[str, Optional[str]] = {}
+
+    def owner_of(self, lname: str) -> Optional[str]:
+        """The planned X: owner accounting this output's bytes, if any."""
+        if lname in self._owner_cache:
+            return self._owner_cache[lname]
+        owner = self.ordered.owner(f"X:{lname}")
+        spec = self.ordered.tensors.get(owner)
+        tracked = (spec is not None and spec.create_mode == CreateMode.CREATE
+                   and spec.merged_into is None)
+        self._owner_cache[lname] = owner if tracked else None
+        return self._owner_cache[lname]
+
+    def put(self, lname: str, y: jax.Array) -> None:
+        self.device[lname] = y
+        owner = self.owner_of(lname)
+        if owner is None:
+            return
+        self.members.setdefault(owner, set()).add(lname)
+        if owner not in self.alive:
+            self.alive.add(owner)
+            self.hbm.alloc(self.ordered.tensors[owner].nbytes)
+
+    def get(self, lname: str, stats: SwapExecStats) -> jax.Array:
+        if lname in self.device:
+            owner = self.owner_of(lname)
+            if owner is not None:
+                # consumer read: fence any prefetch still in flight for
+                # this alias group (no-op on the synchronous engine)
+                self.engine.fence(owner, stats)
+            return self.device[lname]
+        owner = self.owner_of(lname)
+        if owner is not None and lname in self.host:
+            # The schedule was wrong (or margins too tight): blocking swap-in.
+            stats.late_swap_ins += 1
+            self.swap_in(owner, stats)
+            self.engine.fence(owner, stats)
+            return self.device[lname]
+        raise KeyError(f"activation {lname!r} neither on device nor host")
+
+    def swap_out(self, owner: str, stats: SwapExecStats) -> None:
+        nbytes = self.ordered.tensors[owner].nbytes
+        moved = {}
+        for m in self.members.get(owner, ()):
+            if m in self.device:
+                moved[m] = self.device.pop(m)
+        self.host.update(self.engine.swap_out(owner, moved, nbytes))
+        self.alive.discard(owner)
+        self.hbm.free(nbytes)
+        self.host_pool.alloc(nbytes)
+        stats.swap_outs += 1
+        stats.dma_bytes += nbytes
+
+    def swap_in(self, owner: str, stats: SwapExecStats) -> None:
+        nbytes = self.ordered.tensors[owner].nbytes
+        moved = {}
+        for m in self.members.get(owner, ()):
+            if m in self.host:
+                moved[m] = self.host.pop(m)
+        self.device.update(self.engine.swap_in(owner, moved, nbytes))
+        self.alive.add(owner)
+        self.hbm.alloc(nbytes)
+        self.host_pool.free(nbytes)
+        stats.prefetches += 1
+        stats.dma_bytes += nbytes
+
+    def free_owner(self, owner: str) -> None:
+        on_host = False
+        for m in self.members.get(owner, ()):
+            self.device.pop(m, None)
+            on_host |= self.host.pop(m, None) is not None
+        if on_host:
+            self.host_pool.free(self.ordered.tensors[owner].nbytes)
+        if owner in self.alive:
+            self.alive.discard(owner)
+            self.hbm.free(self.ordered.tensors[owner].nbytes)
+
+
+# Backwards-compatible private aliases (the pre-subsystem names).
+_HbmTracker = HbmTracker
+_ActivationStore = ActivationStore

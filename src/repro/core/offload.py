@@ -25,10 +25,11 @@ The schedule produced here is consumed in two places:
   at a stable offset, so the swap moves no data at all;
 * :func:`repro.core.plan.lower_schedule` — lowers the decisions (plus the
   compute phases and frees) into the flat, typed
-  :class:`repro.core.plan.ExecutionSchedule` that
-  :func:`repro.core.planned_exec.swap_planned_loss_and_grads` replays op
-  by op, with HBM and host-pool high-water trackers proving the planned
-  bounds are respected.
+  :class:`repro.core.plan.ExecutionSchedule` that the executor backends
+  (:mod:`repro.core.exec.backends`: synchronous ``sim`` replay or the
+  ``async`` device-stream backend) replay op by op, with HBM and
+  host-pool high-water trackers proving the planned bounds are
+  respected.
 
 On TPU the same decisions lower to ``jax.checkpoint`` offload policies via
 :func:`offload_policy` (device->pinned-host copies overlapped with compute

@@ -74,6 +74,10 @@ knob (default)          meaning
 ``dma_gbps`` (None)     host-DMA bandwidth pricing the offload lane
 ``device_tflops``       device throughput pricing the recompute lane (None)
 ``offload_dropped``     DEPRECATED "DMA is free" alias (None)
+``executor``            executor backend replaying the lowered schedule:
+(``"sim"``)             sim (synchronous, deterministic stats) | async
+                        (real ``jax.device_put`` device-stream transfers,
+                        fenced at the consumer, overlap measured)
 ======================  =====================================================
 """
 
@@ -84,6 +88,7 @@ import math
 import warnings
 from typing import Any, Dict, List, Optional, Tuple, Union
 
+from repro.core.deprecation import warn_once
 from repro.core.execution_order import OrderedTensors, compute_execution_order
 from repro.core.graph import LayerGraph
 from repro.core.offload import (OffloadSchedule, make_schedule,
@@ -113,6 +118,13 @@ class MemoryPlanConfig:
     ``cooptimize``       iterate schedule <-> packer to a fixed point,
                          dropping swaps whose vacated bytes reclaimed no
                          packed peak
+    ``executor``         backend replaying the lowered ExecutionSchedule:
+                         "sim" (synchronous replay, bit-for-bit stats,
+                         the default) or "async" (transfers issued as real
+                         ``jax.device_put`` copies against the device's
+                         host memory space, dispatched ahead of need and
+                         fenced at the consumer; achieved overlap
+                         reported).  See ``repro.core.exec.backends``.
 
     Remat / offload knobs (model-config path — the joint planner):
 
@@ -145,6 +157,7 @@ class MemoryPlanConfig:
     prefetch_margin: int = 2
     hbm_budget_bytes: Optional[int] = None
     cooptimize: bool = True
+    executor: str = "sim"
 
     remat: Optional[bool] = None
     remat_budget_bytes: Optional[int] = None
@@ -331,6 +344,11 @@ class CompiledMemoryPlan:
     remat_plan: Optional[RematPlan] = None
     batch_tokens: Optional[int] = None
 
+    # what the last ``loss_and_grads`` execution reported (backend name,
+    # transfer counts, achieved overlap for the async backend); None until
+    # the compiled plan has been executed at least once
+    exec_report: Optional[Dict[str, Any]] = None
+
     # ------------------------------------------------------------- queries
     @property
     def peak_bytes(self) -> int:
@@ -405,26 +423,36 @@ class CompiledMemoryPlan:
     def init_params(self, rng):
         """He-init parameters for the compiled graph (graph path only)."""
         self._require_graph("init_params")
-        from repro.core.planned_exec import init_params
+        from repro.core.exec.layers import init_params
         return init_params(self.graph, rng)
 
-    def loss_and_grads(self, params, x, label):
+    def loss_and_grads(self, params, x, label, *, executor=None):
         """One layer-basis training iteration under this plan.
 
-        Executes the compiled swap schedule phase-by-phase (an empty
-        schedule degrades to the plain planned walk) and asserts the HBM
-        high-water mark respects the packed residency peak.  Returns
-        ``(loss, grads, SwapExecStats)``.
+        Replays the lowered op list on the configured executor backend
+        (``config.executor``; the ``executor=`` argument overrides per
+        call — a registry name or an ``ExecutorBackend`` instance).  An
+        empty schedule degrades to the plain planned walk; the HBM
+        high-water mark is asserted against the packed residency peak on
+        every backend.  The backend's post-run summary (transfer counts,
+        and for ``"async"`` the achieved overlap vs the planned
+        ``peak_inflight_prefetch``) lands in ``self.exec_report`` and is
+        folded into :meth:`report`.  Returns ``(loss, grads,
+        SwapExecStats)``.
         """
         self._require_graph("loss_and_grads")
-        from repro.core.planned_exec import swap_planned_loss_and_grads
-        return swap_planned_loss_and_grads(
+        from repro.core.exec.backends import get_backend
+        backend = get_backend(
+            executor if executor is not None else self.config.executor)
+        out = backend.run(
             self.graph, params, x, label,
             schedule=self.schedule,
             ordered=self.ordered,
             plan=self.plan if isinstance(self.plan, SwapAwarePlan) else None,
             lowered=self.lowered,
         )
+        self.exec_report = backend.report()
+        return out
 
     def _require_graph(self, what: str) -> None:
         if self.source != "graph" or self.graph is None:
@@ -439,6 +467,11 @@ class CompiledMemoryPlan:
         out: Dict[str, Any] = {
             "source": self.source,
             "planner": self.config.planner,
+            # the backend that actually executed (a per-call executor=
+            # override wins over the configured knob); the config knob
+            # until the plan has run
+            "executor": ((self.exec_report or {}).get("backend")
+                         or self.config.executor),
             "peak_bytes": self.peak_bytes,
             "host_pool_bytes": self.host_pool_bytes,
             "dma_bytes": self.dma_bytes,
@@ -457,6 +490,10 @@ class CompiledMemoryPlan:
                 out["host_utilization"] = self.host_utilization
             if self.lowered is not None:
                 out["schedule_ops"] = self.lowered.counts()
+            if self.exec_report is not None:
+                # what the last execution measured, incl. the async
+                # backend's achieved overlap vs peak_inflight_prefetch
+                out["exec"] = dict(self.exec_report)
         if self.coopt is not None:
             out["coopt_rounds"] = self.coopt.rounds
             out["coopt_dropped"] = list(self.coopt.dropped)
@@ -551,9 +588,11 @@ def compile_plan(graph_or_model, config: Optional[MemoryPlanConfig] = None,
 
 def _compile_graph_plan(graph: LayerGraph, config: MemoryPlanConfig,
                         batch: int) -> CompiledMemoryPlan:
-    # fail fast on planner-name typos, before any analysis runs
+    # fail fast on planner- and executor-name typos, before any analysis
+    from repro.core.exec.backends import get_backend
     get_planner(config.planner)
     get_planner(config.host_planner)
+    get_backend(config.executor)
 
     ordered = compute_execution_order(graph, batch)
     baseline = get_planner(config.planner).plan(ordered)
@@ -594,6 +633,11 @@ def _compile_graph_plan(graph: LayerGraph, config: MemoryPlanConfig,
 
 def _compile_model_plan(cfg, config: MemoryPlanConfig,
                         batch_tokens: Optional[int]) -> CompiledMemoryPlan:
+    # the executor knob travels with the config even on the model path
+    # (model plans install a checkpoint policy instead of running the
+    # layer-basis executor) — still fail fast on typos
+    from repro.core.exec.backends import get_backend
+    get_backend(config.executor)
     if batch_tokens is None:
         raise TypeError("compile_plan(model_config) requires batch_tokens=")
     remat_on = config.remat if config.remat is not None \
@@ -609,7 +653,7 @@ def _compile_model_plan(cfg, config: MemoryPlanConfig,
     # ``offload`` knob / ``cfg.offload`` enables the priced joint planner.
     free_dma = False
     if config.offload_dropped is not None:
-        warnings.warn(
+        warn_once(
             "MemoryPlanConfig.offload_dropped is deprecated: True prices "
             "DMA as free and offloads every budget-missing intermediate; "
             "use MemoryPlanConfig(offload=True, dma_gbps=..., "

@@ -1,720 +1,50 @@
-"""Layer-operation-basis training executor (NNTrainer §3/§4, Figure 2(b)).
+"""Compatibility shim over the executor subsystem :mod:`repro.core.exec`.
 
-Executes a :class:`LayerGraph` the way NNTrainer does: an explicit schedule
-of per-layer Forward, Compute-Gradient and Compute-Derivative phases, with
-saved tensors chosen by the lifespan analysis rather than by a tape.  This
-is the JAX realisation of the paper's layer-basis engine:
+The monolithic layer-basis executor that used to live here was split into
+a subsystem (the pluggable-backend refactor):
 
-* forward pass stores exactly the residuals the plan retains (inputs for
-  weighted layers, *outputs* for in-place activations / batch-norm);
-* backward walks layers in reverse: CG (weight grads) then CD (input
-  derivative), with the incoming-derivative buffer logically shared —
-  D tensors are consumed exactly once, matching Backward lifespans;
-* unrolled recurrences accumulate gradients across time and the optimizer
-  applies them once per iteration (Iteration lifespan, §5.2);
-* :func:`swap_planned_loss_and_grads` additionally replays the compiled
-  :class:`repro.core.plan.ExecutionSchedule` — the proactive host-swap
-  plan (§6) lowered to typed ``Compute``/``SwapOut``/``Prefetch``/``Free``
-  ops — with high-water-mark accounting proving the swap-aware plan's
-  residency peak and packed host pool are respected.
+* :mod:`repro.core.exec.layers`   — pure per-layer F/CG/CD math, the plain
+  planned walk and the whole-graph ``jax.grad`` reference;
+* :mod:`repro.core.exec.store`    — :class:`HbmTracker` /
+  :class:`ActivationStore` with the transfer-engine seam;
+* :mod:`repro.core.exec.backends` — the :class:`ExecutorBackend` protocol
+  with :class:`SimulatedBackend` (synchronous replay, default) and
+  :class:`AsyncDeviceBackend` (real ``jax.device_put`` device-stream
+  transfers, fenced at the consumer).
 
-Gradients are validated against whole-graph ``jax.grad`` (see
-``reference_loss_and_grads``) to 1e-5 in tests — the paper's own CI gate
-("if a weight or activation value has an error over 1e-4 the commit is
-rejected").
+Every public (and previously-private-but-imported) name keeps resolving
+from here so existing imports continue to work; new code should import
+from :mod:`repro.core.exec` or go through
+``repro.core.compile_plan(...).loss_and_grads()`` with the
+``MemoryPlanConfig.executor`` knob.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Any, Dict, List, Optional, Set, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import inplace
-from repro.core.execution_order import OrderedTensors, compute_execution_order
-from repro.core.graph import (LOSS_KINDS, WEIGHTED_KINDS, LayerGraph,
-                              LayerNode)
-from repro.core.lifespan import CreateMode
-from repro.core.offload import OffloadSchedule
-
-
-# ---------------------------------------------------------------------------
-# Parameter init
-# ---------------------------------------------------------------------------
-
-def init_params(graph: LayerGraph, rng: jax.Array,
-                dtype=jnp.float32) -> Dict[str, Dict[str, jax.Array]]:
-    """He-init weights for every weighted layer; E-shared layers reuse the
-    first unrolled copy's parameters (Tensor-sharing, CreateMode.EXTEND)."""
-    params: Dict[str, Dict[str, jax.Array]] = {}
-    for l in graph.layers:
-        if l.shares_weights_with:
-            continue  # storage owned by the first copy
-        shapes = l.weight_shapes()
-        if not shapes:
-            continue
-        entry = {}
-        for wname, shape in shapes.items():
-            rng, sub = jax.random.split(rng)
-            if wname in ("b", "beta"):
-                entry[wname] = jnp.zeros(shape, dtype)
-            elif wname in ("gamma",):
-                entry[wname] = jnp.ones(shape, dtype)
-            else:
-                fan_in = shape[0] if len(shape) > 1 else shape[0]
-                if l.kind in ("conv2d", "conv1d"):
-                    fan_in = int(np.prod(shape[1:]))
-                scale = math.sqrt(2.0 / max(fan_in, 1))
-                entry[wname] = jax.random.normal(sub, shape, dtype) * scale
-        params[l.name] = entry
-    return params
-
-
-def _param_owner(graph: LayerGraph, l: LayerNode) -> str:
-    return l.shares_weights_with or l.name
-
-
-# ---------------------------------------------------------------------------
-# Per-layer forward / backward (layer basis: F, CG, CD as separate callables)
-# ---------------------------------------------------------------------------
-
-def _conv2d_fwd(x, w, b, stride, padding):
-    # x: (B, C, H, W), w: (O, I, K, K)
-    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape, ("NCHW", "OIHW", "NCHW"))
-    y = jax.lax.conv_general_dilated(
-        x, w, (stride, stride), padding.upper(), dimension_numbers=dn)
-    if b is not None:
-        y = y + b[None, :, None, None]
-    return y
-
-
-def _pool2d_fwd(x, ksize, stride):
-    return jax.lax.reduce_window(
-        x, -jnp.inf, jax.lax.max,
-        (1, 1, ksize, ksize), (1, 1, stride, stride), "VALID")
-
-
-def _lstm_cell(x, h, c, wx, wh, b):
-    gates = x @ wx + h @ wh + b
-    i, f, g, o = jnp.split(gates, 4, axis=-1)
-    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
-    g = jnp.tanh(g)
-    c_new = f * c + i * g
-    h_new = o * jnp.tanh(c_new)
-    return h_new, c_new
-
-
-def layer_forward(l: LayerNode, xs: List[jax.Array],
-                  p: Optional[Dict[str, jax.Array]],
-                  state: Optional[Dict[str, jax.Array]] = None
-                  ) -> Tuple[jax.Array, Any]:
-    """Forward one layer; returns (output, saved-context for backward).
-
-    The saved context honours the lifespan analysis: weighted layers save
-    inputs (F+CG), in-place activations save only their OUTPUT (F+CD),
-    views save nothing.
-    """
-    a = l.attrs
-    x = xs[0]
-    if l.kind == "linear":
-        y = x @ p["w"]
-        if "b" in p:
-            y = y + p["b"]
-        return y, (x,)
-    if l.kind == "conv2d":
-        y = _conv2d_fwd(x, p["w"], p.get("b"), a.get("stride", 1),
-                        a.get("padding", "same"))
-        return y, (x,)
-    if l.kind == "activation":
-        y = inplace.apply_activation(a["fn"], x)
-        return y, (y,)     # output-only residual: the in-place property
-    if l.kind == "batchnorm":
-        mean = jnp.mean(x, axis=0, keepdims=True)
-        var = jnp.var(x, axis=0, keepdims=True)
-        inv_std = jax.lax.rsqrt(var + 1e-5)
-        y = p["gamma"] * (x - mean) * inv_std + p["beta"]
-        return y, (y, inv_std)   # output-based residual (paper §3)
-    if l.kind == "flatten":
-        return x.reshape(x.shape[0], -1), (x.shape,)
-    if l.kind == "reshape":
-        return x.reshape((x.shape[0],) + tuple(a["out_shape"])), (x.shape,)
-    if l.kind == "pool2d":
-        y = _pool2d_fwd(x, a["ksize"], a.get("stride", a["ksize"]))
-        return y, (x,)   # backward needs the argmax source only (F+CD input)
-    if l.kind == "add":
-        y = xs[0]
-        for other in xs[1:]:
-            y = y + other
-        return y, (len(xs),)
-    if l.kind == "concat":
-        axis = a.get("axis", -1)
-        return jnp.concatenate(xs, axis=axis), ([x.shape[axis] for x in xs], axis)
-    if l.kind == "multiout":
-        return x, ()
-    if l.kind == "embedding":
-        idx = x.astype(jnp.int32)
-        flat = idx[..., 0] if idx.ndim > 1 else idx
-        return jnp.take(p["w"], flat, axis=0), (flat,)
-    if l.kind == "lstm":
-        h = jnp.zeros(x.shape[:-1] + (a["hidden"],), x.dtype) if state is None \
-            else state["h"]
-        c = jnp.zeros_like(h) if state is None else state["c"]
-        h_new, c_new = _lstm_cell(x, h, c, p["wx"], p["wh"], p["b"])
-        return h_new, (x, h, c)   # backward recomputes gates; outputs unused
-    raise ValueError(f"forward not implemented for {l.kind}")
-
-
-def layer_calc_gradient(l: LayerNode, ctx: Any, dy: jax.Array,
-                        p: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
-    """CG phase: weight gradients from saved context + incoming derivative."""
-    if l.kind == "linear":
-        (x,) = ctx
-        g = {"w": x.reshape(-1, x.shape[-1]).T @ dy.reshape(-1, dy.shape[-1])}
-        if "b" in p:
-            g["b"] = dy.reshape(-1, dy.shape[-1]).sum(0)
-        return g
-    if l.kind == "conv2d":
-        (x,) = ctx
-        # dW via autodiff of the conv primitive w.r.t. w only (keeps the
-        # layer-basis structure; XLA emits the standard conv-grad kernel).
-        a = l.attrs
-        _, vjp = jax.vjp(
-            lambda w: _conv2d_fwd(x, w, None, a.get("stride", 1),
-                                  a.get("padding", "same")), p["w"])
-        g = {"w": vjp(dy)[0]}
-        if "b" in p:
-            g["b"] = dy.sum(axis=(0, 2, 3))
-        return g
-    if l.kind == "batchnorm":
-        y, inv_std = ctx
-        gamma, beta = p["gamma"], p["beta"]
-        xhat = (y - beta) / jnp.where(gamma == 0, 1.0, gamma)
-        return {"gamma": jnp.sum(dy * xhat, axis=0), "beta": jnp.sum(dy, axis=0)}
-    if l.kind == "embedding":
-        (idx,) = ctx
-        g = jnp.zeros(p["w"].shape, dy.dtype)
-        flat_idx = idx.reshape(-1) if idx.ndim > 1 else idx
-        return {"w": g.at[flat_idx].add(dy.reshape(flat_idx.shape[0], -1))}
-    if l.kind == "lstm":
-        x, h0, c0 = ctx
-        def f(wx, wh, b):
-            h, _ = _lstm_cell(x, h0, c0, wx, wh, b)
-            return h
-        _, vjp = jax.vjp(f, p["wx"], p["wh"], p["b"])
-        gwx, gwh, gb = vjp(dy)
-        return {"wx": gwx, "wh": gwh, "b": gb}
-    return {}
-
-
-def layer_calc_derivative(l: LayerNode, ctx: Any, dy: jax.Array,
-                          p: Optional[Dict[str, jax.Array]]) -> List[jax.Array]:
-    """CD phase: derivative(s) w.r.t. the layer's input(s)."""
-    a = l.attrs
-    if l.kind == "linear":
-        return [dy @ p["w"].T]
-    if l.kind == "conv2d":
-        (x,) = ctx
-        _, vjp = jax.vjp(
-            lambda xx: _conv2d_fwd(xx, p["w"], None, a.get("stride", 1),
-                                   a.get("padding", "same")), x)
-        return [vjp(dy)[0]]
-    if l.kind == "activation":
-        (y,) = ctx
-        return [inplace.deriv_from_output(a["fn"], y, dy)]
-    if l.kind == "batchnorm":
-        y, inv_std = ctx
-        gamma, beta = p["gamma"], p["beta"]
-        n = y.shape[0]
-        xhat = (y - beta) / jnp.where(gamma == 0, 1.0, gamma)
-        dxhat = dy * gamma
-        s1 = jnp.sum(dxhat, axis=0, keepdims=True)
-        s2 = jnp.sum(dxhat * xhat, axis=0, keepdims=True)
-        return [(inv_std / n) * (n * dxhat - s1 - xhat * s2)]
-    if l.kind in ("flatten", "reshape"):
-        (shape,) = ctx
-        return [dy.reshape(shape)]
-    if l.kind == "pool2d":
-        (x,) = ctx
-        k, s = a["ksize"], a.get("stride", a["ksize"])
-        _, vjp = jax.vjp(lambda xx: _pool2d_fwd(xx, k, s), x)
-        return [vjp(dy)[0]]
-    if l.kind == "add":
-        (n,) = ctx
-        return [dy] * n
-    if l.kind == "concat":
-        sizes, axis = ctx
-        splits = np.cumsum(sizes)[:-1].tolist()
-        return list(jnp.split(dy, splits, axis=axis))
-    if l.kind == "multiout":
-        return [dy]
-    if l.kind == "embedding":
-        return []  # integer inputs: no derivative
-    if l.kind == "lstm":
-        x, h0, c0 = ctx
-        def f(xx):
-            h, _ = _lstm_cell(xx, h0, c0, p["wx"], p["wh"], p["b"])
-            return h
-        _, vjp = jax.vjp(f, x)
-        return [vjp(dy)[0]]
-    raise ValueError(f"calc_derivative not implemented for {l.kind}")
-
-
-# ---------------------------------------------------------------------------
-# Loss
-# ---------------------------------------------------------------------------
-
-def loss_forward(kind: str, pred: jax.Array, label: jax.Array) -> jax.Array:
-    if kind == "loss_mse":
-        return jnp.mean((pred - label) ** 2)
-    if kind == "loss_ce":
-        logp = jax.nn.log_softmax(pred, axis=-1)
-        return -jnp.mean(jnp.sum(label * logp, axis=-1))
-    raise ValueError(kind)
-
-
-def loss_derivative(kind: str, pred: jax.Array, label: jax.Array) -> jax.Array:
-    n = pred.size if kind == "loss_mse" else pred.shape[0]
-    if kind == "loss_mse":
-        return 2.0 * (pred - label) / n
-    if kind == "loss_ce":
-        # combined softmax+CE derivative (the Loss realizer removed softmax)
-        return (jax.nn.softmax(pred, axis=-1) - label) / n
-    raise ValueError(kind)
-
-
-# ---------------------------------------------------------------------------
-# The planned training step
-# ---------------------------------------------------------------------------
-
-def planned_loss_and_grads(graph: LayerGraph,
-                           params: Dict[str, Dict[str, jax.Array]],
-                           x: jax.Array, label: jax.Array
-                           ) -> Tuple[jax.Array, Dict[str, Dict[str, jax.Array]]]:
-    """One layer-basis training iteration: F sweep, then CG/CD sweep.
-
-    Returns (loss, grads) with grads keyed by parameter-owner layer name;
-    E-shared (unrolled) layers accumulate into their owner's entry.
-    """
-    acts: Dict[str, jax.Array] = {"__input__": x}
-    ctxs: Dict[str, Any] = {}
-    loss_node = None
-    loss_val = None
-
-    # ---- Forward (EO 0..N-1) ------------------------------------------------
-    for l in graph.layers:
-        if l.kind in ("loss_mse", "loss_ce"):
-            loss_node = l
-            loss_val = loss_forward(l.kind, acts[l.inputs[0]], label)
-            continue
-        xs = [acts[i] for i in l.inputs]
-        p = params.get(_param_owner(graph, l))
-        y, ctx = layer_forward(l, xs, p)
-        acts[l.name] = y
-        ctxs[l.name] = ctx
-
-    # ---- Backward (EO N..3N): CG then CD per layer, reverse order ----------
-    derivs: Dict[str, jax.Array] = {}
-    pred_name = loss_node.inputs[0]
-    derivs[pred_name] = loss_derivative(loss_node.kind, acts[pred_name], label)
-
-    grads: Dict[str, Dict[str, jax.Array]] = {}
-    for l in reversed(graph.layers):
-        if l.kind in ("loss_mse", "loss_ce"):
-            continue
-        dy = derivs.pop(l.name, None)   # Backward lifespan: consumed here
-        if dy is None:
-            continue  # dead derivative (pruned subgraph)
-        p = params.get(_param_owner(graph, l))
-        # CG phase
-        if l.trainable and l.weight_shapes():
-            g = layer_calc_gradient(l, ctxs[l.name], dy, p)
-            owner = _param_owner(graph, l)
-            if owner in grads:
-                grads[owner] = {k: grads[owner][k] + g[k] for k in g}
-            else:
-                grads[owner] = g
-        # CD phase — skipped when no upstream layer needs the derivative
-        # (first layer / frozen backbone: dead-derivative pruning).
-        upstream_needed = [
-            i for i in l.inputs if i != "__input__" and _needs_deriv(graph, i)
-        ]
-        if upstream_needed:
-            dxs = layer_calc_derivative(l, ctxs[l.name], dy, p)
-            for inp, dx in zip(l.inputs, dxs):
-                if inp == "__input__" or inp not in upstream_needed:
-                    continue
-                if inp in derivs:
-                    derivs[inp] = derivs[inp] + dx   # fan-out accumulation
-                else:
-                    derivs[inp] = dx
-    return loss_val, grads
-
-
-def _needs_deriv(graph: LayerGraph, name: str) -> bool:
-    from repro.core.graph import WEIGHTED_KINDS, _has_trainable_upstream
-    node = graph.layer(name)
-    if node.kind in WEIGHTED_KINDS and node.trainable and node.weight_shapes():
-        return True
-    return _has_trainable_upstream(graph, node)
-
-
-# ---------------------------------------------------------------------------
-# Whole-graph reference (conventional tape autodiff) for validation
-# ---------------------------------------------------------------------------
-
-def reference_forward(graph: LayerGraph,
-                      params: Dict[str, Dict[str, jax.Array]],
-                      x: jax.Array) -> jax.Array:
-    acts: Dict[str, jax.Array] = {"__input__": x}
-    out = None
-    for l in graph.layers:
-        if l.kind in ("loss_mse", "loss_ce"):
-            out = acts[l.inputs[0]]
-            continue
-        xs = [acts[i] for i in l.inputs]
-        p = params.get(_param_owner(graph, l))
-        y, _ = layer_forward(l, xs, p)
-        acts[l.name] = y
-    return out if out is not None else acts[graph.layers[-1].name]
-
-
-def reference_loss_and_grads(graph: LayerGraph,
-                             params: Dict[str, Dict[str, jax.Array]],
-                             x: jax.Array, label: jax.Array):
-    loss_kind = next(l.kind for l in graph.layers if l.kind.startswith("loss"))
-    trainable_owners = {
-        _param_owner(graph, l) for l in graph.layers
-        if l.trainable and l.weight_shapes()
-    }
-    train_p = {k: v for k, v in params.items() if k in trainable_owners}
-    frozen_p = {k: v for k, v in params.items() if k not in trainable_owners}
-
-    def loss_fn(tp):
-        pred = reference_forward(graph, {**frozen_p, **tp}, x)
-        return loss_forward(loss_kind, pred, label)
-
-    loss, grads = jax.value_and_grad(loss_fn)(train_p)
-    return loss, grads
-
-
-def sgd_update(params, grads, lr=1e-2):
-    out = {}
-    for lname, entry in params.items():
-        if lname in grads:
-            out[lname] = {k: v - lr * grads[lname][k] for k, v in entry.items()}
-        else:
-            out[lname] = entry
-    return out
-
-
-# ---------------------------------------------------------------------------
-# Proactive swap execution (NNTrainer §6): replay the compiled op list
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class SwapExecStats:
-    """What the swap executor actually did during one iteration."""
-    swap_outs: int = 0
-    prefetches: int = 0
-    inplace_prefetches: int = 0    # re-residencies that needed no copy
-    dma_bytes: int = 0             # device<->host bytes moved
-    late_swap_ins: int = 0         # schedule misses: access before prefetch
-    hbm_high_water: int = 0        # peak resident planned-activation bytes
-    host_high_water: int = 0       # peak resident host-pool bytes
-    planned_peak: Optional[int] = None   # SwapAwarePlan's residency bound
-    planned_host_pool: Optional[int] = None  # packed host arena bound
-    peak_inflight_prefetch: int = 0      # double-buffer occupancy peak
-    # the ops actually executed, in order — equals the compiled
-    # ExecutionSchedule.ops exactly when no schedule miss occurred
-    replayed_ops: Tuple = ()
-
-
-class _HbmTracker:
-    """High-water-mark accounting over the planned activation bytes."""
-
-    def __init__(self):
-        self.current = 0
-        self.high_water = 0
-
-    def alloc(self, nbytes: int) -> None:
-        self.current += nbytes
-        self.high_water = max(self.high_water, self.current)
-
-    def free(self, nbytes: int) -> None:
-        self.current -= nbytes
-
-
-class _ActivationStore:
-    """Layer-output store with device/host tiers and post-merge alias groups.
-
-    Keys are layer names; bytes are accounted per *owner* tensor (the
-    post-merge ``X:`` CREATE owner), so an in-place activation output that
-    aliases its producer's storage is neither double-counted nor separately
-    swapped — swapping an owner moves every alias with it, exactly like one
-    arena region moving to host.  The store holds no scheduling logic: the
-    executor drives it by replaying the compiled
-    :class:`repro.core.plan.ExecutionSchedule` op by op.
-    """
-
-    def __init__(self, ordered: OrderedTensors, hbm: _HbmTracker,
-                 host_pool: Optional[_HbmTracker] = None):
-        self.ordered = ordered
-        self.hbm = hbm
-        self.host_pool = host_pool or _HbmTracker()
-        self.device: Dict[str, jax.Array] = {}
-        self.host: Dict[str, np.ndarray] = {}
-        self.members: Dict[str, Set[str]] = {}     # owner -> layer names
-        self.alive: Set[str] = set()               # owners holding HBM bytes
-        self._owner_cache: Dict[str, Optional[str]] = {}
-
-    def owner_of(self, lname: str) -> Optional[str]:
-        """The planned X: owner accounting this output's bytes, if any."""
-        if lname in self._owner_cache:
-            return self._owner_cache[lname]
-        owner = self.ordered.owner(f"X:{lname}")
-        spec = self.ordered.tensors.get(owner)
-        tracked = (spec is not None and spec.create_mode == CreateMode.CREATE
-                   and spec.merged_into is None)
-        self._owner_cache[lname] = owner if tracked else None
-        return self._owner_cache[lname]
-
-    def put(self, lname: str, y: jax.Array) -> None:
-        self.device[lname] = y
-        owner = self.owner_of(lname)
-        if owner is None:
-            return
-        self.members.setdefault(owner, set()).add(lname)
-        if owner not in self.alive:
-            self.alive.add(owner)
-            self.hbm.alloc(self.ordered.tensors[owner].nbytes)
-
-    def get(self, lname: str, stats: SwapExecStats) -> jax.Array:
-        if lname in self.device:
-            return self.device[lname]
-        owner = self.owner_of(lname)
-        if owner is not None and lname in self.host:
-            # The schedule was wrong (or margins too tight): blocking swap-in.
-            stats.late_swap_ins += 1
-            self.swap_in(owner, stats)
-            return self.device[lname]
-        raise KeyError(f"activation {lname!r} neither on device nor host")
-
-    def swap_out(self, owner: str, stats: SwapExecStats) -> None:
-        nbytes = self.ordered.tensors[owner].nbytes
-        for m in self.members.get(owner, ()):
-            if m in self.device:
-                self.host[m] = np.asarray(self.device.pop(m))
-        self.alive.discard(owner)
-        self.hbm.free(nbytes)
-        self.host_pool.alloc(nbytes)
-        stats.swap_outs += 1
-        stats.dma_bytes += nbytes
-
-    def swap_in(self, owner: str, stats: SwapExecStats) -> None:
-        nbytes = self.ordered.tensors[owner].nbytes
-        for m in self.members.get(owner, ()):
-            if m in self.host:
-                self.device[m] = jnp.asarray(self.host.pop(m))
-        self.alive.add(owner)
-        self.hbm.alloc(nbytes)
-        self.host_pool.free(nbytes)
-        stats.prefetches += 1
-        stats.dma_bytes += nbytes
-
-    def free_owner(self, owner: str) -> None:
-        on_host = False
-        for m in self.members.get(owner, ()):
-            self.device.pop(m, None)
-            on_host |= self.host.pop(m, None) is not None
-        if on_host:
-            self.host_pool.free(self.ordered.tensors[owner].nbytes)
-        if owner in self.alive:
-            self.alive.discard(owner)
-            self.hbm.free(self.ordered.tensors[owner].nbytes)
-
-
-def swap_planned_loss_and_grads(
-    graph: LayerGraph,
-    params: Dict[str, Dict[str, jax.Array]],
-    x: jax.Array, label: jax.Array, *,
-    schedule: OffloadSchedule,
-    ordered: Optional[OrderedTensors] = None,
-    plan: Optional["SwapAwarePlan"] = None,  # noqa: F821
-    lowered: Optional["ExecutionSchedule"] = None,  # noqa: F821
-) -> Tuple[jax.Array, Dict[str, Dict[str, jax.Array]], SwapExecStats]:
-    """One layer-basis iteration replaying the compiled op list.
-
-    Identical numerics to :func:`planned_loss_and_grads` (arrays round-trip
-    through host exactly), but walks the lowered
-    :class:`repro.core.plan.ExecutionSchedule` directly: every ``Compute``,
-    ``SwapOut``, ``Prefetch`` and ``Free`` was decided at compile time, so
-    the executor holds no scheduling policy — it replays ops and accounts
-    HBM / host-pool residency high-water marks.  When no ``lowered``
-    schedule is supplied (hand-wired callers) it is derived here from
-    ``schedule``/``plan``.  With a :class:`SwapAwarePlan`, asserts the
-    measured high-water marks never exceed the planned residency peak and
-    the packed host pool.
-    """
-    from repro.core.plan import (Compute, Free, Prefetch, SwapOut,
-                                 lower_schedule)
-    if ordered is None:
-        ordered = compute_execution_order(graph, int(x.shape[0]))
-    if lowered is None:
-        lowered = lower_schedule(ordered, schedule, plan)
-    stats = SwapExecStats()
-    stats.inplace_prefetches = sum(
-        1 for d in schedule.decisions if d.inplace)
-    hbm = _HbmTracker()
-    store = _ActivationStore(ordered, hbm)
-    store.device["__input__"] = x
-
-    def resolve_ctx(ctx: Any) -> Any:
-        return tuple(
-            store.get(e[1], stats)
-            if isinstance(e, tuple) and len(e) == 2 and e[0] == "@act" else e
-            for e in ctx
-        )
-
-    ctxs: Dict[str, Any] = {}
-    derivs: Dict[str, jax.Array] = {}
-    pending_dxs: Dict[str, List[Tuple[str, jax.Array]]] = {}
-    pending_cd: Dict[str, Tuple[jax.Array, List[str]]] = {}
-    grads: Dict[str, Dict[str, jax.Array]] = {}
-    loss_val = None
-    replayed: List[Any] = []
-    inflight = 0
-    done_at: Dict[int, int] = {}      # read EO -> prefetched bytes retiring
-    retired_eo = -1
-
-    for op in lowered.ops:
-        if isinstance(op, Prefetch):
-            if op.tensor in store.alive:
-                continue  # late swap-in already brought it back
-            store.swap_in(op.tensor, stats)
-            inflight += op.nbytes
-            done_at[op.read_eo] = done_at.get(op.read_eo, 0) + op.nbytes
-            stats.peak_inflight_prefetch = max(
-                stats.peak_inflight_prefetch, inflight)
-            replayed.append(op)
-        elif isinstance(op, Compute):
-            # prefetches issued at earlier phases complete by their read
-            # EO: retire their double-buffer slots at the phase boundary
-            if op.eo > retired_eo:
-                for eo in list(done_at):
-                    if eo <= op.eo:
-                        inflight -= done_at.pop(eo)
-                retired_eo = op.eo
-            l = graph.layer(op.layer)
-            lname, kind = op.layer, op.kind
-            if kind == "F":
-                if l.kind in LOSS_KINDS:
-                    loss_val = loss_forward(
-                        l.kind, store.get(l.inputs[0], stats), label)
-                else:
-                    xs = [store.get(i, stats) for i in l.inputs]
-                    p = params.get(_param_owner(graph, l))
-                    y, ctx = layer_forward(l, xs, p)
-                    store.put(lname, y)
-                    # keep saved activations by *reference* into the store,
-                    # so a swap moves the residual too (same bytes in a real
-                    # arena)
-                    sym = []
-                    for e in ctx:
-                        hit = next(
-                            (i for i, xi in enumerate(xs) if e is xi), None)
-                        if hit is not None:
-                            sym.append(("@act", l.inputs[hit]))
-                        elif e is y:
-                            sym.append(("@act", lname))
-                        else:
-                            sym.append(e)
-                    ctxs[lname] = tuple(sym)
-            elif kind == "CG":
-                if l.kind in LOSS_KINDS:
-                    pred = l.inputs[0]
-                    derivs[pred] = loss_derivative(
-                        l.kind, store.get(pred, stats), label)
-                else:
-                    dy = derivs.pop(lname, None)
-                    if dy is not None:
-                        if l.trainable and l.weight_shapes():
-                            p = params.get(_param_owner(graph, l))
-                            g = layer_calc_gradient(
-                                l, resolve_ctx(ctxs[lname]), dy, p)
-                            owner = _param_owner(graph, l)
-                            if owner in grads:
-                                grads[owner] = {k: grads[owner][k] + g[k]
-                                                for k in g}
-                            else:
-                                grads[owner] = g
-                        upstream_needed = [
-                            i for i in l.inputs
-                            if i != "__input__" and _needs_deriv(graph, i)
-                        ]
-                        if not upstream_needed:
-                            pass
-                        elif l.kind in WEIGHTED_KINDS:
-                            # A weighted layer's saved input has a F+CG
-                            # lifespan — it is freed (or swapped) right
-                            # after this phase — so its derivative is
-                            # computed here, on the same resident context
-                            # the CG just used, and *published* at the
-                            # adjacent CD phase (EO_CD = EO_CG + 1).
-                            p = params.get(_param_owner(graph, l))
-                            dxs = layer_calc_derivative(
-                                l, resolve_ctx(ctxs[lname]), dy, p)
-                            pending_dxs[lname] = [
-                                (inp, dx) for inp, dx in zip(l.inputs, dxs)
-                                if inp != "__input__"
-                                and inp in upstream_needed
-                            ]
-                        else:
-                            # In-place / pool / view layers have F+CD
-                            # contexts (e.g. max-pool argmax source,
-                            # activation output) — residency and prefetches
-                            # target the CD phase.
-                            pending_cd[lname] = (dy, upstream_needed)
-            else:  # CD: compute deferred derivatives, publish D:<inp>
-                dxs_out = pending_dxs.pop(lname, [])
-                if lname in pending_cd:
-                    dy, upstream_needed = pending_cd.pop(lname)
-                    p = params.get(_param_owner(graph, l))
-                    dxs = layer_calc_derivative(
-                        l, resolve_ctx(ctxs[lname]), dy, p)
-                    dxs_out = [
-                        (inp, dx) for inp, dx in zip(l.inputs, dxs)
-                        if inp != "__input__" and inp in upstream_needed
-                    ]
-                for inp, dx in dxs_out:
-                    if inp in derivs:
-                        derivs[inp] = derivs[inp] + dx
-                    else:
-                        derivs[inp] = dx
-            replayed.append(op)
-        elif isinstance(op, SwapOut):
-            if op.tensor in store.alive:
-                store.swap_out(op.tensor, stats)
-                replayed.append(op)
-        elif isinstance(op, Free):
-            store.free_owner(op.tensor)
-            replayed.append(op)
-
-    stats.hbm_high_water = hbm.high_water
-    stats.host_high_water = store.host_pool.high_water
-    stats.replayed_ops = tuple(replayed)
-    if plan is not None:
-        stats.planned_peak = plan.activation_residency_peak()
-        stats.planned_host_pool = plan.host_pool_bytes
-        if stats.hbm_high_water > stats.planned_peak:
-            raise AssertionError(
-                f"swap executor exceeded the planned residency peak: "
-                f"{stats.hbm_high_water} > {stats.planned_peak} bytes")
-        if stats.host_high_water > stats.planned_host_pool:
-            raise AssertionError(
-                f"swap executor exceeded the packed host pool: "
-                f"{stats.host_high_water} > {stats.planned_host_pool} bytes")
-    return loss_val, grads, stats
+from repro.core.exec.backends import (BACKENDS, AsyncDeviceBackend,
+                                      ExecutorBackend, SimulatedBackend,
+                                      get_backend,
+                                      swap_planned_loss_and_grads)
+from repro.core.exec.layers import (_conv2d_fwd, _lstm_cell, _needs_deriv,
+                                    _param_owner, _pool2d_fwd, init_params,
+                                    layer_calc_derivative,
+                                    layer_calc_gradient, layer_forward,
+                                    loss_derivative, loss_forward,
+                                    planned_loss_and_grads,
+                                    reference_forward,
+                                    reference_loss_and_grads, sgd_update)
+from repro.core.exec.store import (ActivationStore, DeviceStreamEngine,
+                                   HbmTracker, SwapExecStats, SyncHostEngine,
+                                   TransferEngine, _ActivationStore,
+                                   _HbmTracker)
+
+__all__ = [
+    "init_params", "layer_forward", "layer_calc_gradient",
+    "layer_calc_derivative", "loss_forward", "loss_derivative",
+    "planned_loss_and_grads", "reference_forward",
+    "reference_loss_and_grads", "sgd_update",
+    "SwapExecStats", "HbmTracker", "ActivationStore", "TransferEngine",
+    "SyncHostEngine", "DeviceStreamEngine",
+    "ExecutorBackend", "SimulatedBackend", "AsyncDeviceBackend",
+    "BACKENDS", "get_backend", "swap_planned_loss_and_grads",
+]

@@ -50,11 +50,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 from jax import ad_checkpoint
+
+from repro.core.deprecation import warn_once
 
 # Hardware cost-model defaults: a TPU-class accelerator (bf16 matmul
 # throughput) attached to host memory over a PCIe-class link.  Overridable
@@ -307,7 +308,7 @@ def plan_checkpoint_policy(
     config would otherwise keep everything and silently never offload).
     """
     if offload_dropped:
-        warnings.warn(
+        warn_once(
             "offload_dropped=True is deprecated: it prices DMA as free and "
             "offloads every budget-missing intermediate regardless of cost; "
             "use plan_joint_policy(..., offload=True, dma_gbps=...) for the "

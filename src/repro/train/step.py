@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.deprecation import warn_once
 from repro.core.plan import CompiledMemoryPlan, MemoryPlanConfig, compile_plan
 from repro.core.remat_policy import RematPlan
 from repro.models.model import Model, input_specs
@@ -52,7 +53,13 @@ class StepBundle:
 
     @property
     def remat_plan(self) -> Optional[RematPlan]:
-        """Deprecated alias for ``memory_plan.remat_plan``."""
+        """Deprecated alias for ``memory_plan.remat_plan`` (warns once per
+        call site)."""
+        warn_once(
+            "StepBundle.remat_plan is deprecated; read "
+            "StepBundle.memory_plan.remat_plan (the compiled "
+            "CompiledMemoryPlan owns the remat/offload decisions)",
+            DeprecationWarning, stacklevel=2)
         return self.memory_plan.remat_plan if self.memory_plan else None
 
 
@@ -117,7 +124,12 @@ def make_train_step(model: Model, optimizer: Optimizer, mesh: Mesh,
     bundle's ``memory_plan.report()``.  ``plan_config`` overrides
     individual :class:`MemoryPlanConfig` knobs (hardware cost model,
     budgets) without touching the ``ModelConfig`` — the remat/offload
-    resolution order (explicit knob, else ``cfg``) is unchanged.
+    resolution order (explicit knob, else ``cfg``) is unchanged.  The
+    ``plan_config.executor`` knob travels with the compiled plan (and is
+    validated at compile time): model-path plans install a checkpoint
+    policy rather than running the layer-basis executor, but a graph plan
+    derived from the same config replays on the selected backend
+    ("sim" | "async" — see ``repro.core.exec.backends``).
     """
     cfg = model.cfg
     act_rules = activation_rules(cfg, shape, mesh)

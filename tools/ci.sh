@@ -59,6 +59,46 @@ for hp in ("sorting", "bestfit", "segregated", "buddy"):
           f"host_hw={stats.host_high_water} "
           f"inplace={cp.inplace_prefetch_count}")
 
+# executor-backend gate: BOTH registered backends (sim synchronous replay,
+# async real device-stream transfers) must replay the lowered op list
+# verbatim, agree on transfer accounting, and match jax.grad; the async
+# backend must report its achieved overlap vs the planned
+# peak_inflight_prefetch.
+from repro.core.exec import BACKENDS
+from repro.core.exec.layers import reference_loss_and_grads
+import numpy as np
+
+_, grads_ref = reference_loss_and_grads(g, params, x, y)
+per_backend = {}
+for ex in sorted(BACKENDS):
+    cp = compile_plan(g, MemoryPlanConfig(min_idle_phases=3,
+                                          min_bytes=1 << 12, executor=ex),
+                      batch=8)
+    _, grads, stats = cp.loss_and_grads(params, x, y)
+    assert stats.backend == ex
+    assert stats.replayed_ops == cp.lowered.ops, \
+        f"executor={ex}: replay diverged from compiled schedule"
+    assert stats.late_swap_ins == 0, ex
+    assert stats.host_high_water <= cp.host_pool_bytes, ex
+    for a, b in zip(jax.tree_util.tree_leaves(grads),
+                    jax.tree_util.tree_leaves(grads_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+    per_backend[ex] = stats
+    extra = ""
+    if ex == "async":
+        assert stats.achieved_overlap is not None
+        assert 0 < stats.inflight_high_water \
+            <= cp.schedule.peak_inflight_prefetch
+        extra = (f" overlap={stats.achieved_overlap:.2f}"
+                 f" inflight_hw={stats.inflight_high_water}"
+                 f"/{cp.schedule.peak_inflight_prefetch}")
+    print(f"backend gate lenet5/{ex}: dma={stats.dma_bytes} "
+          f"swaps={stats.swap_outs}/{stats.prefetches}{extra}")
+assert per_backend["sim"].dma_bytes == per_backend["async"].dma_bytes
+assert per_backend["sim"].host_high_water \
+    == per_backend["async"].host_high_water
+
 # model-config joint-plan smoke: a tight budget must force evictions down
 # both priced lanes, and the plan's DMA traffic must be visible end-to-end.
 cfg = ARCHS["llama3.2-3b"]
@@ -88,7 +128,7 @@ EOF
 # producing the machine-readable perf-trajectory file, now including the
 # per-planner host-pool fragmentation sweep.
 PYTHONPATH=src python -m benchmarks.run \
-    --only swap_tradeoff,swap_model,host_planner \
+    --only swap_tradeoff,swap_model,host_planner,swap_exec \
     --bench-json results/BENCH_swap.json > /dev/null
 test -s results/BENCH_swap.json
 PYTHONPATH=src python - <<'EOF'
@@ -108,5 +148,26 @@ assert all("host_utilization" in r and "legacy_host_bytes" in r
 # pack-every-copy bytes somewhere in the sweep
 assert any(r["host_pool_bytes"] < r["legacy_host_bytes"]
            for r in host_rows if r["host_planner"] in ("segregated", "buddy"))
+# executor overlap rows: every registered backend ran end-to-end, replayed
+# the compiled op list verbatim, and the async rows carry the measured
+# overlap (achieved fraction, in-flight high water, DMA bytes)
+exec_rows = [r for r in recs if r["bench"] == "swap_exec"]
+assert exec_rows, "BENCH_swap.json must carry swap_exec rows"
+assert {r["executor"] for r in exec_rows} == {"sim", "async"}
+assert all(r["replay_matches_compiled"] for r in exec_rows)
+assert all(r["late_swap_ins"] == 0 for r in exec_rows)
+async_rows = [r for r in exec_rows if r["executor"] == "async"]
+overlapped = [r for r in async_rows if r["prefetches"] > 0]
+assert overlapped, "at least one async row must issue real transfers"
+for r in overlapped:
+    assert r["achieved_overlap"] is not None
+    assert 0.0 <= r["achieved_overlap"] <= 1.0
+    assert 0 < r["inflight_high_water"] \
+        <= r["planned_peak_inflight_prefetch"]
+    assert r["measured_dma_bytes"] > 0
+# zero-swap plans degrade gracefully on the async backend too
+for r in [r for r in async_rows if r["prefetches"] == 0]:
+    assert r["achieved_overlap"] is None
+    assert r["inflight_high_water"] == 0
 EOF
 echo "BENCH_swap.json emitted ($(wc -c < results/BENCH_swap.json) bytes)"
