@@ -17,7 +17,7 @@ on this host's CPU.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Tuple
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -25,7 +25,10 @@ and reports *measured* high-water marks (HBM and host pool), DMA bytes,
 and for the async backend the achieved overlap fraction and in-flight
 byte high water vs the planned ``peak_inflight_prefetch``, proving
 schedule and execution agree (late_swap_ins must be 0, replayed ops must
-equal the compiled op list on every backend).
+equal the compiled op list on every backend).  ``verify`` rows time the
+static schedule verifier (``repro.core.verify``) over the zoo x device
+planner sweep and record its coverage (ops scanned, placements scanned,
+checks run) so the gate's own cost stays on the perf trajectory.
 
 Besides the CSV rows, every run collects machine-readable records; the
 driver (``benchmarks/run.py``) writes them to ``results/BENCH_swap.json``
@@ -269,9 +272,41 @@ def bench_swap_exec():
     return rows
 
 
+VERIFY_MODELS = (("vgg16", 32), ("resnet18", 32), ("lenet5", 16))
+VERIFY_PLANNERS = ("sorting", "bestfit", "segregated", "buddy")
+
+
+def bench_verify():
+    from repro.core.plan import MemoryPlanConfig, compile_plan
+    from repro.core.zoo import ZOO
+
+    rows = []
+    for name, batch in VERIFY_MODELS:
+        graph = ZOO[name]()
+        for planner in VERIFY_PLANNERS:
+            cp = compile_plan(
+                graph, MemoryPlanConfig(planner=planner,
+                                        host_planner="segregated",
+                                        min_idle_phases=3,
+                                        min_bytes=1 << 12), batch=batch)
+            s = cp.verify_report.summary()
+            rows.append((
+                f"verify/{name}/{planner}",
+                s["wall_time_s"] * 1e3,
+                f"ms_verify ok={s['ok']} ops={s['ops_scanned']} "
+                f"placements={s['placements_scanned']} "
+                f"checks={len(s['checks_run'])} "
+                f"errors={s['errors']} warnings={s['warnings']}"))
+            JSON_RECORDS.append({
+                "bench": "verify", "model": name, "batch": batch,
+                "planner": planner, **s})
+    return rows
+
+
 ALL = {
     "swap_tradeoff": bench_swap_tradeoff,
     "swap_model": bench_swap_model,
     "host_planner": bench_host_planner,
     "swap_exec": bench_swap_exec,
+    "verify": bench_verify,
 }

@@ -21,7 +21,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import slice_realizer
 from repro.core.plan import MemoryPlanConfig, compile_plan
 from repro.core.planned_exec import (planned_loss_and_grads,
                                      reference_forward, sgd_update)

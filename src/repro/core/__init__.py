@@ -30,6 +30,10 @@ The pipeline stages remain importable as composable pieces:
                                       -> jax.checkpoint policy
 * :mod:`repro.core.offload`         — EO-driven proactive-swap schedule (§6)
 * :mod:`repro.core.plan`            — the compile facade + co-optimisation
+* :mod:`repro.core.verify`          — static schedule verifier (CHECKS
+                                      registry -> Diagnostic records; the
+                                      correctness gate every backend
+                                      replays behind)
 
 Hand-wiring the stages (``compute_execution_order -> plan_offload ->
 plan_memory_swapped -> swap_planned_loss_and_grads``) is **deprecated** for
@@ -48,6 +52,9 @@ from repro.core.plan import (CompiledMemoryPlan, Compute, CooptStats,
 from repro.core.planner import PLANNERS, ArenaAllocator, get_planner
 from repro.core.remat_policy import (RematPlan, plan_joint_policy,
                                      plan_step_time_s)
+from repro.core.verify import (CHECKS, Diagnostic,
+                               ScheduleVerificationError, VerifyReport,
+                               verify_plan, verify_schedule)
 
 __all__ = [
     # the compile API
@@ -60,6 +67,9 @@ __all__ = [
     # the pluggable executor-backend layer (repro.core.exec)
     "ExecutorBackend", "SimulatedBackend", "AsyncDeviceBackend",
     "BACKENDS", "get_backend",
+    # the static schedule verifier (repro.core.verify)
+    "CHECKS", "Diagnostic", "VerifyReport", "ScheduleVerificationError",
+    "verify_plan", "verify_schedule",
     # the joint keep/recompute/offload planner (model-config path internals,
     # exported for cost-model comparisons and tests)
     "RematPlan", "plan_joint_policy", "plan_step_time_s",

@@ -19,6 +19,17 @@ Both backends replay the compiled op list *verbatim*:
 ``SwapExecStats.replayed_ops == lowered.ops`` is CI-gated per backend, so
 a backend cannot silently skip or reorder a planned transfer.
 
+Backends only replay *verified* schedules: a plan-backed schedule that has
+not passed the static verifier (:mod:`repro.core.verify`) is verified on
+admission and refused (``ScheduleVerificationError``) if unsound — the
+runtime analogue of the ``compile_plan`` verify knob, so a schedule cannot
+reach the device streams unchecked even when compile-time verification
+was skipped.  A debug sanitizer mode (``sanitize=True`` on any backend
+constructor, or ``REPRO_EXEC_SANITIZE=1``) additionally steps the
+verifier's :class:`repro.core.verify.StaticResidencyModel` alongside the
+real :class:`ActivationStore` and cross-checks device residency after
+every replayed op.
+
 Select a backend with ``MemoryPlanConfig(executor="sim" | "async")`` or by
 passing ``executor=`` to :func:`swap_planned_loss_and_grads`; registry
 lookups go through :func:`get_backend`.
@@ -26,6 +37,7 @@ lookups go through :func:`get_backend`.
 
 from __future__ import annotations
 
+import os
 from typing import Any, Dict, List, Optional, Protocol, Tuple, Union,\
     runtime_checkable
 
@@ -76,7 +88,11 @@ class _ReplayBackend:
 
     name = "replay"
 
-    def __init__(self):
+    def __init__(self, *, sanitize: Optional[bool] = None):
+        if sanitize is None:
+            sanitize = os.environ.get("REPRO_EXEC_SANITIZE",
+                                      "") not in ("", "0")
+        self.sanitize = bool(sanitize)
         self._last_stats: Optional[SwapExecStats] = None
         self._planned_inflight: Optional[int] = None
 
@@ -90,10 +106,20 @@ class _ReplayBackend:
             plan=None, lowered=None):
         from repro.core.plan import (Compute, Free, Prefetch, SwapOut,
                                      lower_schedule)
+        from repro.core.verify import (StaticResidencyModel, is_verified,
+                                       mark_verified, verify_schedule)
         if ordered is None:
             ordered = compute_execution_order(graph, int(x.shape[0]))
         if lowered is None:
             lowered = lower_schedule(ordered, schedule, plan)
+        # admission check: a plan-backed schedule must have passed static
+        # verification before any transfer op reaches a device stream —
+        # verify on the spot if compile-time verification was skipped
+        if plan is not None and not is_verified(lowered):
+            verify_schedule(ordered, schedule, plan,
+                            lowered).raise_if_errors()
+            mark_verified(lowered)
+        sanitizer = StaticResidencyModel(ordered) if self.sanitize else None
         stats = SwapExecStats(backend=self.name)
         stats.inplace_prefetches = sum(
             1 for d in schedule.decisions if d.inplace)
@@ -121,7 +147,7 @@ class _ReplayBackend:
         done_at: Dict[int, int] = {}      # read EO -> prefetched bytes retiring
         retired_eo = -1
 
-        for op in lowered.ops:
+        for op_index, op in enumerate(lowered.ops):
             if isinstance(op, Prefetch):
                 if op.tensor in store.alive:
                     continue  # late swap-in already brought it back
@@ -236,6 +262,10 @@ class _ReplayBackend:
             elif isinstance(op, Free):
                 store.free_owner(op.tensor)
                 replayed.append(op)
+            if sanitizer is not None:
+                sanitizer.step(op)
+                sanitizer.cross_check(store.alive, op_index)
+                stats.sanitizer_checks += 1
 
         engine.drain(stats)
         stats.hbm_high_water = hbm.high_water
@@ -279,6 +309,7 @@ class _ReplayBackend:
             "host_high_water": s.host_high_water,
             "peak_inflight_prefetch": s.peak_inflight_prefetch,
             "planned_peak_inflight_prefetch": self._planned_inflight,
+            "sanitizer_checks": s.sanitizer_checks,
         }
 
 
@@ -309,8 +340,8 @@ class AsyncDeviceBackend(_ReplayBackend):
 
     name = "async"
 
-    def __init__(self, device=None):
-        super().__init__()
+    def __init__(self, device=None, *, sanitize: Optional[bool] = None):
+        super().__init__(sanitize=sanitize)
         self.device = device
         self._last_engine: Optional[DeviceStreamEngine] = None
 

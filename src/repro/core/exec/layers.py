@@ -24,8 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import inplace
-from repro.core.graph import (LOSS_KINDS, WEIGHTED_KINDS, LayerGraph,
-                              LayerNode)
+from repro.core.graph import WEIGHTED_KINDS, LayerGraph, LayerNode
 
 
 # ---------------------------------------------------------------------------

@@ -59,6 +59,9 @@ class SwapExecStats:
     # fraction of fences that found the transfer already complete (the DMA
     # fully overlapped compute); None when no real transfers were issued
     achieved_overlap: Optional[float] = None
+    # debug sanitizer: per-op cross-checks of runtime residency against
+    # the static verifier model (0 when the sanitizer is off)
+    sanitizer_checks: int = 0
 
 
 class HbmTracker:

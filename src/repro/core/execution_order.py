@@ -38,7 +38,8 @@ from repro.core.lifespan import CreateMode, Lifespan, TensorSpec
 class OrderedTensors:
     """Result of Algorithm 1: the Tensor-Pool map with EOs + merges applied."""
 
-    tensors: Dict[str, TensorSpec]          # name -> spec (post-merge owners + placeholders)
+    # name -> spec (post-merge owners + placeholders)
+    tensors: Dict[str, TensorSpec]
     merged: Dict[str, str]                  # merged tensor name -> owner name
     eo_max: int
     layer_orders: Dict[str, Tuple[int, int, int]]  # layer -> (F, CG, CD)
@@ -193,7 +194,8 @@ def compute_execution_order(graph: LayerGraph, batch: int) -> OrderedTensors:
             # else: integrity not guaranteed — keep a fresh tensor (mode C)
             else:
                 t.create_mode = CreateMode.CREATE
-        elif t.create_mode in (CreateMode.READONLY_VIEW, CreateMode.EXTEND) and t.view_of:
+        elif t.create_mode in (CreateMode.READONLY_VIEW,
+                               CreateMode.EXTEND) and t.view_of:
             target_owner = tmap.get(_resolve(merged, t.view_of))
             if target_owner is not None:
                 _merge(tmap, merged, t, target_owner)

@@ -159,7 +159,8 @@ def infer_shapes(graph: LayerGraph) -> Dict[str, Tuple[int, ...]]:
             out = ins[0][:-1] + (a["out_features"],)
         elif l.kind == "conv2d":
             c, h, w = ins[0]
-            oh, ow = _conv_out_hw(h, w, a["ksize"], a.get("stride", 1), a.get("padding", "same"))
+            oh, ow = _conv_out_hw(h, w, a["ksize"], a.get("stride", 1),
+                              a.get("padding", "same"))
             out = (a["out_ch"], oh, ow)
         elif l.kind == "conv1d":
             c, t = ins[0]
@@ -380,7 +381,8 @@ def tensor_requests(graph: LayerGraph, batch: int) -> List[Tuple[str, TensorSpec
                         if l.shares_weights_with or a.get("accumulate_grad")
                         else Lifespan.BACKWARD
                     )
-                    gmode = CreateMode.EXTEND if l.shares_weights_with else CreateMode.CREATE
+                    gmode = CreateMode.EXTEND if l.shares_weights_with \
+                else CreateMode.CREATE
                     reqs.append((
                         l.name,
                         TensorSpec(
@@ -531,7 +533,8 @@ def loss_realizer(graph: LayerGraph) -> LayerGraph:
         l.inputs = [removed.get(i, i) for i in l.inputs]
         if l.kind == "loss_ce":
             src = graph.layer(l.inputs[0]) if l.inputs[0] != "__input__" else None
-            if src is not None and src.kind == "activation" and src.attrs.get("fn") == "softmax":
+            if src is not None and src.kind == "activation" \
+                and src.attrs.get("fn") == "softmax":
                 out.remove(src)
                 removed[src.name] = src.inputs[0]
                 l.inputs = [src.inputs[0]]
@@ -540,7 +543,8 @@ def loss_realizer(graph: LayerGraph) -> LayerGraph:
     return LayerGraph(out, graph.input_shape, graph.label_shape, graph.name)
 
 
-def recurrent_realizer(graph: LayerGraph, unroll: Optional[Dict[str, int]] = None) -> LayerGraph:
+def recurrent_realizer(graph: LayerGraph,
+                       unroll: Optional[Dict[str, int]] = None) -> LayerGraph:
     """Unroll recurrent layers across time with E-shared weights (§5.2).
 
     ``unroll`` maps layer name -> number of time steps.  Each unrolled copy

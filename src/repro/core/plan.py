@@ -78,7 +78,32 @@ knob (default)          meaning
 (``"sim"``)             sim (synchronous, deterministic stats) | async
                         (real ``jax.device_put`` device-stream transfers,
                         fenced at the consumer, overlap measured)
+``verify``              static verification of the lowered schedule
+(``"error"``)           (``repro.core.verify``): "error" raises
+                        ``ScheduleVerificationError`` on any violated
+                        invariant, "warn" downgrades to warnings, "off"
+                        skips (the report is folded into
+                        ``report()["verify"]`` either way)
 ======================  =====================================================
+
+Static verification
+-------------------
+
+``compile_plan`` runs the :mod:`repro.core.verify` checker registry over
+every lowered schedule before handing it to an executor: use-before-
+resident, transfer races, arena aliasing (device *and* host pool — the
+same sweep on both compile paths), double-free/leak, budget/alignment and
+in-place-prefetch legality.  Findings are structured ``Diagnostic``
+records; a failing check renders like::
+
+    [error:use_before_resident] X:conv1: read at EO 11 while swapped out
+        since EO 3 with no prefetch in between
+    [error:arena_alias] op[7] X:conv1: Prefetch device offset 4096
+        diverges from the packed placement (8192)
+
+``report()["verify"]`` carries the machine-readable summary (``ok``,
+``errors``, ``checks_run``, ``ops_scanned``, ``wall_time_s``); executor
+backends refuse to replay a plan-backed schedule that has not passed.
 """
 
 from __future__ import annotations
@@ -125,6 +150,11 @@ class MemoryPlanConfig:
                          host memory space, dispatched ahead of need and
                          fenced at the consumer; achieved overlap
                          reported).  See ``repro.core.exec.backends``.
+    ``verify``           static schedule verification policy: "error"
+                         (default — raise ScheduleVerificationError on any
+                         violated memory-safety invariant), "warn"
+                         (downgrade findings to warnings), "off" (skip).
+                         See ``repro.core.verify``.
 
     Remat / offload knobs (model-config path — the joint planner):
 
@@ -158,6 +188,7 @@ class MemoryPlanConfig:
     hbm_budget_bytes: Optional[int] = None
     cooptimize: bool = True
     executor: str = "sim"
+    verify: str = "error"
 
     remat: Optional[bool] = None
     remat_budget_bytes: Optional[int] = None
@@ -349,6 +380,10 @@ class CompiledMemoryPlan:
     # the compiled plan has been executed at least once
     exec_report: Optional[Dict[str, Any]] = None
 
+    # what static verification proved (repro.core.verify); None only when
+    # config.verify == "off"
+    verify_report: Any = None
+
     # ------------------------------------------------------------- queries
     @property
     def peak_bytes(self) -> int:
@@ -494,6 +529,8 @@ class CompiledMemoryPlan:
                 # what the last execution measured, incl. the async
                 # backend's achieved overlap vs peak_inflight_prefetch
                 out["exec"] = dict(self.exec_report)
+        if self.verify_report is not None:
+            out["verify"] = self.verify_report.summary()
         if self.coopt is not None:
             out["coopt_rounds"] = self.coopt.rounds
             out["coopt_dropped"] = list(self.coopt.dropped)
@@ -567,6 +604,45 @@ def _cooptimize(ordered: OrderedTensors, plan: SwapAwarePlan, planner: str,
 
 
 # ---------------------------------------------------------------------------
+# Static verification hook
+# ---------------------------------------------------------------------------
+
+_VERIFY_MODES = ("error", "warn", "off")
+
+
+def _apply_verify(cp: CompiledMemoryPlan) -> CompiledMemoryPlan:
+    """Run the static verifier over a freshly compiled plan.
+
+    Policy comes from ``config.verify``: ``"error"`` raises
+    :class:`repro.core.verify.ScheduleVerificationError` on any error
+    diagnostic, ``"warn"`` downgrades them to :class:`UserWarning`,
+    ``"off"`` skips entirely.  A clean run marks the lowered schedule as
+    verified so executor backends admit it without re-checking."""
+    if cp.config.verify == "off":
+        return cp
+    from repro.core import verify as _verify
+    report = _verify.verify_plan(cp)
+    cp.verify_report = report
+    if report.ok:
+        if cp.lowered is not None:
+            _verify.mark_verified(cp.lowered)
+    elif cp.config.verify == "error":
+        report.raise_if_errors()
+    else:
+        for d in report.errors():
+            warnings.warn(f"schedule verification: {d.render()}",
+                          UserWarning, stacklevel=4)
+    return cp
+
+
+def _check_verify_mode(config: MemoryPlanConfig) -> None:
+    if config.verify not in _VERIFY_MODES:
+        raise ValueError(
+            f"unknown verify mode {config.verify!r}: choose from "
+            f"{', '.join(_VERIFY_MODES)}")
+
+
+# ---------------------------------------------------------------------------
 # compile_plan: the single entry point
 # ---------------------------------------------------------------------------
 
@@ -593,16 +669,17 @@ def _compile_graph_plan(graph: LayerGraph, config: MemoryPlanConfig,
     get_planner(config.planner)
     get_planner(config.host_planner)
     get_backend(config.executor)
+    _check_verify_mode(config)
 
     ordered = compute_execution_order(graph, batch)
     baseline = get_planner(config.planner).plan(ordered)
 
     if not config.swap:
         empty = make_schedule(())
-        return CompiledMemoryPlan(
+        return _apply_verify(CompiledMemoryPlan(
             config=config, source="graph", graph=graph, ordered=ordered,
             schedule=empty, plan=baseline, baseline=baseline, batch=batch,
-            lowered=lower_schedule(ordered, empty, baseline))
+            lowered=lower_schedule(ordered, empty, baseline)))
 
     schedule = plan_offload(
         ordered,
@@ -625,10 +702,10 @@ def _compile_graph_plan(graph: LayerGraph, config: MemoryPlanConfig,
                            single_pass_peak_bytes=single_peak,
                            single_pass_dma_bytes=single_dma)
 
-    return CompiledMemoryPlan(
+    return _apply_verify(CompiledMemoryPlan(
         config=config, source="graph", graph=graph, ordered=ordered,
         schedule=plan.schedule, plan=plan, baseline=baseline, coopt=coopt,
-        batch=batch, lowered=lower_schedule(ordered, plan.schedule, plan))
+        batch=batch, lowered=lower_schedule(ordered, plan.schedule, plan)))
 
 
 def _compile_model_plan(cfg, config: MemoryPlanConfig,
@@ -638,13 +715,15 @@ def _compile_model_plan(cfg, config: MemoryPlanConfig,
     # layer-basis executor) — still fail fast on typos
     from repro.core.exec.backends import get_backend
     get_backend(config.executor)
+    _check_verify_mode(config)
     if batch_tokens is None:
         raise TypeError("compile_plan(model_config) requires batch_tokens=")
     remat_on = config.remat if config.remat is not None \
         else bool(getattr(cfg, "remat", False))
     if not remat_on:
-        return CompiledMemoryPlan(config=config, source="model",
-                                  model_config=cfg, batch_tokens=batch_tokens)
+        return _apply_verify(CompiledMemoryPlan(
+            config=config, source="model", model_config=cfg,
+            batch_tokens=batch_tokens))
     budget = config.remat_budget_bytes if config.remat_budget_bytes is not None \
         else getattr(cfg, "remat_budget_bytes", None)
 
@@ -693,6 +772,6 @@ def _compile_model_plan(cfg, config: MemoryPlanConfig,
         inter, budget, offload=offload_on,
         dma_gbps=math.inf if free_dma else dma_gbps,
         device_tflops=device_tflops)
-    return CompiledMemoryPlan(config=config, source="model",
-                              model_config=cfg, remat_plan=remat_plan,
-                              batch_tokens=batch_tokens)
+    return _apply_verify(CompiledMemoryPlan(
+        config=config, source="model", model_config=cfg,
+        remat_plan=remat_plan, batch_tokens=batch_tokens))

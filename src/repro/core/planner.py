@@ -129,24 +129,17 @@ class Plan:
 
     def validate(self) -> None:
         """No two tensors with overlapping EO intervals may overlap in bytes,
-        every placement is ALIGN-aligned, and nothing exceeds the arena."""
-        ps = list(self.placements.values())
-        for i in range(len(ps)):
-            for j in range(i + 1, len(ps)):
-                a, b = ps[i], ps[j]
-                lifetimes_overlap = not (a.max_eo < b.min_eo or b.max_eo < a.min_eo)
-                bytes_overlap = not (a.end <= b.offset or b.end <= a.offset)
-                if lifetimes_overlap and bytes_overlap:
-                    raise AssertionError(
-                        f"overlap: {a.name} [{a.offset},{a.end}) eo[{a.min_eo},{a.max_eo}] "
-                        f"vs {b.name} [{b.offset},{b.end}) eo[{b.min_eo},{b.max_eo}]"
-                    )
-        for p in ps:
-            if p.end > self.arena_bytes:
-                raise AssertionError(f"{p.name} exceeds arena")
-            if p.offset % ALIGN != 0:
-                raise AssertionError(
-                    f"{p.name} at offset {p.offset} violates ALIGN={ALIGN}")
+        every placement is ALIGN-aligned, and nothing exceeds the arena.
+
+        Delegates to the static verifier's aliasing sweep
+        (:func:`repro.core.verify.plan_aliasing_diagnostics`) so every
+        call site — planners, both compile paths, hand-forged test plans —
+        shares one checker; raises :class:`AssertionError` on the first
+        finding, preserving the historical contract."""
+        from repro.core.verify import plan_aliasing_diagnostics
+        diags = plan_aliasing_diagnostics(self)
+        if diags:
+            raise AssertionError(diags[0].message)
 
     def utilization(self) -> float:
         """max over time of live requested bytes / arena bytes (1.0 = zero
@@ -217,7 +210,8 @@ class SortingPlanner:
             if other is region:
                 continue
             bytes_overlap = not (
-                other.end <= region.offset or region.offset + _align(t.nbytes) <= other.offset
+                other.end <= region.offset
+                or region.offset + _align(t.nbytes) <= other.offset
             )
             life_overlap = not (other.max_eo < t.min_eo or t.max_eo < other.min_eo)
             if bytes_overlap and life_overlap:

@@ -7,7 +7,7 @@ published ideal-memory numbers within <0.5% (see EXPERIMENTS.md §Table4).
 
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List
 
 from repro.core.graph import LayerGraph, LayerNode, compile_graph
 
@@ -160,7 +160,8 @@ def lenet5(num_classes: int = 10) -> LayerGraph:
                    "padding": "valid", "activation": "tanh"}),
         LayerNode("p2", "pool2d", ["c2"], {"ksize": 2, "stride": 2}),
         LayerNode("f5", "linear", ["p2"],
-                  {"in_features": 16 * 6 * 6, "out_features": 120, "activation": "tanh"}),
+                  {"in_features": 16 * 6 * 6, "out_features": 120,
+                   "activation": "tanh"}),
         LayerNode("f6", "linear", ["f5"],
                   {"in_features": 120, "out_features": 84, "activation": "tanh"}),
         LayerNode("f7", "linear", ["f6"],
@@ -259,8 +260,10 @@ def product_rating(num_users: int = 6040, num_items: int = 193610,
                    dim: int = 64) -> LayerGraph:
     """Fig. 12 'Rating': NCF-style — embeddings -> concat -> 3 linear (§5.2)."""
     layers = [
-        LayerNode("emb_u", "embedding", ["__input__"], {"vocab": num_users, "dim": dim}),
-        LayerNode("emb_i", "embedding", ["__input__"], {"vocab": num_items, "dim": dim}),
+        LayerNode("emb_u", "embedding", ["__input__"],
+                  {"vocab": num_users, "dim": dim}),
+        LayerNode("emb_i", "embedding", ["__input__"],
+                  {"vocab": num_items, "dim": dim}),
         LayerNode("cat", "concat", ["emb_u", "emb_i"], {"axis": -1}),
         LayerNode("fc0", "linear", ["cat"],
                   {"in_features": 2 * dim, "out_features": 128, "activation": "relu"}),

@@ -14,7 +14,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
-from repro.kernels.flash_attention.ref import attention_ref
 
 
 def _on_tpu() -> bool:

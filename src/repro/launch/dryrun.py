@@ -190,7 +190,8 @@ def main() -> None:
                                    mem.get("temp_size_in_bytes", 0))
                     print(f"OK    {tag} peak={peak/2**30:7.2f}GiB "
                           f"flops={rec['cost_analysis'].get('flops', 0):.3e} "
-                          f"coll={rec['collectives']['collective_bytes']/2**30:8.3f}GiB "
+                          f"coll={rec['collectives']['collective_bytes'] / 2**30:8.3f}"
+          "GiB "
                           f"compile={rec['timing']['compile_s']:6.1f}s",
                           flush=True)
                 elif rec["status"] == "skipped":

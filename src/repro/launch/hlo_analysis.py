@@ -13,7 +13,7 @@ within a factor of 2(n-1)/n).
 from __future__ import annotations
 
 import re
-from typing import Dict, List, Tuple
+from typing import Dict
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,

@@ -22,9 +22,7 @@ recurrence is a true sequential scan even in probe mode; its per-step
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
-
-import jax
+from typing import Dict
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch.hlo_analysis import analyze_collectives

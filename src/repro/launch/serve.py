@@ -12,7 +12,6 @@ step is the ``decode_32k``/``long_500k`` dry-run cell.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 from typing import List
 
@@ -33,7 +32,6 @@ def main() -> None:
     from repro.configs import ARCHS
     from repro.models.model import build_model, reduce_config
     from repro.launch.mesh import make_production_mesh, make_test_mesh
-    from repro.sharding import rules as R
 
     cfg = ARCHS[args.arch]
     if args.test_mesh:

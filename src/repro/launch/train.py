@@ -34,7 +34,8 @@ def main() -> None:
 
     if args.dry_run:
         os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                                   + " --xla_force_host_platform_device_count=512").strip()
+                                   + " --xla_force_host_platform_device_count"
+                              "=512").strip()
 
     import jax
     if args.distributed:

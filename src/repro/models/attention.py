@@ -9,7 +9,6 @@ Both share the same math as ``kernels/flash_attention/ref.py``.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Dict, Optional, Tuple
 
 import jax

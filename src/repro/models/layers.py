@@ -9,7 +9,7 @@ the standard mixed-precision recipe.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -72,7 +72,8 @@ def build_model(cfg: ModelConfig) -> Model:
             loss_fn=lambda p, b: m.encdec_loss(cfg, p, b),
             forward=lambda p, b: m.encdec_forward(
                 cfg, p, b["tokens"], b["enc_frames"])[0],
-            decode_init=lambda batch, max_seq: m.encdec_decode_init(cfg, batch, max_seq),
+            decode_init=lambda batch, max_seq: m.encdec_decode_init(
+            cfg, batch, max_seq),
             decode_specs=lambda: m.encdec_decode_specs(cfg),
             decode_fn=lambda p, s, tok, ln: m.encdec_decode_step(cfg, p, s, tok, ln),
         )

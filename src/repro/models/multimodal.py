@@ -7,8 +7,6 @@ transformer backbone is modelled.
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
-
 import jax
 import jax.numpy as jnp
 
@@ -17,8 +15,8 @@ from repro.models import attention as attn
 from repro.models import layers
 from repro.models.transformer import (_remat_policy, _scan_blocks,
                                       _stack_init, block_forward, block_init,
-                                      block_specs, lm_logits, maybe_scan,
-                                      padded_vocab, softmax_xent)
+                                      block_specs, maybe_scan, padded_vocab,
+                                      softmax_xent)
 from repro.sharding.rules import constrain
 
 

@@ -13,8 +13,7 @@ Decode maintains per-head state h: (B, H, P, N) with the classic update
 
 from __future__ import annotations
 
-import math
-from typing import Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

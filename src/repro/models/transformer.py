@@ -21,9 +21,7 @@ memory — the joint keep/recompute/offload planner priced by the
 
 from __future__ import annotations
 
-import functools
-import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +29,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.plan import compile_plan
 from repro.models import attention as attn
-from repro.models import layers, moe, ssm, xlstm
+from repro.models import layers, moe, xlstm
 from repro.sharding.rules import constrain
 
 VOCAB_PAD = 256

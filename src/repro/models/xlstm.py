@@ -16,14 +16,12 @@ inherently sequential, as in the paper.
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers
-from repro.sharding.rules import constrain
 
 
 # ---------------------------------------------------------------------------

@@ -10,7 +10,7 @@ Iteration-lifespan gradient tensors accumulate across unrolled steps.
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,7 @@ within-pod reduction stays full precision (ICI is cheap).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

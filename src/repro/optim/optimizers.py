@@ -13,7 +13,7 @@ verbatim (ZeRO-1 simply maps their specs through FSDP rules).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -26,11 +26,10 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import os
 import statistics
 import time
 from pathlib import Path
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 
 # --------------------------------------------------------------------------

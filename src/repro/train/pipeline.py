@@ -16,11 +16,11 @@ Bubble fraction = (S-1) / (M + S - 1); the builder warns when M < 4*S.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def pipeline_apply(stage_fn: Callable, stage_params, x_mb: jax.Array, *,

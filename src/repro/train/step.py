@@ -17,14 +17,13 @@ multi-pod dry-run.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ShapeConfig
 from repro.core.deprecation import warn_once
 from repro.core.plan import CompiledMemoryPlan, MemoryPlanConfig, compile_plan
 from repro.core.remat_policy import RematPlan

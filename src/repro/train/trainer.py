@@ -13,10 +13,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint.ckpt import CheckpointManager
 from repro.configs.base import ModelConfig, ShapeConfig
@@ -24,7 +23,7 @@ from repro.data.pipeline import BatchQueue, DataState, synthetic_lm_producer
 from repro.models.model import Model, build_model
 from repro.optim import Optimizer, make_optimizer
 from repro.runtime.fault import Heartbeat, StepWatchdog
-from repro.train.step import StepBundle, make_train_step
+from repro.train.step import make_train_step
 
 
 @dataclasses.dataclass

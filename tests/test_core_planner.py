@@ -6,8 +6,6 @@ Includes hypothesis property tests for the planner invariants:
   * planner peak <= worst-case/naive peak (usefulness)
 """
 
-import math
-
 import pytest
 
 try:  # optional dev dependency — the deterministic tests below always run
@@ -20,8 +18,8 @@ from repro.core.execution_order import compute_execution_order
 from repro.core.graph import LayerGraph, LayerNode, compile_graph
 from repro.core.ideal import PAPER_TABLE4_KIB, ideal_from_ordered, ideal_memory
 from repro.core.lifespan import CreateMode, Lifespan, TensorSpec
-from repro.core.planner import (BestFitPlanner, Plan, Placement,
-                                SortingPlanner, WorstCasePlanner, plan_memory)
+from repro.core.planner import (BestFitPlanner, SortingPlanner,
+                                WorstCasePlanner, plan_memory)
 from repro.core.zoo import ZOO
 
 

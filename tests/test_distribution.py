@@ -2,14 +2,12 @@
 ``--xla_force_host_platform_device_count`` so the main test process keeps
 its single-device view (per the dry-run isolation rule)."""
 
-import json
 import os
 import subprocess
 import sys
 import textwrap
 from pathlib import Path
 
-import pytest
 
 ROOT = Path(__file__).resolve().parents[1]
 
@@ -17,7 +15,8 @@ ROOT = Path(__file__).resolve().parents[1]
 def _run(script: str, n_devices: int = 8, timeout: int = 560) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                        + f" --xla_force_host_platform_device_count={n_devices}").strip()
+                        + " --xla_force_host_platform_device_count"
+               f"={n_devices}").strip()
     env["PYTHONPATH"] = str(ROOT / "src")
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
                          capture_output=True, text=True, timeout=timeout,

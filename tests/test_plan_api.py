@@ -12,8 +12,7 @@ import pytest
 
 from repro.configs.base import ModelConfig
 from repro.core.offload import make_schedule
-from repro.core.plan import (CompiledMemoryPlan, MemoryPlanConfig,
-                             compile_plan)
+from repro.core.plan import MemoryPlanConfig, compile_plan
 from repro.core.planned_exec import reference_loss_and_grads
 from repro.core.planner import plan_memory_swapped
 from repro.core.zoo import ZOO

@@ -1,7 +1,6 @@
 """Substrate tests: data pipeline, optimizers, compression, checkpointing,
 fault tolerance, offload/remat planning."""
 
-import json
 import os
 import tempfile
 import time

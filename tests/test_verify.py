@@ -1,0 +1,384 @@
+"""The static plan verifier: CHECKS registry over hand-built op lists,
+the mutation->check-id contract, the compile-time verify knob, backend
+admission of verified schedules only, and the runtime sanitizer.
+"""
+
+import dataclasses
+import importlib.util
+import pathlib
+
+import pytest
+
+from repro.core import MemoryPlanConfig, compile_plan
+from repro.core.lifespan import CreateMode, Lifespan, TensorSpec
+from repro.core.plan import (Compute, ExecutionSchedule, Free, Prefetch,
+                             SwapOut)
+from repro.core.planner import Placement, Plan
+from repro.core.verify import (CHECKS, Diagnostic,
+                               ScheduleVerificationError, VerifyReport,
+                               is_verified, plan_aliasing_diagnostics,
+                               verify_plan, verify_schedule)
+from repro.core.zoo import ZOO
+
+_HARNESS_PATH = (pathlib.Path(__file__).resolve().parents[1]
+                 / "tools" / "mutate_schedule.py")
+_spec = importlib.util.spec_from_file_location("mutate_schedule",
+                                               _HARNESS_PATH)
+mutate_schedule = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(mutate_schedule)
+
+
+# ---------------------------------------------------------------------------
+# Hand-built op lists: one tensor, one swap window
+# ---------------------------------------------------------------------------
+
+class _FakeOrdered:
+    def __init__(self, tensors, eo_max=100):
+        self.tensors = {t.name: t for t in tensors}
+        self.merged = {}
+        self.eo_max = eo_max
+        self.layer_orders = {}
+
+    def owner(self, name):
+        while name in self.merged:
+            name = self.merged[name]
+        return name
+
+    def planned_tensors(self):
+        return [t for t in self.tensors.values()
+                if t.create_mode == CreateMode.CREATE]
+
+
+def _t(name, nbytes, orders):
+    t = TensorSpec(name=name, shape=(nbytes,), dtype="uint8",
+                   lifespan=Lifespan.FORWARD, create_mode=CreateMode.CREATE)
+    t.exec_orders = tuple(sorted(orders))
+    return t
+
+
+def _one_swap_case(orders=(0, 10)):
+    """Produce at EO 0, swap out at 1, prefetch at 8 for a read at 10."""
+    ordered = _FakeOrdered([_t("X:a", 256, orders)])
+    ops = (
+        Compute(eo=0, layer="a", kind="F"),
+        SwapOut(eo=1, tensor="X:a", nbytes=256, device_offset=-1,
+                host_offset=-1),
+        Prefetch(eo=8, tensor="X:a", nbytes=256, device_offset=-1,
+                 host_offset=-1, read_eo=10),
+        Free(eo=10, tensor="X:a", nbytes=256, device_offset=-1),
+    )
+    return ordered, ExecutionSchedule(ops=ops)
+
+
+def _verify(ordered, lowered, **kw):
+    return verify_schedule(ordered, None, None, lowered, **kw)
+
+
+def test_valid_hand_built_schedule_has_zero_diagnostics():
+    ordered, lowered = _one_swap_case()
+    report = _verify(ordered, lowered)
+    assert report.ok
+    assert report.diagnostics == ()
+    assert report.ops_scanned == 4
+    assert set(report.checks_run) == set(CHECKS)
+
+
+def test_read_after_swap_out_without_prefetch_is_use_before_resident():
+    ordered, lowered = _one_swap_case()
+    ops = tuple(op for op in lowered.ops if not isinstance(op, Prefetch))
+    report = _verify(ordered, ExecutionSchedule(ops=ops))
+    assert not report.ok
+    assert "use_before_resident" in report.check_ids()
+    d = next(d for d in report.errors()
+             if d.check == "use_before_resident")
+    assert d.tensor == "X:a"
+    assert "swapped out" in d.message
+
+
+def test_read_racing_inflight_prefetch_is_use_before_resident():
+    # an access at EO 9 lands after the prefetch issued (8) but before its
+    # guaranteed completion (read_eo=10): statically a race
+    ordered, lowered = _one_swap_case(orders=(0, 9, 10))
+    report = _verify(ordered, lowered)
+    assert not report.ok
+    assert "use_before_resident" in report.check_ids()
+    assert any("in-flight prefetch" in d.message for d in report.errors())
+
+
+def test_prefetch_before_swap_out_retires_is_transfer_race():
+    ordered, lowered = _one_swap_case()
+    out = next(op for op in lowered.ops if isinstance(op, SwapOut))
+    ops = tuple(dataclasses.replace(op, eo=9) if op is out else op
+                for op in lowered.ops)
+    report = _verify(ordered, ExecutionSchedule(ops=ops))
+    assert "transfer_race" in report.check_ids()
+
+
+def test_overlapping_host_slots_in_live_windows_is_transfer_race():
+    ordered = _FakeOrdered([_t("X:a", 256, (0, 10)),
+                            _t("X:b", 256, (0, 12))])
+    ops = (
+        Compute(eo=0, layer="a", kind="F"),
+        Compute(eo=0, layer="b", kind="F"),
+        # both copies parked at host offset 0 with overlapping windows
+        SwapOut(eo=1, tensor="X:a", nbytes=256, device_offset=-1,
+                host_offset=0),
+        SwapOut(eo=2, tensor="X:b", nbytes=256, device_offset=-1,
+                host_offset=0),
+        Prefetch(eo=8, tensor="X:a", nbytes=256, device_offset=-1,
+                 host_offset=0, read_eo=10),
+        Prefetch(eo=9, tensor="X:b", nbytes=256, device_offset=-1,
+                 host_offset=0, read_eo=12),
+        Free(eo=10, tensor="X:a", nbytes=256, device_offset=-1),
+        Free(eo=12, tensor="X:b", nbytes=256, device_offset=-1),
+    )
+    report = _verify(ordered, ExecutionSchedule(ops=ops))
+    assert "transfer_race" in report.check_ids()
+    assert any("host slot" in d.message for d in report.errors())
+
+
+def test_duplicated_free_is_double_free():
+    ordered, lowered = _one_swap_case()
+    f = next(op for op in lowered.ops if isinstance(op, Free))
+    report = _verify(ordered, ExecutionSchedule(ops=lowered.ops + (f,)))
+    assert "double_free" in report.check_ids()
+
+
+def test_dropped_free_is_leak():
+    ordered, lowered = _one_swap_case()
+    ops = tuple(op for op in lowered.ops if not isinstance(op, Free))
+    report = _verify(ordered, ExecutionSchedule(ops=ops))
+    assert "leak" in report.check_ids()
+
+
+def test_unknown_check_name_is_a_clear_valueerror():
+    ordered, lowered = _one_swap_case()
+    with pytest.raises(ValueError, match="unknown verifier check"):
+        _verify(ordered, lowered, checks=("no_such_pass",))
+
+
+def test_check_subset_runs_only_the_requested_passes():
+    ordered, lowered = _one_swap_case()
+    ops = tuple(op for op in lowered.ops if not isinstance(op, Free))
+    report = _verify(ordered, ExecutionSchedule(ops=ops),
+                     checks=("use_before_resident",))
+    assert report.checks_run == ("use_before_resident",)
+    assert report.ok   # the leak pass did not run
+
+
+# ---------------------------------------------------------------------------
+# Plan.validate() delegation: one aliasing checker, same message shapes
+# ---------------------------------------------------------------------------
+
+def test_plan_validate_delegates_overlap_to_the_aliasing_checker():
+    plan = Plan({"a": Placement("a", 0, 128, 0, 10),
+                 "b": Placement("b", 64, 128, 5, 15)}, 256, "sorting")
+    diags = plan_aliasing_diagnostics(plan)
+    assert [d.check for d in diags] == ["arena_alias"]
+    with pytest.raises(AssertionError, match="overlap: a"):
+        plan.validate()
+
+
+def test_plan_validate_keeps_align_and_arena_messages():
+    with pytest.raises(AssertionError, match="ALIGN"):
+        Plan({"x": Placement("x", 32, 64, 0, 1)}, 128, "sorting").validate()
+    with pytest.raises(AssertionError, match="exceeds arena"):
+        Plan({"x": Placement("x", 0, 256, 0, 1)}, 128, "sorting").validate()
+
+
+# ---------------------------------------------------------------------------
+# Mutation harness: every corruption class -> the expected check id
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def reference_cp():
+    return mutate_schedule.reference_plan()
+
+
+def test_reference_plan_verifies_clean(reference_cp):
+    report = verify_plan(reference_cp)
+    assert report.ok
+    assert report.ops_scanned == len(reference_cp.lowered.ops)
+    assert report.placements_scanned > 0
+
+
+@pytest.mark.parametrize("mutation,expected", [
+    ("shift_offset", "arena_alias"),
+    ("drop_prefetch", "use_before_resident"),
+    ("reorder_swap_out", "transfer_race"),
+    ("double_free", "double_free"),
+    ("truncate_free", "leak"),
+    ("budget_overflow", "budget"),
+    ("misalign", "alignment"),
+])
+def test_forged_corruption_is_flagged_with_expected_check_id(
+        reference_cp, mutation, expected):
+    cp = reference_cp
+    forged = mutate_schedule.forge(cp, mutation)
+    report = verify_schedule(cp.ordered, cp.schedule, cp.plan, forged)
+    assert not report.ok, mutation
+    assert expected in report.check_ids(), \
+        f"{mutation}: expected {expected}, got {sorted(report.check_ids())}"
+
+
+def test_harness_main_exits_zero():
+    assert mutate_schedule.main() == 0
+
+
+# ---------------------------------------------------------------------------
+# The verify knob on MemoryPlanConfig
+# ---------------------------------------------------------------------------
+
+def test_unknown_verify_mode_fails_fast():
+    with pytest.raises(ValueError, match="unknown verify mode"):
+        compile_plan(ZOO["linear"](),
+                     MemoryPlanConfig(verify="strict"), batch=4)
+
+
+def test_verify_off_skips_the_report():
+    cp = compile_plan(ZOO["linear"](),
+                      MemoryPlanConfig(verify="off", min_idle_phases=3,
+                                       min_bytes=1 << 10), batch=4)
+    assert cp.verify_report is None
+    assert "verify" not in cp.report()
+
+
+def test_default_compile_folds_verify_into_report(reference_cp):
+    r = reference_cp.report()["verify"]
+    assert r["ok"] is True
+    assert r["errors"] == 0
+    assert set(r["checks_run"]) == set(CHECKS)
+    assert r["ops_scanned"] == len(reference_cp.lowered.ops)
+    assert r["wall_time_s"] >= 0
+    assert is_verified(reference_cp.lowered)
+
+
+def test_model_path_compile_carries_a_verify_report():
+    from repro.configs import ARCHS
+    cp = compile_plan(ARCHS["llama3.2-3b"],
+                      MemoryPlanConfig(remat=True,
+                                       remat_budget_bytes=1 << 20,
+                                       offload=True, dma_gbps=80.0,
+                                       device_tflops=200.0),
+                      batch_tokens=2048)
+    r = cp.report()["verify"]
+    assert r["ok"] is True
+    assert r["checks_run"] == ["budget"]
+
+
+def test_verification_error_is_an_assertion_error_with_diagnostics():
+    err = ScheduleVerificationError((
+        Diagnostic("error", "leak", "msg", tensor="X:a"),))
+    assert isinstance(err, AssertionError)
+    assert err.diagnostics[0].check == "leak"
+    assert "[error:leak]" in str(err)
+
+
+# ---------------------------------------------------------------------------
+# Backend admission + runtime sanitizer
+# ---------------------------------------------------------------------------
+
+def _exec_inputs(cp):
+    import jax
+    import jax.numpy as jnp
+    g = cp.graph
+    params = cp.init_params(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (cp.batch,) + tuple(g.input_shape))
+    y = jax.nn.one_hot(jnp.arange(cp.batch) % 10, 10)
+    return params, x, y
+
+
+def test_backend_refuses_a_corrupted_schedule():
+    cp = mutate_schedule.reference_plan()
+    params, x, y = _exec_inputs(cp)
+    cp.lowered = mutate_schedule.forge(cp, "drop_prefetch")
+    assert not is_verified(cp.lowered)
+    with pytest.raises(ScheduleVerificationError,
+                       match="use_before_resident"):
+        cp.loss_and_grads(params, x, y)
+
+
+def test_backend_verifies_on_admission_when_compile_skipped_it():
+    cp = compile_plan(
+        ZOO["lenet5"](),
+        MemoryPlanConfig(planner="bestfit", host_planner="segregated",
+                         min_idle_phases=3, min_bytes=1 << 12,
+                         cooptimize=False, verify="off"),
+        batch=8)
+    assert cp.verify_report is None
+    assert not is_verified(cp.lowered)
+    params, x, y = _exec_inputs(cp)
+    _, _, stats = cp.loss_and_grads(params, x, y)
+    assert stats.replayed_ops == cp.lowered.ops
+    assert is_verified(cp.lowered)   # admission check ran and marked it
+
+
+def test_sanitizer_cross_checks_every_replayed_op():
+    import numpy as np
+    from repro.core.exec.backends import SimulatedBackend
+    from repro.core.exec.layers import reference_loss_and_grads
+    cp = mutate_schedule.reference_plan()
+    params, x, y = _exec_inputs(cp)
+    loss, grads, stats = cp.loss_and_grads(
+        params, x, y, executor=SimulatedBackend(sanitize=True))
+    assert stats.sanitizer_checks == len(cp.lowered.ops)
+    loss_r, grads_r = reference_loss_and_grads(cp.graph, params, x, y)
+    np.testing.assert_allclose(np.asarray(loss), np.asarray(loss_r),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_sanitizer_off_by_default():
+    cp = mutate_schedule.reference_plan()
+    params, x, y = _exec_inputs(cp)
+    _, _, stats = cp.loss_and_grads(params, x, y)
+    assert stats.sanitizer_checks == 0
+
+
+# ---------------------------------------------------------------------------
+# Zoo-wide clean sweep (the CI gate runs the full planner cross-product)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_every_zoo_model_compiles_with_zero_diagnostics(name):
+    cp = compile_plan(ZOO[name](),
+                      MemoryPlanConfig(min_idle_phases=3,
+                                       min_bytes=1 << 12,
+                                       cooptimize=False), batch=4)
+    assert cp.verify_report is not None
+    assert cp.verify_report.ok
+    assert cp.verify_report.diagnostics == ()
+
+
+@pytest.mark.parametrize("planner", ["sorting", "bestfit", "segregated",
+                                     "buddy"])
+@pytest.mark.parametrize("host_planner", ["sorting", "segregated"])
+def test_planner_cross_product_verifies_clean_on_lenet5(planner,
+                                                        host_planner):
+    cp = compile_plan(
+        ZOO["lenet5"](),
+        MemoryPlanConfig(planner=planner, host_planner=host_planner,
+                         min_idle_phases=3, min_bytes=1 << 12,
+                         cooptimize=False), batch=4)
+    assert cp.verify_report.ok
+
+
+def test_verify_report_summary_shape():
+    report = VerifyReport(diagnostics=(), checks_run=("heap",),
+                          ops_scanned=3, placements_scanned=2,
+                          wall_time_s=0.01)
+    s = report.summary()
+    assert s == {"ok": True, "errors": 0, "warnings": 0,
+                 "checks_run": ["heap"], "ops_scanned": 3,
+                 "placements_scanned": 2, "wall_time_s": 0.01}
+
+
+def test_warnings_do_not_fail_a_report():
+    report = VerifyReport(
+        diagnostics=(Diagnostic("warning", "budget", "close to peak"),),
+        checks_run=("budget",), ops_scanned=1, placements_scanned=0,
+        wall_time_s=0.0)
+    assert report.ok
+    assert len(report.warnings()) == 1
+    report.raise_if_errors()   # no raise
+    assert report.summary()["warnings"] == 1

@@ -9,8 +9,6 @@ activation residuals dominate.
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.core import inplace
 

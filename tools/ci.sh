@@ -8,6 +8,15 @@ cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+# lint gate: ruff config lives in pyproject.toml ([tool.ruff]); the step
+# is skipped when ruff isn't on PATH (the dev container doesn't ship it)
+# but CI installs it, so violations still fail the workflow.
+if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+else
+    echo "ruff not installed; skipping lint gate" >&2
+fi
+
 python -m pytest -q -m "not slow" "$@"
 
 # compile_plan smoke: the facade must take a zoo model from graph to a
@@ -124,11 +133,44 @@ print(f"compile_plan smoke {cfg.name}: decisions={r['remat_decisions']} "
       f"lowering={r.get('offload_lowering')}")
 EOF
 
+# static-verifier gate (1/2): the whole zoo x device planner x host
+# planner sweep must compile with verify="error" — i.e. every lowered
+# schedule passes all registered checks with zero diagnostics.
+PYTHONPATH=src python - <<'EOF'
+from repro.core import MemoryPlanConfig, compile_plan
+from repro.core.verify import CHECKS
+from repro.core.zoo import ZOO
+
+ops = placements = 0
+for name in sorted(ZOO):
+    for planner in ("sorting", "bestfit", "segregated", "buddy"):
+        for hp in ("sorting", "segregated"):
+            cp = compile_plan(
+                ZOO[name](),
+                MemoryPlanConfig(planner=planner, host_planner=hp,
+                                 min_idle_phases=3, min_bytes=1 << 12,
+                                 cooptimize=False, verify="error"),
+                batch=4)
+            r = cp.verify_report
+            assert r.ok, (name, planner, hp)
+            assert set(r.checks_run) == set(CHECKS), (name, planner, hp)
+            ops += r.ops_scanned
+            placements += r.placements_scanned
+print(f"verify sweep clean: {len(ZOO)} models x 4 planners x 2 host "
+      f"planners, {ops} ops / {placements} placements scanned, "
+      f"checks={sorted(CHECKS)}")
+EOF
+
+# static-verifier gate (2/2): the mutation harness forges one corruption
+# per class and requires every class flagged with the expected check id —
+# a verifier that never fires would pass gate 1/2 trivially.
+PYTHONPATH=src python tools/mutate_schedule.py
+
 # benchmark JSON emission: the swap benches (graph + model path) must keep
 # producing the machine-readable perf-trajectory file, now including the
 # per-planner host-pool fragmentation sweep.
 PYTHONPATH=src python -m benchmarks.run \
-    --only swap_tradeoff,swap_model,host_planner,swap_exec \
+    --only swap_tradeoff,swap_model,host_planner,swap_exec,verify \
     --bench-json results/BENCH_swap.json > /dev/null
 test -s results/BENCH_swap.json
 PYTHONPATH=src python - <<'EOF'
@@ -169,5 +211,16 @@ for r in overlapped:
 for r in [r for r in async_rows if r["prefetches"] == 0]:
     assert r["achieved_overlap"] is None
     assert r["inflight_high_water"] == 0
+# static-verifier rows: every sweep point verified clean at compile time
+# and carries the verifier's own cost/coverage stats
+verify_rows = [r for r in recs if r["bench"] == "verify"]
+assert verify_rows, "BENCH_swap.json must carry verify rows"
+assert {r["planner"] for r in verify_rows} \
+    == {"sorting", "bestfit", "segregated", "buddy"}
+for r in verify_rows:
+    assert r["ok"] and r["errors"] == 0, r
+    assert r["ops_scanned"] > 0 and r["placements_scanned"] > 0
+    assert r["wall_time_s"] >= 0.0
+    assert len(r["checks_run"]) >= 6
 EOF
 echo "BENCH_swap.json emitted ($(wc -c < results/BENCH_swap.json) bytes)"

@@ -1,0 +1,169 @@
+#!/usr/bin/env python
+"""Mutation harness: forge corrupted schedules, prove the verifier catches
+each one.
+
+The static verifier (``repro.core.verify``) is only worth trusting if its
+false-negative rate is measured: a checker that never fires also "passes"
+every plan.  This harness compiles a known-good reference plan, applies
+one corruption per class — the planner-bug shapes the verifier exists to
+catch — and asserts every class is flagged *with the expected check id*:
+
+==================  =======================  ==========================
+mutation class      forged corruption        expected check id
+==================  =======================  ==========================
+shift_offset        prefetch lands at the    arena_alias
+                    wrong arena offset
+drop_prefetch       swap-out with no         use_before_resident
+                    matching prefetch
+reorder_swap_out    swap-out retires after   transfer_race
+                    its prefetch issued
+double_free         one Free replayed twice  double_free
+truncate_free       one Free dropped         leak
+budget_overflow     prefetch target beyond   budget
+                    the packed arena peak
+misalign            offset off the ALIGN     alignment
+                    grid
+==================  =======================  ==========================
+
+Run as a script (CI gate: exits non-zero on any missed corruption) or
+import ``MUTATIONS`` / ``forge`` from tests.
+"""
+
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import MemoryPlanConfig, compile_plan   # noqa: E402
+from repro.core.plan import ExecutionSchedule, Free, Prefetch  # noqa: E402
+from repro.core.planner import ALIGN  # noqa: E402
+from repro.core.verify import verify_schedule  # noqa: E402
+from repro.core.zoo import ZOO  # noqa: E402
+
+
+def _first(ops, kind):
+    for op in ops:
+        if isinstance(op, kind):
+            return op
+    raise AssertionError(
+        f"reference schedule has no {kind.__name__} op — pick a config "
+        f"that actually swaps")
+
+
+def _replace_op(ops, old, new):
+    return tuple(new if op is old else op for op in ops)
+
+
+def mutate_shift_offset(ops):
+    """Prefetch lands ALIGN*2 bytes away from its packed placement."""
+    p = _first(ops, Prefetch)
+    return _replace_op(ops, p, dataclasses.replace(
+        p, device_offset=p.device_offset + 2 * ALIGN))
+
+
+def mutate_drop_prefetch(ops):
+    """The swap-out stays; the prefetch bringing the bytes back is gone."""
+    p = _first(ops, Prefetch)
+    return tuple(op for op in ops if op is not p)
+
+
+def mutate_reorder_swap_out(ops):
+    """The swap-out is delayed past its own prefetch's issue phase."""
+    p = _first(ops, Prefetch)
+    out = next(o for o in ops
+               if type(o).__name__ == "SwapOut" and o.tensor == p.tensor)
+    return _replace_op(ops, out, dataclasses.replace(out, eo=p.eo + 1))
+
+
+def mutate_double_free(ops):
+    """One Free op replayed twice — the second frees dead bytes."""
+    f = _first(ops, Free)
+    return tuple(ops) + (f,)
+
+
+def mutate_truncate_free(ops):
+    """One Free op dropped — its arena bytes are never released."""
+    f = _first(ops, Free)
+    return tuple(op for op in ops if op is not f)
+
+
+def mutate_budget_overflow(arena_bytes):
+    def apply(ops):
+        """Prefetch target past the packed arena peak (still aligned)."""
+        p = _first(ops, Prefetch)
+        beyond = (arena_bytes // ALIGN + 1) * ALIGN
+        return _replace_op(ops, p,
+                           dataclasses.replace(p, device_offset=beyond))
+    return apply
+
+
+def mutate_misalign(ops):
+    """Prefetch offset knocked off the ALIGN grid."""
+    p = _first(ops, Prefetch)
+    return _replace_op(ops, p, dataclasses.replace(
+        p, device_offset=p.device_offset + 3))
+
+
+def reference_plan(model: str = "lenet5"):
+    """A known-good compiled plan with real data-moving swaps."""
+    cp = compile_plan(
+        ZOO[model](),
+        MemoryPlanConfig(planner="bestfit", host_planner="segregated",
+                         min_idle_phases=3, min_bytes=1 << 12,
+                         cooptimize=False),
+        batch=8)
+    assert cp.lowered.transfers(), "reference plan must move data"
+    return cp
+
+
+def mutations(cp):
+    """mutation class -> (expected check id, op-list transform)."""
+    return {
+        "shift_offset": ("arena_alias", mutate_shift_offset),
+        "drop_prefetch": ("use_before_resident", mutate_drop_prefetch),
+        "reorder_swap_out": ("transfer_race", mutate_reorder_swap_out),
+        "double_free": ("double_free", mutate_double_free),
+        "truncate_free": ("leak", mutate_truncate_free),
+        "budget_overflow": ("budget",
+                            mutate_budget_overflow(cp.plan.arena_bytes)),
+        "misalign": ("alignment", mutate_misalign),
+    }
+
+
+def forge(cp, name: str) -> ExecutionSchedule:
+    """Apply one named corruption to ``cp``'s lowered op list."""
+    _, fn = mutations(cp)[name]
+    return ExecutionSchedule(ops=fn(cp.lowered.ops))
+
+
+def main() -> int:
+    cp = reference_plan()
+    clean = verify_schedule(cp.ordered, cp.schedule, cp.plan, cp.lowered)
+    if not clean.ok:
+        print("FAIL reference plan is not clean:")
+        for d in clean.errors():
+            print(" ", d.render())
+        return 1
+    print(f"reference plan clean: {clean.ops_scanned} ops, "
+          f"{len(clean.checks_run)} checks")
+
+    missed = 0
+    for name, (expected, _) in mutations(cp).items():
+        report = verify_schedule(cp.ordered, cp.schedule, cp.plan,
+                                 forge(cp, name))
+        got = sorted(report.check_ids())
+        caught = expected in got and not report.ok
+        status = "caught" if caught else "MISSED"
+        print(f"{status:>7} {name}: expected={expected} got={got} "
+              f"({len(report.errors())} error(s))")
+        if not caught:
+            missed += 1
+    if missed:
+        print(f"FAIL {missed} corruption class(es) escaped the verifier")
+        return 1
+    print("all corruption classes caught with the expected check id")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
