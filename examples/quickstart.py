@@ -5,6 +5,9 @@ prove it memory-safe with the static verifier (``repro.core.verify``,
 on by default via ``MemoryPlanConfig(verify="error")``), and replay it
 on the async device-stream executor backend
 (``MemoryPlanConfig(executor="async")``), printing the overlap report.
+Finally, serve N simulated users through the multi-tenant
+personalization service (``repro.serve``): shared compiled plans per
+batch bucket, admission-controlled arena shares, pad-to-bucket batching.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -113,6 +116,34 @@ def async_exec_demo() -> None:
     assert stats.replayed_ops == cp.lowered.ops
 
 
+def serve_demo() -> None:
+    """Serve N users: multi-tenant personalization over one device arena.
+    Every user shares the frozen base tree and one compiled plan per batch
+    bucket; admission control splits the arena between live sessions."""
+    from repro.core.zoo import ZOO
+    from repro.serve import PersonalizationService
+    from repro.serve.buckets import dummy_batch
+
+    g = ZOO["lenet5"]()
+    svc = PersonalizationService(g, buckets=(8, 16), max_live_sessions=4)
+    svc.warmup()
+    print("== serving 4 users over 2 buckets (lenet5) ==")
+    for u in range(4):
+        n = 5 if u % 2 else 12        # short batches pad up to a bucket
+        res = svc.submit(f"user{u}", *dummy_batch(g, n, seed=u))
+        print(f"  user{u}: {res.status} bucket={res.bucket} "
+              f"loss={res.loss:.3f} peak={res.peak_bytes} "
+              f"share={res.arena_share_bytes}")
+        assert res.ok and res.peak_bytes <= res.arena_share_bytes
+    rep = svc.report()
+    cache, adm = rep["plan_cache"], rep["admission"]
+    print(f"plan cache: {cache['entries']} plans for "
+          f"{adm['live_sessions']} sessions "
+          f"(hits={cache['hits']} misses={cache['misses']}), "
+          f"arena share={adm['arena_share_bytes']} B/session, "
+          f"deadlocks={rep['serve']['deadlocks']}")
+
+
 def main() -> None:
     # remat=True so the compiled memory plan has real keep/offload content
     cfg = reduce_config(ARCHS["llama3.2-3b"], n_layers=2, d_model=64,
@@ -143,6 +174,7 @@ def main() -> None:
     graph_plan_demo()
     verify_demo()
     async_exec_demo()
+    serve_demo()
 
 
 if __name__ == "__main__":

@@ -46,9 +46,11 @@ from repro.core.deprecation import warn_once as _warn_once
 from repro.core.exec.backends import (BACKENDS, AsyncDeviceBackend,
                                       ExecutorBackend, SimulatedBackend,
                                       get_backend)
-from repro.core.plan import (CompiledMemoryPlan, Compute, CooptStats,
-                             ExecutionSchedule, Free, MemoryPlanConfig,
-                             Prefetch, SwapOut, compile_plan, lower_schedule)
+from repro.core.plan import (ArenaBudgetError, CompiledMemoryPlan, Compute,
+                             CooptStats, ExecutionSchedule, Free,
+                             MemoryPlanConfig, Prefetch, SwapOut,
+                             compile_plan, compile_plan_under_budget,
+                             lower_schedule)
 from repro.core.planner import PLANNERS, ArenaAllocator, get_planner
 from repro.core.remat_policy import (RematPlan, plan_joint_policy,
                                      plan_step_time_s)
@@ -59,6 +61,7 @@ from repro.core.verify import (CHECKS, Diagnostic,
 __all__ = [
     # the compile API
     "MemoryPlanConfig", "CompiledMemoryPlan", "CooptStats", "compile_plan",
+    "compile_plan_under_budget", "ArenaBudgetError",
     # the lowered executor-facing IR
     "ExecutionSchedule", "Compute", "SwapOut", "Prefetch", "Free",
     "lower_schedule",

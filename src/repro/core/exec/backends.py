@@ -70,7 +70,7 @@ class ExecutorBackend(Protocol):
     def run(self, graph: LayerGraph, params, x, label, *,
             schedule: OffloadSchedule,
             ordered: Optional[OrderedTensors] = None,
-            plan=None, lowered=None
+            plan=None, lowered=None, mask=None
             ) -> Tuple[jax.Array, Dict[str, Dict[str, jax.Array]],
                        SwapExecStats]: ...
 
@@ -103,7 +103,9 @@ class _ReplayBackend:
     def run(self, graph: LayerGraph, params, x, label, *,
             schedule: OffloadSchedule,
             ordered: Optional[OrderedTensors] = None,
-            plan=None, lowered=None):
+            plan=None, lowered=None, mask=None):
+        import time as _time
+
         from repro.core.plan import (Compute, Free, Prefetch, SwapOut,
                                      lower_schedule)
         from repro.core.verify import (StaticResidencyModel, is_verified,
@@ -120,6 +122,7 @@ class _ReplayBackend:
                             lowered).raise_if_errors()
             mark_verified(lowered)
         sanitizer = StaticResidencyModel(ordered) if self.sanitize else None
+        t_run0 = _time.perf_counter()
         stats = SwapExecStats(backend=self.name)
         stats.inplace_prefetches = sum(
             1 for d in schedule.decisions if d.inplace)
@@ -170,7 +173,8 @@ class _ReplayBackend:
                 if kind == "F":
                     if l.kind in LOSS_KINDS:
                         loss_val = loss_forward(
-                            l.kind, store.get(l.inputs[0], stats), label)
+                            l.kind, store.get(l.inputs[0], stats), label,
+                            mask)
                     else:
                         xs = [store.get(i, stats) for i in l.inputs]
                         p = params.get(_param_owner(graph, l))
@@ -195,7 +199,7 @@ class _ReplayBackend:
                     if l.kind in LOSS_KINDS:
                         pred = l.inputs[0]
                         derivs[pred] = loss_derivative(
-                            l.kind, store.get(pred, stats), label)
+                            l.kind, store.get(pred, stats), label, mask)
                     else:
                         dy = derivs.pop(lname, None)
                         if dy is not None:
@@ -268,6 +272,7 @@ class _ReplayBackend:
                 stats.sanitizer_checks += 1
 
         engine.drain(stats)
+        stats.wall_time_s = _time.perf_counter() - t_run0
         stats.hbm_high_water = hbm.high_water
         stats.host_high_water = store.host_pool.high_water
         stats.replayed_ops = tuple(replayed)
@@ -310,6 +315,7 @@ class _ReplayBackend:
             "peak_inflight_prefetch": s.peak_inflight_prefetch,
             "planned_peak_inflight_prefetch": self._planned_inflight,
             "sanitizer_checks": s.sanitizer_checks,
+            "wall_time_s": s.wall_time_s,
         }
 
 
@@ -417,6 +423,7 @@ def swap_planned_loss_and_grads(
     plan: Optional["SwapAwarePlan"] = None,  # noqa: F821
     lowered: Optional["ExecutionSchedule"] = None,  # noqa: F821
     executor: Union[str, ExecutorBackend, None] = None,
+    mask: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict[str, Dict[str, jax.Array]], SwapExecStats]:
     """One layer-basis iteration replaying the compiled op list.
 
@@ -434,4 +441,4 @@ def swap_planned_loss_and_grads(
     """
     return get_backend(executor).run(
         graph, params, x, label, schedule=schedule, ordered=ordered,
-        plan=plan, lowered=lowered)
+        plan=plan, lowered=lowered, mask=mask)

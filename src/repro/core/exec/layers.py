@@ -252,22 +252,57 @@ def layer_calc_derivative(l: LayerNode, ctx: Any, dy: jax.Array,
 # Loss
 # ---------------------------------------------------------------------------
 
-def loss_forward(kind: str, pred: jax.Array, label: jax.Array) -> jax.Array:
+def _sample_mask(mask: jax.Array, pred: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Broadcastable per-sample mask and its real-sample count.
+
+    ``mask`` is (B,) with 1.0 for real samples and 0.0 for pad rows (the
+    serve path pads ragged batches up to their bucket).  Masked rows get an
+    exactly-zero loss derivative, so every downstream gradient matches the
+    unpadded batch bit-for-bit up to float association — provided no layer
+    mixes samples across the batch dimension (true for every zoo graph;
+    batchnorm would violate it).
+    """
+    m = jnp.asarray(mask, pred.dtype)
+    return m.reshape((-1,) + (1,) * (pred.ndim - 1)), jnp.maximum(m.sum(), 1.0)
+
+
+def loss_forward(kind: str, pred: jax.Array, label: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    if mask is None:
+        if kind == "loss_mse":
+            return jnp.mean((pred - label) ** 2)
+        if kind == "loss_ce":
+            logp = jax.nn.log_softmax(pred, axis=-1)
+            return -jnp.mean(jnp.sum(label * logp, axis=-1))
+        raise ValueError(kind)
+    m, n_real = _sample_mask(mask, pred)
     if kind == "loss_mse":
-        return jnp.mean((pred - label) ** 2)
+        per_sample = pred.size // pred.shape[0]
+        return jnp.sum(m * (pred - label) ** 2) / (n_real * per_sample)
     if kind == "loss_ce":
         logp = jax.nn.log_softmax(pred, axis=-1)
-        return -jnp.mean(jnp.sum(label * logp, axis=-1))
+        per_sample_ce = jnp.sum(label * logp, axis=-1, keepdims=True)
+        return -jnp.sum(m * per_sample_ce) / n_real
     raise ValueError(kind)
 
 
-def loss_derivative(kind: str, pred: jax.Array, label: jax.Array) -> jax.Array:
-    n = pred.size if kind == "loss_mse" else pred.shape[0]
+def loss_derivative(kind: str, pred: jax.Array, label: jax.Array,
+                    mask: Optional[jax.Array] = None) -> jax.Array:
+    if mask is None:
+        n = pred.size if kind == "loss_mse" else pred.shape[0]
+        if kind == "loss_mse":
+            return 2.0 * (pred - label) / n
+        if kind == "loss_ce":
+            # combined softmax+CE derivative (the Loss realizer removed
+            # softmax)
+            return (jax.nn.softmax(pred, axis=-1) - label) / n
+        raise ValueError(kind)
+    m, n_real = _sample_mask(mask, pred)
     if kind == "loss_mse":
-        return 2.0 * (pred - label) / n
+        per_sample = pred.size // pred.shape[0]
+        return 2.0 * m * (pred - label) / (n_real * per_sample)
     if kind == "loss_ce":
-        # combined softmax+CE derivative (the Loss realizer removed softmax)
-        return (jax.nn.softmax(pred, axis=-1) - label) / n
+        return m * (jax.nn.softmax(pred, axis=-1) - label) / n_real
     raise ValueError(kind)
 
 
@@ -277,7 +312,8 @@ def loss_derivative(kind: str, pred: jax.Array, label: jax.Array) -> jax.Array:
 
 def planned_loss_and_grads(graph: LayerGraph,
                            params: Dict[str, Dict[str, jax.Array]],
-                           x: jax.Array, label: jax.Array
+                           x: jax.Array, label: jax.Array,
+                           mask: Optional[jax.Array] = None
                            ) -> Tuple[jax.Array, Dict[str, Dict[str, jax.Array]]]:
     """One layer-basis training iteration: F sweep, then CG/CD sweep.
 
@@ -293,7 +329,7 @@ def planned_loss_and_grads(graph: LayerGraph,
     for l in graph.layers:
         if l.kind in ("loss_mse", "loss_ce"):
             loss_node = l
-            loss_val = loss_forward(l.kind, acts[l.inputs[0]], label)
+            loss_val = loss_forward(l.kind, acts[l.inputs[0]], label, mask)
             continue
         xs = [acts[i] for i in l.inputs]
         p = params.get(_param_owner(graph, l))
@@ -304,7 +340,8 @@ def planned_loss_and_grads(graph: LayerGraph,
     # ---- Backward (EO N..3N): CG then CD per layer, reverse order ----------
     derivs: Dict[str, jax.Array] = {}
     pred_name = loss_node.inputs[0]
-    derivs[pred_name] = loss_derivative(loss_node.kind, acts[pred_name], label)
+    derivs[pred_name] = loss_derivative(loss_node.kind, acts[pred_name],
+                                        label, mask)
 
     grads: Dict[str, Dict[str, jax.Array]] = {}
     for l in reversed(graph.layers):
@@ -369,7 +406,8 @@ def reference_forward(graph: LayerGraph,
 
 def reference_loss_and_grads(graph: LayerGraph,
                              params: Dict[str, Dict[str, jax.Array]],
-                             x: jax.Array, label: jax.Array):
+                             x: jax.Array, label: jax.Array,
+                             mask: Optional[jax.Array] = None):
     loss_kind = next(l.kind for l in graph.layers if l.kind.startswith("loss"))
     trainable_owners = {
         _param_owner(graph, l) for l in graph.layers
@@ -380,7 +418,7 @@ def reference_loss_and_grads(graph: LayerGraph,
 
     def loss_fn(tp):
         pred = reference_forward(graph, {**frozen_p, **tp}, x)
-        return loss_forward(loss_kind, pred, label)
+        return loss_forward(loss_kind, pred, label, mask)
 
     loss, grads = jax.value_and_grad(loss_fn)(train_p)
     return loss, grads

@@ -62,6 +62,10 @@ class SwapExecStats:
     # debug sanitizer: per-op cross-checks of runtime residency against
     # the static verifier model (0 when the sanitizer is off)
     sanitizer_checks: int = 0
+    # wall-clock seconds the backend spent replaying the op list — the
+    # per-step timing the serving layer aggregates into per-session
+    # steps/sec (0.0 until a run completes)
+    wall_time_s: float = 0.0
 
 
 class HbmTracker:

@@ -197,6 +197,19 @@ class MemoryPlanConfig:
     device_tflops: Optional[float] = None
     offload_dropped: Optional[bool] = None
 
+    def cache_key(self) -> Tuple[Any, ...]:
+        """Stable hashable key covering EVERY knob, field-order invariant.
+
+        Compile caches (the serving plan cache, autotuner memos) must key
+        on the *full* config: two tenants whose configs differ in any knob
+        — planner, host_planner, budget, executor, verify, ... — may get
+        materially different plans, so sharing a cache slot between them
+        would silently serve one tenant the other's QoS.  Sorting by field
+        name keeps the key stable under dataclass field reordering."""
+        return tuple(
+            (f.name, getattr(self, f.name))
+            for f in sorted(dataclasses.fields(self), key=lambda f: f.name))
+
 
 @dataclasses.dataclass(frozen=True)
 class CooptStats:
@@ -461,7 +474,7 @@ class CompiledMemoryPlan:
         from repro.core.exec.layers import init_params
         return init_params(self.graph, rng)
 
-    def loss_and_grads(self, params, x, label, *, executor=None):
+    def loss_and_grads(self, params, x, label, *, executor=None, mask=None):
         """One layer-basis training iteration under this plan.
 
         Replays the lowered op list on the configured executor backend
@@ -469,7 +482,10 @@ class CompiledMemoryPlan:
         call — a registry name or an ``ExecutorBackend`` instance).  An
         empty schedule degrades to the plain planned walk; the HBM
         high-water mark is asserted against the packed residency peak on
-        every backend.  The backend's post-run summary (transfer counts,
+        every backend.  ``mask`` is an optional (batch,) sample mask for
+        pad-to-bucket batches: masked rows contribute an exactly-zero loss
+        derivative, so grads match the unpadded batch (the serving path's
+        bucket padding).  The backend's post-run summary (transfer counts,
         and for ``"async"`` the achieved overlap vs the planned
         ``peak_inflight_prefetch``) lands in ``self.exec_report`` and is
         folded into :meth:`report`.  Returns ``(loss, grads,
@@ -485,6 +501,7 @@ class CompiledMemoryPlan:
             ordered=self.ordered,
             plan=self.plan if isinstance(self.plan, SwapAwarePlan) else None,
             lowered=self.lowered,
+            mask=mask,
         )
         self.exec_report = backend.report()
         return out
@@ -775,3 +792,72 @@ def _compile_model_plan(cfg, config: MemoryPlanConfig,
     return _apply_verify(CompiledMemoryPlan(
         config=config, source="model", model_config=cfg,
         remat_plan=remat_plan, batch_tokens=batch_tokens))
+
+
+# ---------------------------------------------------------------------------
+# Budget-share compile: fit a plan inside one tenant's arena slice
+# ---------------------------------------------------------------------------
+
+class ArenaBudgetError(RuntimeError):
+    """No plan configuration packed the graph inside the arena budget.
+
+    Raised by :func:`compile_plan_under_budget` when even the most
+    aggressive swap escalation leaves the packed device-arena peak above
+    the caller's byte budget.  Carries the best (lowest-peak) attempt so
+    admission controllers can report how far over budget the tenant is.
+    """
+
+    def __init__(self, msg: str, *, best_peak_bytes: int,
+                 arena_budget_bytes: int):
+        super().__init__(msg)
+        self.best_peak_bytes = best_peak_bytes
+        self.arena_budget_bytes = arena_budget_bytes
+
+
+# Escalation ladder for compile_plan_under_budget: after the caller's own
+# config, each rung swaps more aggressively (shorter idle windows, smaller
+# DMA-worthy tensors, no reclaim cap).  Deterministic, so two tenants with
+# the same (graph, batch, config, budget) always converge on the same plan
+# — the property the serving compile cache relies on.
+_BUDGET_ESCALATION: Tuple[Dict[str, Any], ...] = (
+    {"min_idle_phases": 3, "min_bytes": 1 << 14, "hbm_budget_bytes": None},
+    {"min_idle_phases": 2, "min_bytes": 1 << 12, "hbm_budget_bytes": None},
+    {"min_idle_phases": 2, "min_bytes": 1 << 9, "prefetch_margin": 1,
+     "hbm_budget_bytes": None, "planner": "bestfit"},
+)
+
+
+def compile_plan_under_budget(graph: LayerGraph,
+                              config: Optional[MemoryPlanConfig] = None,
+                              *, batch: int,
+                              arena_budget_bytes: int) -> CompiledMemoryPlan:
+    """Compile a graph plan whose packed device-arena peak fits a budget.
+
+    The QoS lever of multi-tenant serving: N concurrent sessions split one
+    device arena, so each session's plan must pack inside its share.  The
+    caller's ``config`` is tried first; if its peak exceeds
+    ``arena_budget_bytes`` the swap knobs escalate down the deterministic
+    ladder (shorter idle windows, smaller ``min_bytes``, uncapped reclaim)
+    until the plan fits.  Raises :class:`ArenaBudgetError` when even the
+    most aggressive rung cannot fit — the admission controller's signal to
+    reject the session instead of overcommitting the arena.
+    """
+    config = config or MemoryPlanConfig()
+    best: Optional[CompiledMemoryPlan] = None
+    tried: List[Tuple[str, int]] = []
+    for overrides in ({},) + _BUDGET_ESCALATION:
+        rung = dataclasses.replace(config, swap=True, **overrides) \
+            if overrides else config
+        cp = compile_plan(graph, rung, batch=batch)
+        tried.append((f"idle={rung.min_idle_phases}/"
+                      f"min_bytes={rung.min_bytes}", cp.peak_bytes))
+        if cp.peak_bytes <= arena_budget_bytes:
+            return cp
+        if best is None or cp.peak_bytes < best.peak_bytes:
+            best = cp
+    attempts = ", ".join(f"{k}: peak={v}" for k, v in tried)
+    raise ArenaBudgetError(
+        f"{graph.name} batch={batch} cannot pack inside "
+        f"{arena_budget_bytes} arena bytes ({attempts})",
+        best_peak_bytes=best.peak_bytes,
+        arena_budget_bytes=arena_budget_bytes)

@@ -222,6 +222,42 @@ def kv_cache_specs():
             "v": (None, "batch", "kv_seq", "kv_heads", None)}
 
 
+def prefill_attention(cfg: ModelConfig, params, x, cache_k, cache_v
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched prefill: project/rope the whole prompt at once, write it
+    into ``cache[:, :S]``, attend causally.
+
+    One fused full-sequence forward replaces S sequential
+    :func:`decode_attention` steps — same math (rope at positions 0..S-1,
+    K/V stored in the cache dtype, attention over the stored values), so
+    the filled cache and the last-position logits match the sequential
+    fill to float tolerance.
+
+    x: (B, S, d); cache_k/v: (B, max_seq, KV, hd), assumed empty (the
+    prompt starts at position 0).  Returns (out, new_k, new_v).
+    """
+    dt = layers._dtype(cfg.dtype)
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = layers.dense(params["wq"], x, dt).reshape(b, s, cfg.n_heads, hd)
+    k = layers.dense(params["wk"], x, dt).reshape(b, s, cfg.n_kv_heads, hd)
+    v = layers.dense(params["wv"], x, dt).reshape(b, s, cfg.n_kv_heads, hd)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    cache_k = cache_k.at[:, :s].set(k.astype(cache_k.dtype))
+    cache_v = cache_v.at[:, :s].set(v.astype(cache_v.dtype))
+
+    groups = cfg.n_heads // cfg.n_kv_heads
+    # attend over the *stored* K/V so dtype rounding matches decode exactly
+    kk = _repeat_kv(cache_k[:, :s], groups)
+    vv = _repeat_kv(cache_v[:, :s], groups)
+    o = naive_attention(q, kk, vv, causal=True)
+    o = constrain(o, "batch", "seq", "heads", None)
+    o = o.reshape(b, s, cfg.n_heads * hd)
+    return layers.dense(params["wo"], o, dt), cache_k, cache_v
+
+
 def decode_attention(cfg: ModelConfig, params, x, cache_k, cache_v, *,
                      cache_len: jax.Array, layer_idx: int = 0
                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:

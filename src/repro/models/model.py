@@ -37,6 +37,11 @@ class Model:
     decode_init: Optional[Callable] = None
     decode_specs: Optional[Callable] = None
     decode_fn: Optional[Callable] = None
+    # (params, state, tokens(B,S)) -> (last_logits, state): one fused
+    # full-prompt forward filling the KV cache.  None for families whose
+    # decode state is recurrent (ssm/hybrid) or cross-attentive — servers
+    # fall back to sequential decode-step prefill.
+    prefill_fn: Optional[Callable] = None
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -51,6 +56,7 @@ def build_model(cfg: ModelConfig) -> Model:
             decode_init=lambda batch, max_seq: t.lm_decode_init(cfg, batch, max_seq),
             decode_specs=lambda: t.lm_decode_specs(cfg),
             decode_fn=lambda p, s, tok, ln: t.lm_decode_step(cfg, p, s, tok, ln),
+            prefill_fn=lambda p, s, tok: t.lm_prefill(cfg, p, s, tok),
         )
     if cfg.family == "ssm":
         return Model(

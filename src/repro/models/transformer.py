@@ -262,6 +262,39 @@ def lm_decode_step(cfg: ModelConfig, params, cache, tokens, cache_len):
     return logits, {"k": new_k, "v": new_v}
 
 
+def lm_prefill(cfg: ModelConfig, params, cache, tokens):
+    """Batched prefill: one full-sequence causal forward that fills the KV
+    cache, replacing ``S`` sequential :func:`lm_decode_step` calls.
+
+    tokens: (B, S) prompt ids into an empty cache.  Returns
+    ``(last_logits, cache)`` where ``last_logits`` is (B, padded_vocab) for
+    the final prompt position — exactly what greedy decode samples from —
+    and the cache holds all S positions, ready for ``lm_decode_step`` at
+    ``cache_len = S``.
+    """
+    b, s = tokens.shape
+    x = layers.embed(params["embed"], tokens, layers._dtype(cfg.dtype))
+    x = constrain(x, "batch", "seq", "embed")
+
+    def body(h, inp):
+        p, ck, cv = inp
+        hn = layers.rmsnorm(p["ln1"], h, cfg.norm_eps)
+        ao, ck, cv = attn.prefill_attention(cfg, p["attn"], hn, ck, cv)
+        h = h + ao
+        hn = layers.rmsnorm(p["ln2"], h, cfg.norm_eps)
+        if cfg.is_moe:
+            mo, _ = moe.moe_forward(cfg, p["moe"], hn)
+            h = h + mo
+        elif cfg.d_ff:
+            h = h + layers.swiglu(p["mlp"], hn, layers._dtype(cfg.dtype))
+        return h, (ck, cv)
+
+    x, (new_k, new_v) = maybe_scan(
+        cfg, body, x, (params["blocks"], cache["k"], cache["v"]))
+    logits = lm_logits(cfg, params, x)[:, -1]
+    return logits, {"k": new_k, "v": new_v}
+
+
 # ---------------------------------------------------------------------------
 # xLSTM stack (family: ssm)
 # ---------------------------------------------------------------------------

@@ -20,6 +20,14 @@ Components:
 * ``elastic_new_mesh`` — recompute the mesh after losing hosts: drops the
   data-parallel extent to the largest supported divisor and returns the
   re-shard plan (checkpoint restore handles the actual movement).
+
+* ``FaultInjector`` — deterministic fault-injection hook for tests and
+  chaos drills: arm a kill against a named target (a serving session, a
+  host, a step) and the owning loop consults ``check(target)`` at its
+  preemption points; the hook fires once after the armed number of checks.
+  On-device training runs opportunistically (idle, charging) and gets
+  killed constantly — the serving queue uses this hook to prove a session
+  killed mid-queue releases its arena reservation.
 """
 
 from __future__ import annotations
@@ -165,3 +173,44 @@ def elastic_new_mesh(n_hosts_alive: int, *, chips_per_host: int = 8,
         "microbatch_scale": max(16 // max(data, 1), 1),
     }
     return (data, model_par), plan
+
+
+# --------------------------------------------------------------------------
+# Deterministic fault injection
+# --------------------------------------------------------------------------
+
+class FaultInjector:
+    """Arm kills against named targets; owning loops poll ``check``.
+
+    ``arm_kill("session:alice", after=2)`` makes the third
+    ``check("session:alice")`` return True (fire-once); earlier checks
+    count down, unrelated targets are never disturbed.  Loops treat a True
+    result exactly like an external preemption: tear the target down and
+    release every resource it held.  Deterministic by construction — no
+    clocks, no randomness — so tests can assert the precise step a session
+    dies at.
+    """
+
+    def __init__(self) -> None:
+        self._armed: Dict[str, int] = {}
+        self.fired: List[str] = []
+
+    def arm_kill(self, target: str, *, after: int = 0) -> None:
+        """Fire on the ``after``-th subsequent check of ``target`` (0 = next)."""
+        self._armed[target] = int(after)
+
+    def check(self, target: str) -> bool:
+        """Poll ``target``; True exactly once when its armed kill fires."""
+        remaining = self._armed.get(target)
+        if remaining is None:
+            return False
+        if remaining <= 0:
+            del self._armed[target]
+            self.fired.append(target)
+            return True
+        self._armed[target] = remaining - 1
+        return False
+
+    @property
+    def armed(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._armed))

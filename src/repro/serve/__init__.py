@@ -1,0 +1,45 @@
+"""Multi-tenant personalization serving (paper §"Personalization examples").
+
+On-device personalization is a *serving* problem as much as a training
+problem: one box hosts a shared pre-trained backbone and many users'
+lightweight fine-tune state, training opportunistically as user data
+arrives.  This package turns :func:`repro.core.compile_plan` into that
+serving stack:
+
+* :mod:`repro.serve.buckets`   — sorted batch-size buckets, pad-to-bucket
+  batching (exact numerics via sample masks), and the
+  ``(model, bucket, config, budget) -> CompiledMemoryPlan`` compile cache.
+* :mod:`repro.serve.admission` — admission control: ``max_live_sessions``
+  tenants split one device-arena byte budget; the memory planner is the
+  QoS lever (each session's plans must pack inside its share).
+* :mod:`repro.serve.servable`  — ``ServablePersonalizer``: one frozen base
+  parameter tree shared by every session + per-user trainable deltas and
+  optimizer state.
+* :mod:`repro.serve.service`   — ``PersonalizationService``: the FIFO
+  request loop (``submit(user, x, y) -> StepResult``) with graceful
+  rejection and fault-injection kill points.
+
+Quick start::
+
+    from repro.core.zoo import ZOO
+    from repro.serve import PersonalizationService
+
+    svc = PersonalizationService(ZOO["lenet5"](), buckets=(8, 16),
+                                 max_live_sessions=4)
+    res = svc.submit("alice", x, y)       # x: (n<=16, 3, 32, 32)
+    print(res.status, res.loss, svc.report())
+"""
+
+from repro.serve.admission import (AdmissionController, ServeStats,
+                                   SessionStats)
+from repro.serve.buckets import (PlanCache, choose_bucket, dummy_batch,
+                                 pad_to_bucket)
+from repro.serve.servable import ServablePersonalizer, Session
+from repro.serve.service import PersonalizationService, StepResult
+
+__all__ = [
+    "PersonalizationService", "StepResult",
+    "ServablePersonalizer", "Session",
+    "AdmissionController", "ServeStats", "SessionStats",
+    "PlanCache", "choose_bucket", "pad_to_bucket", "dummy_batch",
+]

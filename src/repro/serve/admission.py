@@ -1,0 +1,145 @@
+"""Admission control and serving statistics.
+
+The device arena is the scarce resource: every live session's training
+steps replay a memory plan whose packed peak must stay inside that
+session's *share* of the arena.  Admission is therefore a byte-budget
+problem, and the memory planner is the QoS lever — a tenant is admitted
+iff (a) a live-session slot is free and (b)
+:func:`repro.core.compile_plan_under_budget` can pack its bucket plans
+inside ``device_budget_bytes // max_live_sessions``.  Sessions that die
+(or are killed by fault injection) release their reservation immediately,
+so the arena can never leak.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+
+class AdmissionController:
+    """Fixed-share admission: N slots over one device-arena byte budget.
+
+    Equal shares keep the policy deterministic and the compile cache hot
+    (every tenant compiles against the same budget, so plans are shared
+    across the whole fleet); weighted shares would work identically but
+    fragment the cache per weight class.
+    """
+
+    def __init__(self, *, max_live_sessions: int,
+                 device_budget_bytes: int) -> None:
+        if max_live_sessions <= 0:
+            raise ValueError("max_live_sessions must be positive")
+        if device_budget_bytes <= 0:
+            raise ValueError("device_budget_bytes must be positive")
+        self.max_live_sessions = max_live_sessions
+        self.device_budget_bytes = device_budget_bytes
+        self._live: Dict[str, int] = {}     # user -> reserved bytes
+        self.rejections = 0
+
+    @property
+    def arena_share_bytes(self) -> int:
+        return self.device_budget_bytes // self.max_live_sessions
+
+    @property
+    def live(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._live))
+
+    @property
+    def reserved_bytes(self) -> int:
+        return sum(self._live.values())
+
+    def try_admit(self, user: str) -> Optional[int]:
+        """Reserve a slot + share for ``user``; None when the box is full.
+
+        Idempotent for already-live users (their existing share is
+        returned, nothing double-reserved).
+        """
+        existing = self._live.get(user)
+        if existing is not None:
+            return existing
+        if len(self._live) >= self.max_live_sessions:
+            self.rejections += 1
+            return None
+        share = self.arena_share_bytes
+        self._live[user] = share
+        return share
+
+    def release(self, user: str) -> bool:
+        """Return ``user``'s reservation to the pool; False if not live."""
+        return self._live.pop(user, None) is not None
+
+    def report(self) -> Dict[str, Any]:
+        return {
+            "max_live_sessions": self.max_live_sessions,
+            "device_budget_bytes": self.device_budget_bytes,
+            "arena_share_bytes": self.arena_share_bytes,
+            "live_sessions": len(self._live),
+            "reserved_bytes": self.reserved_bytes,
+            "rejections": self.rejections,
+        }
+
+
+@dataclasses.dataclass
+class SessionStats:
+    """Per-tenant QoS counters, updated on every completed step."""
+    user: str
+    arena_share_bytes: int
+    steps: int = 0
+    last_loss: float = float("nan")
+    peak_bytes: int = 0          # max measured HBM high water across steps
+    wall_time_s: float = 0.0     # sum of executor step wall times
+
+    def steps_per_sec(self) -> float:
+        return self.steps / self.wall_time_s if self.wall_time_s > 0 else 0.0
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "user": self.user,
+            "arena_share_bytes": self.arena_share_bytes,
+            "steps": self.steps,
+            "last_loss": self.last_loss,
+            "peak_bytes": self.peak_bytes,
+            "wall_time_s": round(self.wall_time_s, 6),
+            "steps_per_sec": round(self.steps_per_sec(), 3),
+            "within_share": self.peak_bytes <= self.arena_share_bytes,
+        }
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Service-level counters: traffic, queueing, rejection taxonomy."""
+    submitted: int = 0
+    completed: int = 0
+    rejected_admission: int = 0   # no live-session slot free
+    rejected_bucket: int = 0      # batch larger than every bucket
+    rejected_budget: int = 0      # plan cannot pack inside the arena share
+    killed: int = 0               # sessions torn down by fault injection
+    queue_depth_high_water: int = 0
+    deadlocks: int = 0            # drain passes that made no progress
+    sessions: Dict[str, SessionStats] = dataclasses.field(default_factory=dict)
+
+    def session(self, user: str, arena_share_bytes: int) -> SessionStats:
+        s = self.sessions.get(user)
+        if s is None:
+            s = self.sessions[user] = SessionStats(user, arena_share_bytes)
+        return s
+
+    def rejected(self) -> int:
+        return (self.rejected_admission + self.rejected_bucket
+                + self.rejected_budget)
+
+    def report(self) -> Dict[str, Any]:
+        return {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "rejected": self.rejected(),
+            "rejected_admission": self.rejected_admission,
+            "rejected_bucket": self.rejected_bucket,
+            "rejected_budget": self.rejected_budget,
+            "killed": self.killed,
+            "queue_depth_high_water": self.queue_depth_high_water,
+            "deadlocks": self.deadlocks,
+            "sessions": {u: s.as_dict()
+                         for u, s in sorted(self.sessions.items())},
+        }

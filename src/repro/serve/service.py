@@ -1,0 +1,246 @@
+"""The serving request loop: FIFO queue, admission, graceful rejection.
+
+``PersonalizationService`` is the tenant-facing surface.  One call does
+everything: ``submit(user, x, y)`` enqueues a fine-tune request, drains
+the FIFO queue synchronously, and returns that request's
+:class:`StepResult` — status ``ok`` with the loss and QoS numbers, or
+``rejected``/``killed`` with a reason string, never an exception for
+traffic-shaped failures (oversize batch, full box, unpackable budget).
+Benchmark drivers use ``enqueue``/``drain`` directly to build queue depth.
+
+Warm-up (lazy on first enqueue, or explicit via ``warmup()``) compiles one
+plan per bucket and replays it on dummy data, so live traffic never pays
+jit-compile latency.  When ``device_budget_bytes`` is omitted the budget
+is *derived*: share = the largest bucket's packed peak under the service
+config, budget = share x ``max_live_sessions`` — i.e. "exactly enough
+arena for every slot to train the biggest bucket".  Passing a smaller
+budget squeezes tenants: plans re-pack down the swap escalation ladder,
+and sessions whose plans cannot fit are rejected, not overcommitted.
+
+The fault-injection hook (:class:`repro.runtime.fault.FaultInjector`) is
+consulted once per dequeued request — the service's preemption point.  A
+fired kill tears the session down and releases its arena reservation
+before the request is looked at, modelling the OS reclaiming an
+opportunistic on-device training job.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Sequence
+
+import jax
+
+from repro.core import (ArenaBudgetError, MemoryPlanConfig, compile_plan)
+from repro.core.graph import LayerGraph
+from repro.runtime.fault import FaultInjector
+from repro.serve.admission import AdmissionController, ServeStats
+from repro.serve.buckets import (PlanCache, choose_bucket, dummy_batch,
+                                 pad_to_bucket)
+from repro.serve.servable import ServablePersonalizer
+
+
+@dataclasses.dataclass(eq=False)
+class Request:
+    user: str
+    x: jax.Array
+    y: jax.Array
+    result: Optional["StepResult"] = None
+
+
+@dataclasses.dataclass
+class StepResult:
+    """Outcome of one submitted fine-tune request."""
+    user: str
+    status: str                      # "ok" | "rejected" | "killed"
+    reason: str = ""
+    bucket: Optional[int] = None
+    loss: float = float("nan")
+    step: int = 0
+    arena_share_bytes: int = 0
+    peak_bytes: int = 0              # measured HBM high water for this step
+    wall_time_s: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+
+class PersonalizationService:
+    """Multi-tenant personalization over one shared device arena."""
+
+    def __init__(self, graph: LayerGraph, *,
+                 buckets: Sequence[int] = (8, 16),
+                 max_live_sessions: int = 4,
+                 device_budget_bytes: Optional[int] = None,
+                 config: Optional[MemoryPlanConfig] = None,
+                 lr: float = 0.05, momentum: float = 0.9,
+                 injector: Optional[FaultInjector] = None,
+                 seed: int = 0) -> None:
+        if not buckets:
+            raise ValueError("need at least one batch bucket")
+        self.graph = graph
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self.config = config or MemoryPlanConfig()
+        self.servable = ServablePersonalizer(
+            graph, lr=lr, momentum=momentum, seed=seed)
+        self.cache = PlanCache()
+        self.injector = injector
+        self.stats = ServeStats()
+        self.admission: Optional[AdmissionController] = None
+        self._max_live_sessions = max_live_sessions
+        self._device_budget_bytes = device_budget_bytes
+        self._queue: Deque[Request] = deque()
+        self._warm = False
+
+    # -- warm-up ----------------------------------------------------------
+
+    def warmup(self) -> None:
+        """Compile + dummy-replay every bucket; derive the budget if unset.
+
+        Idempotent.  With an explicit ``device_budget_bytes`` this raises
+        :class:`~repro.core.ArenaBudgetError` when even one bucket cannot
+        pack inside a share — a configuration error, unlike per-request
+        budget failures which reject gracefully.
+        """
+        if self._warm:
+            return
+        plans = {}
+        if self._device_budget_bytes is None:
+            probes = {b: compile_plan(self.graph, self.config, batch=b)
+                      for b in self.buckets}
+            share = max(cp.peak_bytes for cp in probes.values())
+            self.admission = AdmissionController(
+                max_live_sessions=self._max_live_sessions,
+                device_budget_bytes=share * self._max_live_sessions)
+            share = self.admission.arena_share_bytes
+            for b, cp in probes.items():
+                self.cache.seed(self.graph, b, self.config, share, cp)
+            plans = probes
+        else:
+            self.admission = AdmissionController(
+                max_live_sessions=self._max_live_sessions,
+                device_budget_bytes=self._device_budget_bytes)
+            share = self.admission.arena_share_bytes
+            for b in self.buckets:
+                plans[b] = self.cache.get_or_compile(
+                    self.graph, self.config, bucket=b,
+                    arena_budget_bytes=share)
+        for b, cp in plans.items():
+            x, y = dummy_batch(self.graph, b)
+            cp.loss_and_grads(self.servable.base_params, x, y)
+        self._warm = True
+
+    # -- the request loop -------------------------------------------------
+
+    def submit(self, user: str, x: jax.Array, y: jax.Array) -> StepResult:
+        """Enqueue one fine-tune request and drain the queue; returns this
+        request's result (earlier queued requests are processed first)."""
+        req = self.enqueue(user, x, y)
+        self.drain()
+        assert req.result is not None
+        return req.result
+
+    def enqueue(self, user: str, x: jax.Array, y: jax.Array) -> Request:
+        self.warmup()
+        req = Request(user, x, y)
+        self._queue.append(req)
+        self.stats.submitted += 1
+        self.stats.queue_depth_high_water = max(
+            self.stats.queue_depth_high_water, len(self._queue))
+        return req
+
+    def drain(self) -> List[StepResult]:
+        """Process the queue FIFO until empty; every request gets exactly
+        one result (progress is guaranteed — nothing is ever requeued)."""
+        out: List[StepResult] = []
+        while self._queue:
+            req = self._queue.popleft()
+            req.result = self._process(req)
+            out.append(req.result)
+        return out
+
+    def end_session(self, user: str) -> bool:
+        """Client is done: free the slot and the arena reservation."""
+        released = self.admission.release(user) if self.admission else False
+        closed = self.servable.close_session(user)
+        return released or closed
+
+    # -- internals --------------------------------------------------------
+
+    def _process(self, req: Request) -> StepResult:
+        user = req.user
+        # Preemption point: the injector models the OS killing an
+        # opportunistic training job.  Reservation and state are released
+        # *before* the request is looked at — nothing leaks.
+        if self.injector is not None \
+                and self.injector.check(f"session:{user}"):
+            released = self.admission.release(user)
+            self.servable.close_session(user)
+            self.stats.killed += 1
+            return StepResult(
+                user=user, status="killed",
+                reason="fault injection"
+                       + (" (arena reservation released)" if released
+                          else " (no reservation held)"))
+        n = int(req.x.shape[0])
+        bucket = choose_bucket(n, self.buckets)
+        if bucket is None:
+            self.stats.rejected_bucket += 1
+            return StepResult(
+                user=user, status="rejected",
+                reason=f"batch of {n} exceeds largest bucket "
+                       f"{self.buckets[-1]}")
+        sess = self.servable.sessions.get(user)
+        if sess is None:
+            share = self.admission.try_admit(user)
+            if share is None:
+                if not self.admission.live:
+                    # a full box with zero live sessions can't drain itself
+                    self.stats.deadlocks += 1
+                self.stats.rejected_admission += 1
+                return StepResult(
+                    user=user, status="rejected",
+                    reason=f"no live-session slot "
+                           f"({self.admission.max_live_sessions} live)")
+            sess = self.servable.open_session(user, share)
+        try:
+            cp = self.cache.get_or_compile(
+                self.graph, self.config, bucket=bucket,
+                arena_budget_bytes=sess.arena_share_bytes)
+        except ArenaBudgetError as e:
+            self.admission.release(user)
+            self.servable.close_session(user)
+            self.stats.rejected_budget += 1
+            return StepResult(
+                user=user, status="rejected",
+                reason=f"bucket {bucket} plan peak {e.best_peak_bytes} "
+                       f"exceeds arena share {e.arena_budget_bytes}")
+        xp, yp, mask = pad_to_bucket(req.x, req.y, bucket)
+        loss, exec_stats = self.servable.train_step(
+            sess, cp, xp, yp, mask=mask)
+        ss = self.stats.session(user, sess.arena_share_bytes)
+        ss.steps += 1
+        ss.last_loss = loss
+        ss.peak_bytes = max(ss.peak_bytes, exec_stats.hbm_high_water)
+        ss.wall_time_s += exec_stats.wall_time_s
+        self.stats.completed += 1
+        return StepResult(
+            user=user, status="ok", bucket=bucket, loss=loss,
+            step=sess.step, arena_share_bytes=sess.arena_share_bytes,
+            peak_bytes=exec_stats.hbm_high_water,
+            wall_time_s=exec_stats.wall_time_s)
+
+    # -- reporting --------------------------------------------------------
+
+    def report(self) -> Dict[str, Any]:
+        rep = {
+            "model": self.graph.name,
+            "buckets": list(self.buckets),
+            "plan_cache": self.cache.report(),
+            "serve": self.stats.report(),
+        }
+        if self.admission is not None:
+            rep["admission"] = self.admission.report()
+        return rep

@@ -1,0 +1,343 @@
+"""Multi-tenant personalization serving: buckets + pad-to-bucket numerics,
+the budget-keyed compile cache, admission control, fault-injection kills
+releasing arena reservations, shared-plan QoS acceptance, and the batched
+LM prefill path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ArenaBudgetError, MemoryPlanConfig, compile_plan,
+                        compile_plan_under_budget)
+from repro.core.exec.layers import init_params, reference_loss_and_grads
+from repro.core.zoo import ZOO
+from repro.runtime.fault import FaultInjector
+from repro.serve import (AdmissionController, PersonalizationService,
+                         PlanCache, ServablePersonalizer, choose_bucket,
+                         dummy_batch, pad_to_bucket)
+
+CFG = MemoryPlanConfig(min_idle_phases=3, min_bytes=1 << 12)
+
+
+# ---------------------------------------------------------------------------
+# Buckets and padding
+# ---------------------------------------------------------------------------
+
+def test_choose_bucket_smallest_fit():
+    assert choose_bucket(1, (8, 16)) == 8
+    assert choose_bucket(8, (16, 8)) == 8      # order-insensitive
+    assert choose_bucket(9, (8, 16)) == 16
+    assert choose_bucket(17, (8, 16)) is None
+    assert choose_bucket(0, (8, 16)) is None
+
+
+def test_pad_to_bucket_shapes_and_mask():
+    g = ZOO["lenet5"]()
+    x, y = dummy_batch(g, 5, seed=0)
+    xp, yp, mask = pad_to_bucket(x, y, 8)
+    assert xp.shape == (8,) + tuple(g.input_shape)
+    assert yp.shape == (8,) + tuple(g.label_shape)
+    assert mask.shape == (8,)
+    np.testing.assert_array_equal(np.asarray(mask), [1, 1, 1, 1, 1, 0, 0, 0])
+    # full batch passes through untouched, no mask
+    x8, y8 = dummy_batch(g, 8, seed=0)
+    xf, yf, mf = pad_to_bucket(x8, y8, 8)
+    assert xf is x8 and yf is y8 and mf is None
+    with pytest.raises(ValueError):
+        pad_to_bucket(x8, y8, 4)
+
+
+@pytest.mark.parametrize("name,n,bucket", [
+    ("lenet5", 5, 8),
+    ("model_b_conv2d", 3, 8),
+])
+def test_padded_bucket_grads_match_unpadded(name, n, bucket):
+    """Masked padded-bucket gradients == unpadded gradients to 1e-4, and
+    both match the jax.grad reference — padding is numerically free."""
+    g = ZOO[name]()
+    params = init_params(g, jax.random.PRNGKey(0))
+    x, y = dummy_batch(g, n, seed=3)
+    cp_n = compile_plan(g, CFG, batch=n)
+    loss_ref, grads_ref = cp_n.loss_and_grads(params, x, y)[:2]
+
+    cp_b = compile_plan(g, CFG, batch=bucket)
+    xp, yp, mask = pad_to_bucket(x, y, bucket)
+    loss_pad, grads_pad, _ = cp_b.loss_and_grads(params, xp, yp, mask=mask)
+
+    np.testing.assert_allclose(float(loss_pad), float(loss_ref),
+                               rtol=1e-4, atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(grads_pad),
+                    jax.tree_util.tree_leaves(grads_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+    # and the masked planned path matches the masked autodiff reference
+    ref_loss, ref_grads = reference_loss_and_grads(g, params, xp, yp,
+                                                   mask=mask)
+    np.testing.assert_allclose(float(loss_pad), float(ref_loss),
+                               rtol=1e-4, atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(grads_pad),
+                    jax.tree_util.tree_leaves(ref_grads)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# The compile cache: full-config keying
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_hit_and_miss_counters():
+    g = ZOO["lenet5"]()
+    cache = PlanCache()
+    cp1 = cache.get_or_compile(g, CFG, bucket=8)
+    cp2 = cache.get_or_compile(g, CFG, bucket=8)
+    assert cp1 is cp2
+    assert (cache.hits, cache.misses) == (1, 1)
+    cache.get_or_compile(g, CFG, bucket=16)
+    assert (cache.hits, cache.misses) == (1, 2)
+    assert len(cache) == 2
+
+
+def test_plan_cache_no_collision_across_configs_or_budgets():
+    """Deliberate collision attempt: same model, same bucket, configs that
+    differ in exactly one QoS-relevant knob must get distinct plans."""
+    g = ZOO["lenet5"]()
+    cache = PlanCache()
+    base = cache.get_or_compile(g, CFG, bucket=8)
+    # different planner knob -> different key, fresh compile
+    other_cfg = cache.get_or_compile(
+        g, MemoryPlanConfig(min_idle_phases=2, min_bytes=1 << 12), bucket=8)
+    assert other_cfg is not base
+    # same config, different arena budget -> different key too: tenants
+    # with different QoS budgets can never share a plan
+    budget = base.peak_bytes + (1 << 20)
+    other_budget = cache.get_or_compile(g, CFG, bucket=8,
+                                        arena_budget_bytes=budget)
+    assert other_budget is not base
+    assert cache.hits == 0 and cache.misses == 3
+    # every distinct MemoryPlanConfig field lands in the key
+    k1 = CFG.cache_key()
+    k2 = MemoryPlanConfig(min_idle_phases=2, min_bytes=1 << 12).cache_key()
+    assert k1 != k2
+    assert len(k1) == len(k2)  # all fields, stable arity
+
+
+def test_compile_plan_under_budget_escalates_and_rejects():
+    g = ZOO["lenet5"]()
+    base = compile_plan(g, MemoryPlanConfig(swap=False), batch=8)
+    # a 90% budget needs the escalation ladder, and the plan must verify
+    cp = compile_plan_under_budget(
+        g, MemoryPlanConfig(), batch=8,
+        arena_budget_bytes=int(base.peak_bytes * 0.9))
+    assert cp.peak_bytes <= int(base.peak_bytes * 0.9)
+    assert cp.verify_report.ok
+    # an impossible budget raises with the best attempt attached
+    with pytest.raises(ArenaBudgetError) as ei:
+        compile_plan_under_budget(g, MemoryPlanConfig(), batch=8,
+                                  arena_budget_bytes=1 << 10)
+    assert ei.value.best_peak_bytes > ei.value.arena_budget_bytes == 1 << 10
+
+
+# ---------------------------------------------------------------------------
+# Admission control
+# ---------------------------------------------------------------------------
+
+def test_admission_slots_shares_release():
+    ac = AdmissionController(max_live_sessions=2,
+                             device_budget_bytes=1000)
+    assert ac.arena_share_bytes == 500
+    assert ac.try_admit("a") == 500
+    assert ac.try_admit("a") == 500          # idempotent, no double booking
+    assert ac.reserved_bytes == 500
+    assert ac.try_admit("b") == 500
+    assert ac.try_admit("c") is None         # full
+    assert ac.rejections == 1
+    assert ac.release("b") and not ac.release("b")
+    assert ac.try_admit("c") == 500          # freed slot reusable
+    assert ac.live == ("a", "c")
+
+
+def test_service_rejects_gracefully_and_recovers():
+    g = ZOO["lenet5"]()
+    svc = PersonalizationService(g, buckets=(8,), max_live_sessions=1,
+                                 config=CFG)
+    r1 = svc.submit("alice", *dummy_batch(g, 8, seed=0))
+    assert r1.ok
+    r2 = svc.submit("bob", *dummy_batch(g, 8, seed=1))
+    assert r2.status == "rejected" and "slot" in r2.reason
+    assert svc.stats.rejected_admission == 1
+    assert svc.stats.deadlocks == 0
+    # ending alice's session frees the slot for bob
+    assert svc.end_session("alice")
+    r3 = svc.submit("bob", *dummy_batch(g, 8, seed=1))
+    assert r3.ok
+
+
+def test_killed_session_releases_arena_reservation():
+    """ISSUE satellite: a session killed mid-queue must release its arena
+    reservation via the runtime/fault.py injection hook."""
+    g = ZOO["lenet5"]()
+    inj = FaultInjector()
+    svc = PersonalizationService(g, buckets=(8,), max_live_sessions=2,
+                                 config=CFG, injector=inj)
+    assert svc.submit("alice", *dummy_batch(g, 8, seed=0)).ok
+    assert svc.submit("bob", *dummy_batch(g, 8, seed=1)).ok
+    reserved = svc.admission.reserved_bytes
+    assert reserved == 2 * svc.admission.arena_share_bytes
+
+    # arm the kill, then queue two requests behind it: the kill fires at
+    # the dequeue of alice's next request, before any step runs
+    inj.arm_kill("session:alice")
+    svc.enqueue("alice", *dummy_batch(g, 8, seed=2))
+    svc.enqueue("carol", *dummy_batch(g, 8, seed=3))
+    results = svc.drain()
+    assert results[0].status == "killed"
+    assert "released" in results[0].reason
+    assert inj.fired == ["session:alice"]
+    # the freed reservation admitted carol within the same drain
+    assert results[1].ok
+    assert svc.admission.reserved_bytes == reserved
+    assert "alice" not in svc.servable.sessions
+    assert svc.stats.killed == 1
+
+
+# ---------------------------------------------------------------------------
+# Shared plans + per-session state
+# ---------------------------------------------------------------------------
+
+def test_sessions_share_base_but_diverge_personally():
+    g = ZOO["lenet5"]()
+    sv = ServablePersonalizer(g, lr=0.02)
+    cp = compile_plan(g, CFG, batch=8)
+    a = sv.open_session("a", cp.peak_bytes)
+    b = sv.open_session("b", cp.peak_bytes)
+    x, y = dummy_batch(g, 8, seed=0)
+    sv.train_step(a, cp, x, y)
+    # a trained, b did not: b still aliases the frozen base tree
+    for owner in sv.trainable_owners:
+        for k, w in sv.base_params[owner].items():
+            assert b.params[owner][k] is w
+            assert not np.allclose(np.asarray(a.params[owner][k]),
+                                   np.asarray(w))
+    assert a.step == 1 and b.step == 0
+    # training drives the loss down through the shared plan
+    losses = [sv.train_step(a, cp, x, y)[0] for _ in range(10)]
+    assert losses[-1] < losses[0]
+
+
+def test_acceptance_eight_sessions_two_buckets():
+    """ISSUE acceptance: 8 concurrent sessions over 2 buckets share
+    compiled plans (hit rate >= 6/8), every admitted session's measured
+    peak stays within its arena share, and the replayed schedules passed
+    repro.core.verify at compile time."""
+    g = ZOO["lenet5"]()
+    svc = PersonalizationService(g, buckets=(8, 16), max_live_sessions=8,
+                                 config=CFG)
+    svc.warmup()
+    for u in range(8):
+        n = 6 if u % 2 else 14
+        res = svc.submit(f"u{u}", *dummy_batch(g, n, seed=u))
+        assert res.ok, res.reason
+        assert res.peak_bytes <= res.arena_share_bytes
+    rep = svc.report()
+    assert rep["serve"]["completed"] == 8
+    # 2 warm-up misses, 8 session first-steps all hit
+    assert rep["plan_cache"]["hits"] >= 6
+    assert rep["plan_cache"]["entries"] == 2
+    assert all(s["within_share"]
+               for s in rep["serve"]["sessions"].values())
+    # every cached plan passed the static verifier before any replay
+    for cp in svc.cache._plans.values():
+        assert cp.verify_report is not None and cp.verify_report.ok
+
+
+def test_tight_budget_squeezes_plans_or_rejects():
+    """The planner is the QoS lever: an explicit budget below the no-swap
+    peak forces smaller plans; an impossible one rejects at warmup."""
+    g = ZOO["lenet5"]()
+    base = compile_plan(g, MemoryPlanConfig(swap=False), batch=8)
+    share = int(base.peak_bytes * 0.9)
+    svc = PersonalizationService(g, buckets=(8,), max_live_sessions=2,
+                                 device_budget_bytes=2 * share, config=CFG)
+    svc.warmup()
+    res = svc.submit("a", *dummy_batch(g, 8, seed=0))
+    assert res.ok
+    assert res.arena_share_bytes == share
+    assert res.peak_bytes <= share
+    with pytest.raises(ArenaBudgetError):
+        PersonalizationService(g, buckets=(8,), max_live_sessions=2,
+                               device_budget_bytes=2 << 10,
+                               config=CFG).warmup()
+
+
+# ---------------------------------------------------------------------------
+# Batched LM prefill
+# ---------------------------------------------------------------------------
+
+def test_lm_prefill_matches_sequential_fill():
+    """One fused prefill forward == S sequential decode steps: same cache,
+    same last-position logits, same continuation."""
+    from repro.configs import ARCHS
+    from repro.models.model import build_model, reduce_config
+
+    cfg = reduce_config(ARCHS["llama3.2-3b"])
+    model = build_model(cfg)
+    assert model.prefill_fn is not None
+    params = model.init(jax.random.PRNGKey(0))
+    b, plen, max_seq = 2, 10, 20
+    prompts = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab, (b, plen), dtype=np.int32))
+
+    seq_state = model.decode_init(b, max_seq)
+    logits_seq = None
+    for t in range(plen):
+        logits_seq, seq_state = model.decode_fn(
+            params, seq_state, prompts[:, t], jnp.full((b,), t, jnp.int32))
+
+    pre_state = model.decode_init(b, max_seq)
+    logits_pre, pre_state = model.prefill_fn(params, pre_state, prompts)
+
+    np.testing.assert_allclose(np.asarray(logits_pre),
+                               np.asarray(logits_seq), rtol=1e-4, atol=1e-4)
+    for key in ("k", "v"):
+        np.testing.assert_allclose(
+            np.asarray(pre_state[key], dtype=np.float32),
+            np.asarray(seq_state[key], dtype=np.float32),
+            rtol=1e-4, atol=1e-4)
+    # both caches continue decoding identically
+    cur = jnp.argmax(logits_pre[:, :cfg.vocab], -1).astype(jnp.int32)
+    pos = jnp.full((b,), plen, jnp.int32)
+    l_seq, _ = model.decode_fn(params, seq_state, cur, pos)
+    l_pre, _ = model.decode_fn(params, pre_state, cur, pos)
+    np.testing.assert_allclose(np.asarray(l_pre), np.asarray(l_seq),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_fn_only_on_kv_cache_families():
+    from repro.configs import ARCHS
+    from repro.models.model import build_model, reduce_config
+
+    assert build_model(reduce_config(ARCHS["phi4-mini-3.8b"])).prefill_fn \
+        is not None
+    # recurrent-state family has no fused prefill: servers fall back to
+    # the sequential token loop
+    ssm = [a for a, c in ARCHS.items() if c.family == "ssm"]
+    if ssm:
+        assert build_model(reduce_config(ARCHS[ssm[0]])).prefill_fn is None
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector mechanics
+# ---------------------------------------------------------------------------
+
+def test_fault_injector_counts_down_and_fires_once():
+    inj = FaultInjector()
+    inj.arm_kill("session:x", after=2)
+    assert not inj.check("session:x")
+    assert not inj.check("session:y")        # unrelated target untouched
+    assert not inj.check("session:x")
+    assert inj.check("session:x")            # third check fires
+    assert not inj.check("session:x")        # one-shot
+    assert inj.fired == ["session:x"]
+    assert inj.armed == ()

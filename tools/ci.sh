@@ -166,11 +166,40 @@ EOF
 # a verifier that never fires would pass gate 1/2 trivially.
 PYTHONPATH=src python tools/mutate_schedule.py
 
+# serving smoke: 2 buckets x 4 users on lenet5 through the multi-tenant
+# PersonalizationService — every request must complete, plans must be
+# shared across tenants (hits >= users - buckets), every session's
+# measured peak must stay inside its arena share, and the queue must
+# never deadlock.
+PYTHONPATH=src python - <<'EOF'
+from repro.core.zoo import ZOO
+from repro.serve import PersonalizationService
+from repro.serve.buckets import dummy_batch
+
+USERS, BUCKETS = 4, (8, 16)
+g = ZOO["lenet5"]()
+svc = PersonalizationService(g, buckets=BUCKETS, max_live_sessions=USERS)
+svc.warmup()
+for u in range(USERS):
+    n = 5 if u % 2 else 12     # both buckets, both padded
+    res = svc.submit(f"u{u}", *dummy_batch(g, n, seed=u))
+    assert res.ok, (u, res.status, res.reason)
+    assert res.peak_bytes <= res.arena_share_bytes, u
+rep = svc.report()
+assert rep["serve"]["completed"] == USERS
+assert rep["serve"]["deadlocks"] == 0, "admission deadlock detected"
+assert rep["plan_cache"]["hits"] >= USERS - len(BUCKETS), rep["plan_cache"]
+assert rep["plan_cache"]["entries"] == len(BUCKETS)
+print(f"serving smoke: {USERS} users over {len(BUCKETS)} buckets, "
+      f"cache={rep['plan_cache']['hits']}h/{rep['plan_cache']['misses']}m, "
+      f"share={rep['admission']['arena_share_bytes']}B, deadlocks=0")
+EOF
+
 # benchmark JSON emission: the swap benches (graph + model path) must keep
 # producing the machine-readable perf-trajectory file, now including the
 # per-planner host-pool fragmentation sweep.
 PYTHONPATH=src python -m benchmarks.run \
-    --only swap_tradeoff,swap_model,host_planner,swap_exec,verify \
+    --only swap_tradeoff,swap_model,host_planner,swap_exec,verify,serve \
     --bench-json results/BENCH_swap.json > /dev/null
 test -s results/BENCH_swap.json
 PYTHONPATH=src python - <<'EOF'
@@ -222,5 +251,22 @@ for r in verify_rows:
     assert r["ops_scanned"] > 0 and r["placements_scanned"] > 0
     assert r["wall_time_s"] >= 0.0
     assert len(r["checks_run"]) >= 6
+# multi-tenant serving rows: N sessions over bucketed traffic, plans
+# shared through the compile cache, aggregate throughput strictly above
+# the per-user-recompile baseline, every session inside its arena share
+serve_rows = [r for r in recs if r["bench"] == "serve"]
+assert serve_rows, "BENCH_swap.json must carry serve rows"
+for r in serve_rows:
+    assert r["sessions"] >= 2 and r["n_buckets"] >= 2, r
+    assert r["cache_hits"] + r["cache_misses"] > 0
+    assert 0.0 <= r["cache_hit_rate"] <= 1.0
+    assert r["cache_hits"] >= r["sessions"] - r["n_buckets"], r
+    assert r["aggregate_steps_per_sec_shared"] > 0
+    assert (r["aggregate_steps_per_sec_shared"]
+            > r["aggregate_steps_per_sec_recompile_baseline"]), \
+        "plan sharing must beat per-user recompiles"
+    assert r["all_sessions_within_share"], r
+    assert r["deadlocks"] == 0
+    assert r["admission"]["arena_share_bytes"] > 0
 EOF
 echo "BENCH_swap.json emitted ($(wc -c < results/BENCH_swap.json) bytes)"
