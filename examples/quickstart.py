@@ -53,6 +53,19 @@ def graph_plan_demo() -> None:
     print(f"verified: ok={v['ok']} checks={','.join(v['checks_run'])} "
           f"ops_scanned={v['ops_scanned']} "
           f"wall={v['wall_time_s'] * 1e3:.1f} ms")
+    # the static dependence analyser rides the same compile (the deps
+    # knob, on by default): happens-before DAG edge counts, the fusion
+    # plan the jit_blocks executor would dispatch, and how much slack
+    # each prefetch has before its consumer
+    d = r["deps"]
+    f = d["fusion"]
+    print(f"deps: edges={d['edges']} "
+          f"prefetch_slack_min={d['min_prefetch_slack_phases']} phases")
+    print(f"fusion plan: {f['n_blocks']} blocks covering "
+          f"{f['fused_computes']}/{f['n_computes']} computes "
+          f"(largest {f['largest_block']}), dispatch_calls="
+          f"{f['dispatch_calls']} vs {f['n_ops']} ops, "
+          f"splits={f['splits']}")
 
 
 def verify_demo() -> None:

@@ -14,10 +14,19 @@ One interpreter, two realisations of its transfer ops:
   ``inflight_high_water`` (achieved double-buffer occupancy) and the
   achieved-overlap fraction against the plan's
   ``peak_inflight_prefetch`` — see :meth:`AsyncDeviceBackend.report`.
+* :class:`JitBlocksBackend` (``"jit_blocks"``) — async transfers plus
+  jit-fused compute dispatch: the static dependence prover
+  (:mod:`repro.core.verify.deps`) partitions the op list into
+  fusion-legal ``Compute`` runs and each run replays as a *single*
+  ``jax.jit`` call, collapsing the per-op Python dispatch loop.
 
-Both backends replay the compiled op list *verbatim*:
-``SwapExecStats.replayed_ops == lowered.ops`` is CI-gated per backend, so
-a backend cannot silently skip or reorder a planned transfer.
+The ``sim`` and ``async`` backends replay the compiled op list
+*verbatim*: ``SwapExecStats.replayed_ops == lowered.ops`` is CI-gated per
+backend, so a backend cannot silently skip or reorder a planned transfer.
+``jit_blocks`` replays a *proven-equivalent permutation* instead — same
+op multiset, every dependence edge preserved — and is admitted only after
+:func:`repro.core.verify.schedules_equivalent` signs off on its fused
+replay stream; CI gates that proof rather than positional equality.
 
 Backends only replay *verified* schedules: a plan-backed schedule that has
 not passed the static verifier (:mod:`repro.core.verify`) is verified on
@@ -37,11 +46,14 @@ lookups go through :func:`get_backend`.
 
 from __future__ import annotations
 
+import dataclasses
 import os
+import weakref
 from typing import Any, Dict, List, Optional, Protocol, Tuple, Union,\
     runtime_checkable
 
 import jax
+import numpy as np
 
 from repro.core.exec.layers import (_needs_deriv, _param_owner,
                                     layer_calc_derivative,
@@ -75,6 +87,141 @@ class ExecutorBackend(Protocol):
                        SwapExecStats]: ...
 
     def report(self) -> Dict[str, Any]: ...
+
+
+class _ComputeEnv:
+    """The ``Compute``-op interpreter, decoupled from the ActivationStore.
+
+    All layer math and backward-state threading (saved contexts, pending
+    derivatives, gradient accumulation) lives here, parameterised over
+    ``get``/``put`` activation accessors.  The per-op backends wire those
+    to the live :class:`ActivationStore` (fencing on read); the
+    ``jit_blocks`` backend wires them to a plain dict so a whole run of
+    phases traces into one XLA computation.  One interpreter, both
+    realisations — the two paths cannot drift apart semantically.
+    """
+
+    def __init__(self, graph: LayerGraph, params, label, mask, *, get, put):
+        self.graph = graph
+        self.params = params
+        self.label = label
+        self.mask = mask
+        self.get = get          # (layer name) -> activation array
+        self.put = put          # (layer name, array) -> None
+        self.ctxs: Dict[str, Any] = {}
+        self.derivs: Dict[str, jax.Array] = {}
+        self.pending_dxs: Dict[str, List[Tuple[str, jax.Array]]] = {}
+        self.pending_cd: Dict[str, Tuple[jax.Array, List[str]]] = {}
+        self.grads: Dict[str, Dict[str, jax.Array]] = {}
+        self.loss_val = None
+
+    def resolve_ctx(self, ctx: Any) -> Any:
+        return tuple(
+            self.get(e[1])
+            if isinstance(e, tuple) and len(e) == 2 and e[0] == "@act"
+            else e
+            for e in ctx
+        )
+
+    def read_names(self, op) -> List[str]:
+        """Activation names this Compute may read — the consumer-fence set
+        (its layer inputs plus its own output, which backward ctxs
+        reference)."""
+        return list(self.graph.layer(op.layer).inputs) + [op.layer]
+
+    def step(self, op) -> None:
+        """Execute one ``Compute`` op (kind "F" / "CG" / "CD")."""
+        graph, params, label, mask = \
+            self.graph, self.params, self.label, self.mask
+        l = graph.layer(op.layer)
+        lname, kind = op.layer, op.kind
+        if kind == "F":
+            if l.kind in LOSS_KINDS:
+                self.loss_val = loss_forward(
+                    l.kind, self.get(l.inputs[0]), label, mask)
+            else:
+                xs = [self.get(i) for i in l.inputs]
+                p = params.get(_param_owner(graph, l))
+                y, ctx = layer_forward(l, xs, p)
+                self.put(lname, y)
+                # keep saved activations by *reference* into the
+                # store, so a swap moves the residual too (same
+                # bytes in a real arena)
+                sym = []
+                for e in ctx:
+                    hit = next(
+                        (i for i, xi in enumerate(xs) if e is xi),
+                        None)
+                    if hit is not None:
+                        sym.append(("@act", l.inputs[hit]))
+                    elif e is y:
+                        sym.append(("@act", lname))
+                    else:
+                        sym.append(e)
+                self.ctxs[lname] = tuple(sym)
+        elif kind == "CG":
+            if l.kind in LOSS_KINDS:
+                pred = l.inputs[0]
+                self.derivs[pred] = loss_derivative(
+                    l.kind, self.get(pred), label, mask)
+            else:
+                dy = self.derivs.pop(lname, None)
+                if dy is not None:
+                    if l.trainable and l.weight_shapes():
+                        p = params.get(_param_owner(graph, l))
+                        g = layer_calc_gradient(
+                            l, self.resolve_ctx(self.ctxs[lname]), dy, p)
+                        owner = _param_owner(graph, l)
+                        if owner in self.grads:
+                            self.grads[owner] = {
+                                k: self.grads[owner][k] + g[k] for k in g}
+                        else:
+                            self.grads[owner] = g
+                    upstream_needed = [
+                        i for i in l.inputs
+                        if i != "__input__" and _needs_deriv(graph, i)
+                    ]
+                    if not upstream_needed:
+                        pass
+                    elif l.kind in WEIGHTED_KINDS:
+                        # A weighted layer's saved input has a F+CG
+                        # lifespan — it is freed (or swapped) right
+                        # after this phase — so its derivative is
+                        # computed here, on the same resident
+                        # context the CG just used, and *published*
+                        # at the adjacent CD phase
+                        # (EO_CD = EO_CG + 1).
+                        p = params.get(_param_owner(graph, l))
+                        dxs = layer_calc_derivative(
+                            l, self.resolve_ctx(self.ctxs[lname]), dy, p)
+                        self.pending_dxs[lname] = [
+                            (inp, dx)
+                            for inp, dx in zip(l.inputs, dxs)
+                            if inp != "__input__"
+                            and inp in upstream_needed
+                        ]
+                    else:
+                        # In-place / pool / view layers have F+CD
+                        # contexts (e.g. max-pool argmax source,
+                        # activation output) — residency and
+                        # prefetches target the CD phase.
+                        self.pending_cd[lname] = (dy, upstream_needed)
+        else:  # CD: compute deferred derivatives, publish D:<inp>
+            dxs_out = self.pending_dxs.pop(lname, [])
+            if lname in self.pending_cd:
+                dy, upstream_needed = self.pending_cd.pop(lname)
+                p = params.get(_param_owner(graph, l))
+                dxs = layer_calc_derivative(
+                    l, self.resolve_ctx(self.ctxs[lname]), dy, p)
+                dxs_out = [
+                    (inp, dx) for inp, dx in zip(l.inputs, dxs)
+                    if inp != "__input__" and inp in upstream_needed
+                ]
+            for inp, dx in dxs_out:
+                if inp in self.derivs:
+                    self.derivs[inp] = self.derivs[inp] + dx
+                else:
+                    self.derivs[inp] = dx
 
 
 class _ReplayBackend:
@@ -131,20 +278,9 @@ class _ReplayBackend:
         store = ActivationStore(ordered, hbm, engine=engine)
         store.device["__input__"] = x
 
-        def resolve_ctx(ctx: Any) -> Any:
-            return tuple(
-                store.get(e[1], stats)
-                if isinstance(e, tuple) and len(e) == 2 and e[0] == "@act"
-                else e
-                for e in ctx
-            )
-
-        ctxs: Dict[str, Any] = {}
-        derivs: Dict[str, jax.Array] = {}
-        pending_dxs: Dict[str, List[Tuple[str, jax.Array]]] = {}
-        pending_cd: Dict[str, Tuple[jax.Array, List[str]]] = {}
-        grads: Dict[str, Dict[str, jax.Array]] = {}
-        loss_val = None
+        env = _ComputeEnv(graph, params, label, mask,
+                          get=lambda n: store.get(n, stats),
+                          put=store.put)
         replayed: List[Any] = []
         inflight = 0
         done_at: Dict[int, int] = {}      # read EO -> prefetched bytes retiring
@@ -168,96 +304,7 @@ class _ReplayBackend:
                         if eo <= op.eo:
                             inflight -= done_at.pop(eo)
                     retired_eo = op.eo
-                l = graph.layer(op.layer)
-                lname, kind = op.layer, op.kind
-                if kind == "F":
-                    if l.kind in LOSS_KINDS:
-                        loss_val = loss_forward(
-                            l.kind, store.get(l.inputs[0], stats), label,
-                            mask)
-                    else:
-                        xs = [store.get(i, stats) for i in l.inputs]
-                        p = params.get(_param_owner(graph, l))
-                        y, ctx = layer_forward(l, xs, p)
-                        store.put(lname, y)
-                        # keep saved activations by *reference* into the
-                        # store, so a swap moves the residual too (same
-                        # bytes in a real arena)
-                        sym = []
-                        for e in ctx:
-                            hit = next(
-                                (i for i, xi in enumerate(xs) if e is xi),
-                                None)
-                            if hit is not None:
-                                sym.append(("@act", l.inputs[hit]))
-                            elif e is y:
-                                sym.append(("@act", lname))
-                            else:
-                                sym.append(e)
-                        ctxs[lname] = tuple(sym)
-                elif kind == "CG":
-                    if l.kind in LOSS_KINDS:
-                        pred = l.inputs[0]
-                        derivs[pred] = loss_derivative(
-                            l.kind, store.get(pred, stats), label, mask)
-                    else:
-                        dy = derivs.pop(lname, None)
-                        if dy is not None:
-                            if l.trainable and l.weight_shapes():
-                                p = params.get(_param_owner(graph, l))
-                                g = layer_calc_gradient(
-                                    l, resolve_ctx(ctxs[lname]), dy, p)
-                                owner = _param_owner(graph, l)
-                                if owner in grads:
-                                    grads[owner] = {k: grads[owner][k] + g[k]
-                                                    for k in g}
-                                else:
-                                    grads[owner] = g
-                            upstream_needed = [
-                                i for i in l.inputs
-                                if i != "__input__" and _needs_deriv(graph, i)
-                            ]
-                            if not upstream_needed:
-                                pass
-                            elif l.kind in WEIGHTED_KINDS:
-                                # A weighted layer's saved input has a F+CG
-                                # lifespan — it is freed (or swapped) right
-                                # after this phase — so its derivative is
-                                # computed here, on the same resident
-                                # context the CG just used, and *published*
-                                # at the adjacent CD phase
-                                # (EO_CD = EO_CG + 1).
-                                p = params.get(_param_owner(graph, l))
-                                dxs = layer_calc_derivative(
-                                    l, resolve_ctx(ctxs[lname]), dy, p)
-                                pending_dxs[lname] = [
-                                    (inp, dx)
-                                    for inp, dx in zip(l.inputs, dxs)
-                                    if inp != "__input__"
-                                    and inp in upstream_needed
-                                ]
-                            else:
-                                # In-place / pool / view layers have F+CD
-                                # contexts (e.g. max-pool argmax source,
-                                # activation output) — residency and
-                                # prefetches target the CD phase.
-                                pending_cd[lname] = (dy, upstream_needed)
-                else:  # CD: compute deferred derivatives, publish D:<inp>
-                    dxs_out = pending_dxs.pop(lname, [])
-                    if lname in pending_cd:
-                        dy, upstream_needed = pending_cd.pop(lname)
-                        p = params.get(_param_owner(graph, l))
-                        dxs = layer_calc_derivative(
-                            l, resolve_ctx(ctxs[lname]), dy, p)
-                        dxs_out = [
-                            (inp, dx) for inp, dx in zip(l.inputs, dxs)
-                            if inp != "__input__" and inp in upstream_needed
-                        ]
-                    for inp, dx in dxs_out:
-                        if inp in derivs:
-                            derivs[inp] = derivs[inp] + dx
-                        else:
-                            derivs[inp] = dx
+                env.step(op)
                 replayed.append(op)
             elif isinstance(op, SwapOut):
                 if op.tensor in store.alive:
@@ -276,6 +323,7 @@ class _ReplayBackend:
         stats.hbm_high_water = hbm.high_water
         stats.host_high_water = store.host_pool.high_water
         stats.replayed_ops = tuple(replayed)
+        stats.dispatch_calls = len(replayed)
         self._finalize_stats(stats, engine)
         self._last_stats = stats
         self._planned_inflight = schedule.peak_inflight_prefetch
@@ -291,7 +339,7 @@ class _ReplayBackend:
                     f"swap executor exceeded the packed host pool: "
                     f"{stats.host_high_water} > {stats.planned_host_pool} "
                     f"bytes")
-        return loss_val, grads, stats
+        return env.loss_val, env.grads, stats
 
     def _finalize_stats(self, stats: SwapExecStats,
                         engine: TransferEngine) -> None:
@@ -315,6 +363,8 @@ class _ReplayBackend:
             "peak_inflight_prefetch": s.peak_inflight_prefetch,
             "planned_peak_inflight_prefetch": self._planned_inflight,
             "sanitizer_checks": s.sanitizer_checks,
+            "dispatch_calls": s.dispatch_calls,
+            "replayed_op_count": len(s.replayed_ops),
             "wall_time_s": s.wall_time_s,
         }
 
@@ -383,10 +433,338 @@ class AsyncDeviceBackend(_ReplayBackend):
         return out
 
 
+# ---------------------------------------------------------------------------
+# jit_blocks: dispatch proven-fusable Compute runs as single XLA calls
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _ArraySlot:
+    """Skeleton placeholder for one array leaf of a flattened state."""
+
+    index: int
+
+
+def _flatten_state(obj, leaves: List[Any]):
+    """Split a nested interpreter state into (skeleton, array leaves).
+
+    ``jax.tree_util`` cannot flatten this state — saved ctx tuples mix
+    arrays with strings, shape tuples and ``("@act", name)`` references —
+    so these walkers treat arrays (and tracers) as leaves and everything
+    else as static skeleton.  The skeleton contains no arrays, so two
+    skeletons compare with ``==`` safely (the jit-cache validity check)."""
+    if isinstance(obj, (jax.Array, np.ndarray)) or hasattr(obj, "aval"):
+        leaves.append(obj)
+        return _ArraySlot(len(leaves) - 1)
+    if isinstance(obj, dict):
+        return {k: _flatten_state(v, leaves) for k, v in obj.items()}
+    if isinstance(obj, tuple):
+        return tuple(_flatten_state(v, leaves) for v in obj)
+    if isinstance(obj, list):
+        return [_flatten_state(v, leaves) for v in obj]
+    return obj
+
+
+def _unflatten_state(skel, leaves: List[Any]):
+    if isinstance(skel, _ArraySlot):
+        return leaves[skel.index]
+    if isinstance(skel, dict):
+        return {k: _unflatten_state(v, leaves) for k, v in skel.items()}
+    if isinstance(skel, tuple):
+        return tuple(_unflatten_state(v, leaves) for v in skel)
+    if isinstance(skel, list):
+        return [_unflatten_state(v, leaves) for v in skel]
+    return skel
+
+
+# Jitted block functions, keyed weakly by the lowered schedule (same
+# lifetime discipline as the verifier's _VERIFIED registry): entry ->
+# {(block index, mask is None): (jitted fn, input skeleton, out cell)}.
+_FUSED_FN_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _make_block_fn(graph: LayerGraph, ops: Tuple[Any, ...],
+                   compute_indices: Tuple[int, ...], in_skel,
+                   out_cell: List[Any]):
+    """Build the pure function tracing one fused block.
+
+    Takes the flattened input state (device dict + backward state +
+    params/label/mask), replays the block's ``Compute`` ops through
+    :class:`_ComputeEnv` against a plain dict, and returns the flattened
+    *delta*: newly produced device/ctx entries plus the whole (small)
+    backward-state dicts.  The output skeleton is captured into
+    ``out_cell`` at trace time."""
+
+    def fn(leaves):
+        state = _unflatten_state(in_skel, leaves)
+        device = dict(state["device"])
+        env = _ComputeEnv(graph, state["params"], state["label"],
+                          state["mask"],
+                          get=device.__getitem__, put=device.__setitem__)
+        env.ctxs = dict(state["ctxs"])
+        env.derivs = dict(state["derivs"])
+        env.pending_dxs = dict(state["pending_dxs"])
+        env.pending_cd = dict(state["pending_cd"])
+        env.grads = dict(state["grads"])
+        env.loss_val = state["loss"]
+        before_dev, before_ctx = set(state["device"]), set(state["ctxs"])
+        for ci in compute_indices:
+            env.step(ops[ci])
+        out = {
+            "device": {k: v for k, v in device.items()
+                       if k not in before_dev},
+            "ctxs": {k: v for k, v in env.ctxs.items()
+                     if k not in before_ctx},
+            "derivs": env.derivs,
+            "pending_dxs": env.pending_dxs,
+            "pending_cd": env.pending_cd,
+            "grads": env.grads,
+            "loss": env.loss_val,
+        }
+        out_leaves: List[Any] = []
+        out_cell.append(_flatten_state(out, out_leaves))
+        return out_leaves
+
+    return fn
+
+
+class JitBlocksBackend(AsyncDeviceBackend):
+    """Dispatch each proven-fusable Compute run as one jitted XLA call.
+
+    On large graphs the per-op Python dispatch loop is the async
+    backend's bottleneck and drowns the achieved-overlap measurement in
+    interpreter noise (ROADMAP "Jit-fused compute dispatch").  This
+    backend asks the static dependence prover
+    (:mod:`repro.core.verify.deps`) for a :class:`FusionPlan` — maximal
+    ``Compute`` runs crossing no transfer fence, no ``Free``-reuse hazard
+    and no in-place-prefetch window — and replays each block as a single
+    ``jax.jit`` call, giving every DMA a long XLA dispatch window to hide
+    behind.
+
+    Admission is strictly *prove-then-run*: beyond the base verifier
+    gate, the fusion plan must pass :func:`verify_fusion` and the fused
+    replay stream must pass :func:`schedules_equivalent` against the
+    verified original — the backend never executes an op order the
+    dependence DAG did not license.  Transfers and the ops between blocks
+    stay eager (issue points unchanged), consumer fences run at block
+    entry for every tensor the block reads, and the sanitizer
+    cross-checks residency at block boundaries (op granularity inside a
+    traced block does not exist at run time).  Jitted block functions are
+    cached per lowered schedule (weak, like the verifier registry), so
+    iteration 2+ pays one Python dispatch per block."""
+
+    name = "jit_blocks"
+
+    def run(self, graph: LayerGraph, params, x, label, *,
+            schedule: OffloadSchedule,
+            ordered: Optional[OrderedTensors] = None,
+            plan=None, lowered=None, mask=None):
+        import time as _time
+
+        from repro.core.plan import (Compute, Free, Prefetch, SwapOut,
+                                     lower_schedule)
+        from repro.core.verify import (ScheduleVerificationError,
+                                       StaticResidencyModel, is_verified,
+                                       mark_verified, plan_fusion,
+                                       replay_stream, schedules_equivalent,
+                                       verify_fusion, verify_schedule)
+        if ordered is None:
+            ordered = compute_execution_order(graph, int(x.shape[0]))
+        if lowered is None:
+            lowered = lower_schedule(ordered, schedule, plan)
+        if plan is not None and not is_verified(lowered):
+            verify_schedule(ordered, schedule, plan,
+                            lowered).raise_if_errors()
+            mark_verified(lowered)
+        # fusion admission: plan the blocks, re-prove them legal, and
+        # prove the fused replay stream preserves every dependence edge
+        # of the verified original — only then may a block dispatch
+        fusion = plan_fusion(lowered, ordered, plan)
+        fdiags = tuple(d for d in verify_fusion(fusion, lowered, ordered,
+                                                plan)
+                       if d.severity == "error")
+        if fdiags:
+            raise ScheduleVerificationError(fdiags)
+        fused_stream = replay_stream(lowered, fusion)
+        schedules_equivalent(lowered, fused_stream, ordered=ordered,
+                             plan=plan).raise_if_errors()
+        self._last_fusion = fusion
+
+        sanitizer = StaticResidencyModel(ordered) if self.sanitize else None
+        t_run0 = _time.perf_counter()
+        stats = SwapExecStats(backend=self.name)
+        stats.inplace_prefetches = sum(
+            1 for d in schedule.decisions if d.inplace)
+        engine = self.make_engine()
+        hbm = HbmTracker()
+        store = ActivationStore(ordered, hbm, engine=engine)
+        store.device["__input__"] = x
+        env = _ComputeEnv(graph, params, label, mask,
+                          get=lambda n: store.get(n, stats),
+                          put=store.put)
+        ops = lowered.ops
+        block_at: Dict[int, Any] = {min(b.op_indices): b
+                                    for b in fusion.blocks}
+        covered = {i for b in fusion.blocks for i in b.op_indices}
+        cache = _FUSED_FN_CACHE.setdefault(lowered, {})
+
+        replayed: List[Any] = []
+        inflight = 0
+        done_at: Dict[int, int] = {}
+        retired_eo = -1
+
+        def sanitize_step(op, op_index: int, *, cross: bool) -> None:
+            if sanitizer is None:
+                return
+            sanitizer.step(op)
+            if cross:
+                sanitizer.cross_check(store.alive, op_index)
+            stats.sanitizer_checks += 1
+
+        for op_index, op in enumerate(ops):
+            block = block_at.get(op_index)
+            if block is not None:
+                # retire double-buffer slots up to the block's last phase
+                last_eo = ops[block.compute_indices[-1]].eo
+                if last_eo > retired_eo:
+                    for eo in list(done_at):
+                        if eo <= last_eo:
+                            inflight -= done_at.pop(eo)
+                    retired_eo = last_eo
+                self._exec_block(block, ops, graph, store, env, stats,
+                                 params, label, mask, cache)
+                stats.dispatch_calls += 1
+                for ci in block.compute_indices:
+                    replayed.append(ops[ci])
+                    sanitize_step(ops[ci], ci, cross=False)
+                for fi in block.free_indices:
+                    store.free_owner(ops[fi].tensor)
+                    replayed.append(ops[fi])
+                    sanitize_step(ops[fi], fi,
+                                  cross=fi == block.free_indices[-1])
+                if sanitizer is not None and not block.free_indices:
+                    sanitizer.cross_check(store.alive,
+                                          block.compute_indices[-1])
+                continue
+            if op_index in covered:
+                continue        # replayed as part of its block
+            if isinstance(op, Prefetch):
+                if op.tensor in store.alive:
+                    continue
+                store.swap_in(op.tensor, stats)
+                inflight += op.nbytes
+                done_at[op.read_eo] = done_at.get(op.read_eo, 0) + op.nbytes
+                stats.peak_inflight_prefetch = max(
+                    stats.peak_inflight_prefetch, inflight)
+                replayed.append(op)
+                stats.dispatch_calls += 1
+            elif isinstance(op, Compute):
+                if op.eo > retired_eo:
+                    for eo in list(done_at):
+                        if eo <= op.eo:
+                            inflight -= done_at.pop(eo)
+                    retired_eo = op.eo
+                env.step(op)
+                replayed.append(op)
+                stats.dispatch_calls += 1
+            elif isinstance(op, SwapOut):
+                if op.tensor not in store.alive:
+                    continue
+                store.swap_out(op.tensor, stats)
+                replayed.append(op)
+                stats.dispatch_calls += 1
+            elif isinstance(op, Free):
+                store.free_owner(op.tensor)
+                replayed.append(op)
+                stats.dispatch_calls += 1
+            sanitize_step(op, op_index, cross=True)
+
+        engine.drain(stats)
+        stats.wall_time_s = _time.perf_counter() - t_run0
+        stats.hbm_high_water = hbm.high_water
+        stats.host_high_water = store.host_pool.high_water
+        stats.replayed_ops = tuple(replayed)
+        self._finalize_stats(stats, engine)
+        self._last_stats = stats
+        self._planned_inflight = schedule.peak_inflight_prefetch
+        if plan is not None:
+            stats.planned_peak = plan.activation_residency_peak()
+            stats.planned_host_pool = plan.host_pool_bytes
+            if stats.hbm_high_water > stats.planned_peak:
+                raise AssertionError(
+                    f"swap executor exceeded the planned residency peak: "
+                    f"{stats.hbm_high_water} > {stats.planned_peak} bytes")
+            if stats.host_high_water > stats.planned_host_pool:
+                raise AssertionError(
+                    f"swap executor exceeded the packed host pool: "
+                    f"{stats.host_high_water} > {stats.planned_host_pool} "
+                    f"bytes")
+        return env.loss_val, env.grads, stats
+
+    def _exec_block(self, block, ops, graph, store, env, stats,
+                    params, label, mask, cache) -> None:
+        """Fence the block's inputs, then dispatch it as one jitted call
+        and fold the produced state back into the live store."""
+        # consumer fences: every tensor the block reads must have its
+        # in-flight DMA fenced before the traced computation touches the
+        # bytes.  Device-resident names only: read_names over-approximates
+        # (a CG/CD lists all layer inputs even when its planned read is a
+        # later phase), and fencing a host-resident name would late-swap
+        # it in ahead of its scheduled Prefetch.  The verifier's
+        # use_before_resident pass proves every tensor a block compute
+        # actually reads was prefetched before the block (blocks contain
+        # no transfers), i.e. is already in store.device here.
+        for ci in block.compute_indices:
+            for name in env.read_names(ops[ci]):
+                if name in store.device:
+                    store.get(name, stats)
+        state = {
+            "device": dict(store.device),
+            "ctxs": env.ctxs,
+            "derivs": env.derivs,
+            "pending_dxs": env.pending_dxs,
+            "pending_cd": env.pending_cd,
+            "grads": env.grads,
+            "loss": env.loss_val,
+            "params": params,
+            "label": label,
+            "mask": mask,
+        }
+        leaves: List[Any] = []
+        in_skel = _flatten_state(state, leaves)
+        cache_key = (block.index, mask is None)
+        entry = cache.get(cache_key)
+        if entry is None or entry[1] != in_skel:
+            out_cell: List[Any] = []
+            fn = jax.jit(_make_block_fn(graph, ops,
+                                        block.compute_indices, in_skel,
+                                        out_cell))
+            entry = (fn, in_skel, out_cell)
+            cache[cache_key] = entry
+        fn, _, out_cell = entry
+        out_leaves = fn(leaves)
+        out = _unflatten_state(out_cell[-1], list(out_leaves))
+        for k, v in out["device"].items():
+            store.put(k, v)
+        env.ctxs.update(out["ctxs"])
+        env.derivs = out["derivs"]
+        env.pending_dxs = out["pending_dxs"]
+        env.pending_cd = out["pending_cd"]
+        env.grads = out["grads"]
+        env.loss_val = out["loss"]
+
+    def report(self) -> Dict[str, Any]:
+        out = super().report()
+        fusion = getattr(self, "_last_fusion", None)
+        if fusion is not None:
+            out["fusion"] = fusion.summary()
+        return out
+
+
 # Registry: MemoryPlanConfig.executor values -> backend factories.
 BACKENDS = {
     SimulatedBackend.name: SimulatedBackend,
     AsyncDeviceBackend.name: AsyncDeviceBackend,
+    JitBlocksBackend.name: JitBlocksBackend,
 }
 
 

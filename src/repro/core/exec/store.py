@@ -46,8 +46,14 @@ class SwapExecStats:
     planned_host_pool: Optional[int] = None  # packed host arena bound
     peak_inflight_prefetch: int = 0      # double-buffer occupancy peak
     # the ops actually executed, in order — equals the compiled
-    # ExecutionSchedule.ops exactly when no schedule miss occurred
+    # ExecutionSchedule.ops exactly when no schedule miss occurred (the
+    # jit_blocks backend replays a proven-equivalent *fused* permutation
+    # instead: computes of a block, then its deferred frees)
     replayed_ops: Tuple = ()
+    # Python-level dispatches issued while replaying: one per op on the
+    # per-op backends, one per fused block (plus one per unfused op) on
+    # jit_blocks — the denominator of the dispatch-reduction claim
+    dispatch_calls: int = 0
     # ---- backend-specific fields (defaults describe the simulated path) ----
     backend: str = "sim"
     # async engine: peak bytes issued on the device stream but not yet

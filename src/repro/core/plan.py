@@ -77,13 +77,21 @@ knob (default)          meaning
 ``executor``            executor backend replaying the lowered schedule:
 (``"sim"``)             sim (synchronous, deterministic stats) | async
                         (real ``jax.device_put`` device-stream transfers,
-                        fenced at the consumer, overlap measured)
+                        fenced at the consumer, overlap measured) |
+                        jit_blocks (async transfers plus proven-fusable
+                        Compute runs dispatched as single ``jax.jit``
+                        calls)
 ``verify``              static verification of the lowered schedule
 (``"error"``)           (``repro.core.verify``): "error" raises
                         ``ScheduleVerificationError`` on any violated
                         invariant, "warn" downgrades to warnings, "off"
                         skips (the report is folded into
                         ``report()["verify"]`` either way)
+``deps`` (True)         static dependence analysis of the lowered schedule
+                        (``repro.core.verify.deps``): build the happens-
+                        before DAG, plan legal compute fusion and measure
+                        per-transfer slack; summary lands in
+                        ``report()["deps"]`` (False skips the analysis)
 ======================  =====================================================
 
 Static verification
@@ -145,16 +153,26 @@ class MemoryPlanConfig:
                          packed peak
     ``executor``         backend replaying the lowered ExecutionSchedule:
                          "sim" (synchronous replay, bit-for-bit stats,
-                         the default) or "async" (transfers issued as real
+                         the default), "async" (transfers issued as real
                          ``jax.device_put`` copies against the device's
                          host memory space, dispatched ahead of need and
                          fenced at the consumer; achieved overlap
-                         reported).  See ``repro.core.exec.backends``.
+                         reported) or "jit_blocks" (async transfers plus
+                         proven-fusable Compute runs dispatched as single
+                         ``jax.jit`` calls; admission through
+                         ``schedules_equivalent``).  See
+                         ``repro.core.exec.backends``.
     ``verify``           static schedule verification policy: "error"
                          (default — raise ScheduleVerificationError on any
                          violated memory-safety invariant), "warn"
                          (downgrade findings to warnings), "off" (skip).
                          See ``repro.core.verify``.
+    ``deps``             run the static dependence analyser over the
+                         lowered schedule (default True): dependence-DAG
+                         edge counts, the fusion plan the jit_blocks
+                         backend would execute, and per-transfer prefetch
+                         slack, folded into ``report()["deps"]``.  See
+                         ``repro.core.verify.deps``.
 
     Remat / offload knobs (model-config path — the joint planner):
 
@@ -189,6 +207,7 @@ class MemoryPlanConfig:
     cooptimize: bool = True
     executor: str = "sim"
     verify: str = "error"
+    deps: bool = True
 
     remat: Optional[bool] = None
     remat_budget_bytes: Optional[int] = None
@@ -397,6 +416,12 @@ class CompiledMemoryPlan:
     # config.verify == "off"
     verify_report: Any = None
 
+    # what the static dependence analyser measured over the lowered
+    # schedule (repro.core.verify.deps): DAG edge counts, the fusion plan
+    # the jit_blocks backend would execute, per-transfer prefetch slack;
+    # None when config.deps is False or there is no lowered schedule
+    deps_report: Optional[Dict[str, Any]] = None
+
     # ------------------------------------------------------------- queries
     @property
     def peak_bytes(self) -> int:
@@ -548,6 +573,8 @@ class CompiledMemoryPlan:
                 out["exec"] = dict(self.exec_report)
         if self.verify_report is not None:
             out["verify"] = self.verify_report.summary()
+        if self.deps_report is not None:
+            out["deps"] = dict(self.deps_report)
         if self.coopt is not None:
             out["coopt_rounds"] = self.coopt.rounds
             out["coopt_dropped"] = list(self.coopt.dropped)
@@ -634,7 +661,16 @@ def _apply_verify(cp: CompiledMemoryPlan) -> CompiledMemoryPlan:
     :class:`repro.core.verify.ScheduleVerificationError` on any error
     diagnostic, ``"warn"`` downgrades them to :class:`UserWarning`,
     ``"off"`` skips entirely.  A clean run marks the lowered schedule as
-    verified so executor backends admit it without re-checking."""
+    verified so executor backends admit it without re-checking.
+
+    The static dependence analyser (``config.deps``) rides the same hook:
+    its summary — DAG edge counts, the fusion plan the jit_blocks backend
+    would execute, per-transfer prefetch slack — lands in
+    ``cp.deps_report`` (and ``report()["deps"]``) regardless of the
+    verify policy."""
+    if cp.config.deps and cp.lowered is not None:
+        from repro.core.verify import deps_summary
+        cp.deps_report = deps_summary(cp.lowered, cp.ordered, cp.plan)
     if cp.config.verify == "off":
         return cp
     from repro.core import verify as _verify

@@ -1,45 +1,20 @@
-"""Static plan verifier: prove memory-safety of a lowered ExecutionSchedule.
+"""The memory-safety checker passes of :mod:`repro.core.verify`.
 
 The stack's central claim — proactive swapping cuts peak memory *without
 sacrificing correctness* — rests on every planner/allocator/lowering
 combination emitting a sound schedule.  Until now that soundness was only
-sampled at run time (grads vs ``jax.grad``, high-water assertions); this
-module proves it *before any op executes*, the way On-Device Training
+sampled at run time (grads vs ``jax.grad``, high-water assertions); these
+passes prove it *before any op executes*, the way On-Device Training
 Under 256KB Memory proves its compile-time memory contracts.
 
 A registry of independent checker passes (:data:`CHECKS`, mirroring the
 ``PLANNERS``/``BACKENDS`` registries) walks the
 :class:`repro.core.plan.ExecutionSchedule` together with the packed
 :class:`repro.core.planner.Plan` arenas and emits structured
-:class:`Diagnostic` records.  The passes and the check ids they emit:
-
-======================  =====================================================
-registry pass           invariant proven (check ids emitted)
-======================  =====================================================
-``use_before_resident`` every access of a planned ``X:`` tensor is covered
-                        by its producing phase or a completed ``Prefetch`` —
-                        the static analogue of the async backend's consumer
-                        fence (``use_before_resident``)
-``transfer_race``       no ``Prefetch`` is issued before its ``SwapOut``
-                        retired, no two host slots overlap while both swap
-                        windows are live, and no prefetch target overlaps a
-                        still-resident tensor's device bytes
-                        (``transfer_race``)
-``arena_alias``         interval-overlap sweep over the device arena *and*
-                        the host pool, plus op<->placement offset
-                        consistency — subsumes ``Plan.validate()``
-                        (``arena_alias``)
-``heap``                every ``SwapOut``/``Free`` pairs with a live
-                        residency and all heap bytes are freed by schedule
-                        end (``double_free``, ``leak``)
-``budget``              the high-water of the statically simulated offsets
-                        stays within the packed ``peak_bytes`` /
-                        ``host_pool_bytes`` and every offset is
-                        ALIGN-aligned (``budget``, ``alignment``)
-``inplace_prefetch``    an in-place prefetch moves no data (no DMA ops) and
-                        no conflicting writer touched its bytes in the
-                        vacated window (``inplace_prefetch``)
-======================  =====================================================
+:class:`Diagnostic` records.  The authoritative check-id table lives in
+the package docstring (:mod:`repro.core.verify`); the dependence /
+fusion-legality prover is :mod:`repro.core.verify.deps`, which joins the
+registry as the ``deps`` pass from the package ``__init__``.
 
 Entry points: :func:`verify_plan` (a :class:`CompiledMemoryPlan`, either
 path), :func:`verify_schedule` (raw graph-path pieces).  ``compile_plan``
@@ -112,6 +87,10 @@ class VerifyReport:
     ops_scanned: int
     placements_scanned: int
     wall_time_s: float
+    # per-pass wall time (check id -> seconds), recorded on BOTH entry
+    # points so the cost of each pass — notably the O(T^2) deps sweep —
+    # is visible in report()["verify"] / BENCH_swap.json
+    check_seconds: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def ok(self) -> bool:
@@ -143,6 +122,7 @@ class VerifyReport:
             "ops_scanned": self.ops_scanned,
             "placements_scanned": self.placements_scanned,
             "wall_time_s": self.wall_time_s,
+            "check_wall_time_s": dict(self.check_seconds),
         }
         if self.diagnostics:
             out["diagnostics"] = [dataclasses.asdict(d)
@@ -694,6 +674,7 @@ def verify_schedule(ordered: OrderedTensors, schedule, plan, lowered, *,
     ctx = CheckContext.build(ordered, schedule, plan, lowered)
     names = tuple(checks) if checks is not None else tuple(CHECKS)
     diags: List[Diagnostic] = []
+    check_seconds: Dict[str, float] = {}
     for name in names:
         try:
             checker = CHECKS[name]
@@ -701,7 +682,9 @@ def verify_schedule(ordered: OrderedTensors, schedule, plan, lowered, *,
             raise ValueError(
                 f"unknown verifier check {name!r}: choose from "
                 f"{', '.join(sorted(CHECKS))}") from None
+        t_pass = time.perf_counter()
         diags.extend(checker(ctx))
+        check_seconds[name] = time.perf_counter() - t_pass
     placements = 0
     if ctx.device_plan is not None:
         placements += len(ctx.device_plan.placements)
@@ -710,7 +693,8 @@ def verify_schedule(ordered: OrderedTensors, schedule, plan, lowered, *,
     return VerifyReport(
         diagnostics=tuple(diags), checks_run=names,
         ops_scanned=len(ctx.ops), placements_scanned=placements,
-        wall_time_s=time.perf_counter() - t0)
+        wall_time_s=time.perf_counter() - t0,
+        check_seconds=check_seconds)
 
 
 def verify_model_plan(cp) -> VerifyReport:
@@ -729,10 +713,11 @@ def verify_model_plan(cp) -> VerifyReport:
             f"kept intermediates ({rp.saved_bytes_per_layer} B/layer) "
             f"exceed the per-layer HBM budget ({budget} B)",
             offsets=(rp.saved_bytes_per_layer, budget)))
+    dt = time.perf_counter() - t0
     return VerifyReport(
         diagnostics=tuple(diags), checks_run=("budget",),
         ops_scanned=0, placements_scanned=0,
-        wall_time_s=time.perf_counter() - t0)
+        wall_time_s=dt, check_seconds={"budget": dt})
 
 
 def verify_plan(cp, *, checks: Optional[Iterable[str]] = None

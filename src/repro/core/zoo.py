@@ -312,6 +312,34 @@ def tacotron2_decoder(time_steps: int = 8, mel_dim: int = 80,
               unroll={"lstm0": time_steps, "lstm1": time_steps})
 
 
+def transformer_mlp_stack(n_layers: int = 28, d_model: int = 3072,
+                          d_ff: int = 8192) -> LayerGraph:
+    """The llama3.2-3b MLP trunk as a layer graph: 28 x (up-proj 3072->8192,
+    activation, down-proj 8192->3072), MSE head.
+
+    The dependence analyser's scaling benchmark: per-op Python dispatch
+    costs grow with the 3N phase count (28 layers -> hundreds of lowered
+    ops) while the fusion prover should collapse the op list into a few
+    dozen jit blocks.  Not in the ZOO dict — attention/GQA are absent, so
+    it is a dispatch-count workload, not an accuracy workload."""
+    layers: List[LayerNode] = []
+    prev = "__input__"
+    for i in range(n_layers):
+        up, down = f"l{i}_up", f"l{i}_down"
+        layers += [
+            LayerNode(up, "linear", [prev],
+                      {"in_features": d_model, "out_features": d_ff,
+                       "bias": False, "activation": "relu"}),
+            LayerNode(down, "linear", [up],
+                      {"in_features": d_ff, "out_features": d_model,
+                       "bias": False}),
+        ]
+        prev = down
+    layers.append(LayerNode("loss", "loss_mse", [prev]))
+    return _g(layers, (d_model,), (d_model,),
+              f"transformer_mlp_stack_{n_layers}l")
+
+
 ZOO = {
     "linear": single_linear,
     "conv2d": single_conv2d,

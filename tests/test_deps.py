@@ -1,0 +1,473 @@
+"""Static dependence analysis + fusion-legality prover (repro.core.verify.deps).
+
+The provers' contract, exercised from both sides:
+
+* soundness — random *dependence-preserving* permutations of a lowered
+  schedule are accepted by ``schedules_equivalent``; breaking any single
+  edge (adjacent swap against the DAG) is rejected with that edge's
+  check id; op-stream multiset drift is ``dep_stream``;
+* fusion — ``plan_fusion`` blocks are structurally well-formed, cross no
+  transfer fence, and their ``replay_stream`` is proven equivalent on
+  every zoo model; ``verify_fusion`` independently rejects forged plans
+  (fence / hazard / peak);
+* the consumer — the ``jit_blocks`` backend matches whole-graph
+  ``jax.grad`` to the paper's 1e-4 gate on every zoo model while
+  dispatching strictly fewer Python-level calls than ops, and its
+  replayed stream is the proven permutation, sanitizer-clean;
+* plumbing — ``report()["deps"]``, per-check wall time on both verify
+  paths, per-transfer slack, and the dispatch-reduction floor on the
+  llama3.2-3b MLP trunk.
+"""
+
+import random
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.plan import (Compute, ExecutionSchedule, MemoryPlanConfig,
+                             Prefetch, SwapOut, compile_plan)
+from repro.core.verify import (CHECKS, FusedBlock, FusionPlan,
+                               ScheduleVerificationError,
+                               build_dependence_graph, check_deps,
+                               plan_fusion, replay_stream,
+                               schedules_equivalent, transfer_slack,
+                               verify_fusion)
+from repro.core.zoo import ZOO, transformer_mlp_stack
+
+DEPS_CFG = MemoryPlanConfig(planner="bestfit", host_planner="segregated",
+                            min_idle_phases=3, min_bytes=1 << 12,
+                            cooptimize=False)
+
+_HEAVY = {"vgg16", "resnet18"}
+ZOO_CASES = [
+    pytest.param(name, marks=pytest.mark.slow) if name in _HEAVY
+    else name
+    for name in sorted(ZOO)
+]
+
+
+def _shrink(graph):
+    for l in graph.layers:
+        if l.attrs.get("in_features") == 150528:
+            l.attrs["in_features"] = 96
+    if graph.input_shape == (150528,):
+        object.__setattr__(graph, "input_shape", (96,))
+    from repro.core.graph import infer_shapes
+    infer_shapes(graph)
+    return graph
+
+
+def _batch_for(g, batch=2):
+    kx, ky = jax.random.split(jax.random.PRNGKey(1))
+    if any(l.kind == "embedding" for l in g.layers):
+        x = jax.random.randint(kx, (batch,) + tuple(g.input_shape), 0, 50)
+    else:
+        x = jax.random.normal(kx, (batch,) + tuple(g.input_shape))
+    y = jax.random.normal(ky, (batch,) + tuple(g.label_shape))
+    if g.layers[-1].kind == "loss_ce":
+        y = jax.nn.one_hot(jnp.argmax(y, -1), y.shape[-1])
+    return x, y
+
+
+@pytest.fixture(scope="module")
+def lenet_cp():
+    cp = compile_plan(ZOO["lenet5"](), DEPS_CFG, batch=8)
+    assert cp.lowered.transfers(), "reference plan must move data"
+    return cp
+
+
+# ---------------------------------------------------------------------------
+# Dependence graph construction
+# ---------------------------------------------------------------------------
+
+def test_graph_covers_all_edge_families(lenet_cp):
+    g = build_dependence_graph(lenet_cp.lowered, lenet_cp.ordered,
+                               lenet_cp.plan)
+    counts = g.edge_counts()
+    assert counts["data"] > 0 and counts["fence"] > 0 and counts["reuse"] > 0
+    assert len(g.ops) == len(lenet_cp.lowered.ops)
+    # every edge is within bounds and non-reflexive
+    for e in g.edges:
+        assert 0 <= e.src < len(g.ops) and 0 <= e.dst < len(g.ops)
+        assert e.src != e.dst
+
+
+def test_clean_schedule_is_its_own_linear_extension(lenet_cp):
+    g = build_dependence_graph(lenet_cp.lowered, lenet_cp.ordered,
+                               lenet_cp.plan)
+    assert g.check_order(lenet_cp.lowered.ops) == []
+    rep = schedules_equivalent(lenet_cp.lowered, lenet_cp.lowered,
+                               ordered=lenet_cp.ordered, plan=lenet_cp.plan)
+    assert rep.ok and rep.checks_run == ("deps",)
+    assert rep.check_seconds["deps"] >= 0.0
+
+
+def test_check_deps_registered():
+    assert CHECKS["deps"] is check_deps
+
+
+def _topo_permutations(ops, edges, rng, n):
+    """Random linear extensions of the dependence DAG (Kahn + shuffle)."""
+    succ = {}
+    indeg = [0] * len(ops)
+    for e in edges:
+        succ.setdefault(e.src, []).append(e.dst)
+        indeg[e.dst] += 1
+    out = []
+    for _ in range(n):
+        deg = list(indeg)
+        ready = [i for i, d in enumerate(deg) if d == 0]
+        order = []
+        while ready:
+            i = ready.pop(rng.randrange(len(ready)))
+            order.append(i)
+            for j in succ.get(i, ()):
+                deg[j] -= 1
+                if deg[j] == 0:
+                    ready.append(j)
+        assert len(order) == len(ops), "dependence DAG has a cycle"
+        out.append(tuple(ops[i] for i in order))
+    return out
+
+
+def test_dependence_preserving_permutations_accepted(lenet_cp):
+    g = build_dependence_graph(lenet_cp.lowered, lenet_cp.ordered,
+                               lenet_cp.plan)
+    rng = random.Random(0)
+    perms = _topo_permutations(g.ops, g.edges, rng, 10)
+    assert any(p != lenet_cp.lowered.ops for p in perms), \
+        "sampler only produced the identity order"
+    for p in perms:
+        rep = schedules_equivalent(lenet_cp.lowered, p,
+                                   ordered=lenet_cp.ordered,
+                                   plan=lenet_cp.plan)
+        assert rep.ok, [d.render() for d in rep.errors()]
+
+
+def test_edge_breaking_swaps_rejected(lenet_cp):
+    """Inverting any sampled dependence edge must fail with its check id."""
+    g = build_dependence_graph(lenet_cp.lowered, lenet_cp.ordered,
+                               lenet_cp.plan)
+    ops = list(lenet_cp.lowered.ops)
+    rng = random.Random(1)
+    sampled = rng.sample(list(g.edges), min(12, len(g.edges)))
+    tried = 0
+    for e in sampled:
+        # move the edge's source to just after its destination
+        mutated = list(ops)
+        src_op = mutated.pop(e.src)
+        dst_pos = mutated.index(g.ops[e.dst])
+        mutated.insert(dst_pos + 1, src_op)
+        if tuple(mutated) == tuple(ops):
+            continue
+        tried += 1
+        rep = schedules_equivalent(lenet_cp.lowered, tuple(mutated),
+                                   ordered=lenet_cp.ordered,
+                                   plan=lenet_cp.plan)
+        assert not rep.ok, e
+        assert e.check in rep.check_ids(), (e, sorted(rep.check_ids()))
+    assert tried >= 8
+
+
+def test_dropped_and_invented_ops_are_dep_stream(lenet_cp):
+    ops = lenet_cp.lowered.ops
+    dropped = ops[:-1]
+    rep = schedules_equivalent(lenet_cp.lowered, dropped,
+                               ordered=lenet_cp.ordered, plan=lenet_cp.plan)
+    assert not rep.ok and "dep_stream" in rep.check_ids()
+    duplicated = ops + (ops[-1],)
+    rep = schedules_equivalent(lenet_cp.lowered, duplicated,
+                               ordered=lenet_cp.ordered, plan=lenet_cp.plan)
+    assert not rep.ok and "dep_stream" in rep.check_ids()
+
+
+def test_equivalence_without_plan_context(lenet_cp):
+    """The prover degrades gracefully with no plan: data+fence edges only."""
+    rep = schedules_equivalent(lenet_cp.lowered, lenet_cp.lowered)
+    assert rep.ok
+    swapped = list(lenet_cp.lowered.ops)
+    pf = next(i for i, o in enumerate(swapped) if isinstance(o, Prefetch))
+    c = next(i for i, o in enumerate(swapped)
+             if isinstance(o, Compute) and o.eo == swapped[pf].read_eo)
+    swapped.insert(pf, swapped.pop(c))
+    rep = schedules_equivalent(lenet_cp.lowered, tuple(swapped))
+    assert not rep.ok and "dep_transfer_fence" in rep.check_ids()
+
+
+# ---------------------------------------------------------------------------
+# Mutation-harness contracts (tools/mutate_schedule.py)
+# ---------------------------------------------------------------------------
+
+def _tools():
+    import pathlib
+    import sys
+    tools = pathlib.Path(__file__).resolve().parent.parent / "tools"
+    if str(tools) not in sys.path:
+        sys.path.insert(0, str(tools))
+    import mutate_schedule
+    return mutate_schedule
+
+
+def test_mutation_hoist_compute_fires_fence(lenet_cp):
+    from repro.core.verify import verify_schedule
+    m = _tools()
+    forged = ExecutionSchedule(
+        ops=m.mutate_hoist_compute(lenet_cp.lowered.ops))
+    rep = verify_schedule(lenet_cp.ordered, lenet_cp.schedule,
+                          lenet_cp.plan, forged)
+    assert not rep.ok and "dep_transfer_fence" in rep.check_ids()
+
+
+def test_mutation_drop_dep_edge_fires_dep_edge(lenet_cp):
+    from repro.core.verify import verify_schedule
+    m = _tools()
+    forged = ExecutionSchedule(
+        ops=m.mutate_drop_dep_edge(lenet_cp.lowered.ops))
+    rep = verify_schedule(lenet_cp.ordered, lenet_cp.schedule,
+                          lenet_cp.plan, forged)
+    assert not rep.ok and "dep_edge" in rep.check_ids()
+
+
+def test_mutation_fuse_across_swap_fires_fusion_fence(lenet_cp):
+    m = _tools()
+    fusion = m.forge_illegal_fusion(lenet_cp)
+    diags = verify_fusion(fusion, lenet_cp.lowered, lenet_cp.ordered,
+                          lenet_cp.plan)
+    assert any(d.check == "fusion_fence" and d.severity == "error"
+               for d in diags)
+
+
+# ---------------------------------------------------------------------------
+# Fusion planning + independent re-proof
+# ---------------------------------------------------------------------------
+
+def test_fusion_plan_structure(lenet_cp):
+    ops = lenet_cp.lowered.ops
+    fp = plan_fusion(lenet_cp.lowered, lenet_cp.ordered, lenet_cp.plan)
+    seen = set()
+    for b in fp.blocks:
+        assert len(b.compute_indices) >= 2          # min_block
+        assert set(b.op_indices) \
+            == set(b.compute_indices) | set(b.free_indices)
+        assert not seen & set(b.op_indices), "blocks must be disjoint"
+        seen |= set(b.op_indices)
+        for i in b.compute_indices:
+            assert isinstance(ops[i], Compute)
+        # no transfer inside the block span
+        lo, hi = b.span()
+        assert not any(isinstance(ops[i], (SwapOut, Prefetch))
+                       for i in range(lo, hi + 1)), b
+    s = fp.summary()
+    assert s["dispatch_calls"] == fp.dispatch_calls() < len(ops)
+    assert s["fused_computes"] == fp.fused_computes() <= s["n_computes"]
+
+
+@pytest.mark.parametrize("name", ZOO_CASES)
+def test_fusion_replay_equivalent_on_zoo(name):
+    g = _shrink(ZOO[name]())
+    cp = compile_plan(g, DEPS_CFG, batch=2)
+    fp = plan_fusion(cp.lowered, cp.ordered, cp.plan)
+    assert not any(d.severity == "error"
+                   for d in verify_fusion(fp, cp.lowered, cp.ordered,
+                                          cp.plan))
+    stream = replay_stream(cp.lowered, fp)
+    assert Counter(stream) == Counter(cp.lowered.ops)
+    rep = schedules_equivalent(cp.lowered, stream, ordered=cp.ordered,
+                               plan=cp.plan)
+    assert rep.ok, (name, [d.render() for d in rep.errors()])
+
+
+def test_verify_fusion_rejects_foreign_op_and_peak(lenet_cp):
+    ops = lenet_cp.lowered.ops
+    # a block spanning a non-member Free is a hazard
+    fi = next(i for i, o in enumerate(ops)
+              if type(o).__name__ == "Free"
+              and isinstance(ops[i - 1], Compute)
+              and isinstance(ops[i + 1], Compute))
+    block = FusedBlock(index=0, op_indices=(fi - 1, fi + 1),
+                       compute_indices=(fi - 1, fi + 1), free_indices=())
+    fp = FusionPlan(blocks=(block,), n_ops=len(ops),
+                    n_computes=sum(isinstance(o, Compute) for o in ops),
+                    fence_splits=0, hazard_splits=0, inplace_splits=0,
+                    peak_splits=0)
+    diags = verify_fusion(fp, lenet_cp.lowered, lenet_cp.ordered,
+                          lenet_cp.plan)
+    assert any(d.check == "fusion_hazard" for d in diags)
+    # an impossible residency bound flags the legitimate plan too
+    good = plan_fusion(lenet_cp.lowered, lenet_cp.ordered, lenet_cp.plan)
+    diags = verify_fusion(good, lenet_cp.lowered, lenet_cp.ordered,
+                          lenet_cp.plan, peak_bytes=1)
+    assert any(d.check == "fusion_peak" for d in diags)
+
+
+def test_transfer_slack_shape(lenet_cp):
+    s = transfer_slack(lenet_cp.lowered)
+    assert s["transfers"], "reference plan must have prefetches"
+    for t in s["transfers"].values():
+        assert t["slack_phases"] == t["read_eo"] - t["prefetch_eo"] >= 0
+        assert t["window_computes"] >= 0
+    assert s["min_prefetch_slack_phases"] >= 0
+    assert (s["mean_prefetch_slack_phases"]
+            >= s["min_prefetch_slack_phases"])
+
+
+# ---------------------------------------------------------------------------
+# The first consumer: the jit_blocks executor backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ZOO_CASES)
+def test_jit_blocks_matches_jax_grad_on_zoo(name):
+    from repro.core.exec.layers import reference_loss_and_grads
+    g = _shrink(ZOO[name]())
+    batch = 2
+    cp = compile_plan(g, dataclasses_replace_executor(DEPS_CFG,
+                                                      "jit_blocks"),
+                      batch=batch)
+    params = cp.init_params(jax.random.PRNGKey(0))
+    x, y = _batch_for(g, batch)
+    loss_r, grads_r = reference_loss_and_grads(g, params, x, y)
+    loss, grads, stats = cp.loss_and_grads(params, x, y)
+    np.testing.assert_allclose(float(loss), float(loss_r), rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(grads),
+                    jax.tree_util.tree_leaves(grads_r)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+    # proven-equivalent permutation, strictly fewer dispatches than ops
+    assert Counter(stats.replayed_ops) == Counter(cp.lowered.ops)
+    schedules_equivalent(cp.lowered, stats.replayed_ops,
+                         ordered=cp.ordered,
+                         plan=cp.plan).raise_if_errors()
+    assert stats.dispatch_calls < len(cp.lowered.ops), name
+    assert stats.late_swap_ins == 0
+    assert stats.hbm_high_water <= stats.planned_peak
+
+
+def dataclasses_replace_executor(cfg, executor):
+    import dataclasses
+    return dataclasses.replace(cfg, executor=executor)
+
+
+def test_jit_blocks_replayed_stream_is_the_plans(lenet_cp):
+    """The replayed op stream IS replay_stream(plan_fusion(...)) — the
+    executor executes exactly the permutation the prover licensed."""
+    from repro.core.exec import get_backend
+    g = ZOO["lenet5"]()
+    cp = compile_plan(g, dataclasses_replace_executor(DEPS_CFG,
+                                                      "jit_blocks"),
+                      batch=8)
+    params = cp.init_params(jax.random.PRNGKey(0))
+    x, y = _batch_for(g, 8)
+    _, _, stats = cp.loss_and_grads(params, x, y)
+    fp = plan_fusion(cp.lowered, cp.ordered, cp.plan)
+    assert stats.replayed_ops == replay_stream(cp.lowered, fp)
+
+
+def test_jit_blocks_sanitizer_clean():
+    from repro.core.exec.backends import JitBlocksBackend
+    g = ZOO["lenet5"]()
+    cp = compile_plan(g, DEPS_CFG, batch=8)
+    params = cp.init_params(jax.random.PRNGKey(0))
+    x, y = _batch_for(g, 8)
+    be = JitBlocksBackend(sanitize=True)
+    _, _, stats = be.run(g, params, x, y, schedule=cp.schedule,
+                         ordered=cp.ordered, plan=cp.plan,
+                         lowered=cp.lowered)
+    assert stats.sanitizer_checks == len(cp.lowered.ops)
+    rep = be.report()
+    assert rep["fusion"]["dispatch_calls"] == stats.dispatch_calls
+
+
+def test_jit_blocks_iterates_through_fn_cache():
+    g = ZOO["lenet5"]()
+    cp = compile_plan(g, dataclasses_replace_executor(DEPS_CFG,
+                                                      "jit_blocks"),
+                      batch=8)
+    params = cp.init_params(jax.random.PRNGKey(0))
+    x, y = _batch_for(g, 8)
+    l1, g1, s1 = cp.loss_and_grads(params, x, y)
+    l2, g2, s2 = cp.loss_and_grads(params, x, y)
+    assert float(l1) == float(l2)
+    assert s1.dispatch_calls == s2.dispatch_calls
+    for a, b in zip(jax.tree_util.tree_leaves(g1),
+                    jax.tree_util.tree_leaves(g2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_jit_blocks_refuses_unprovable_fusion(lenet_cp, monkeypatch):
+    """If the fused stream fails the equivalence proof, admission raises
+    before any op executes."""
+    from repro.core.exec import backends as B
+    g = ZOO["lenet5"]()
+    cp = compile_plan(g, DEPS_CFG, batch=8)
+    params = cp.init_params(jax.random.PRNGKey(0))
+    x, y = _batch_for(g, 8)
+    m = _tools()
+    monkeypatch.setattr("repro.core.verify.plan_fusion",
+                        lambda *a, **k: m.forge_illegal_fusion(cp))
+    be = B.JitBlocksBackend()
+    with pytest.raises(ScheduleVerificationError):
+        be.run(g, params, x, y, schedule=cp.schedule, ordered=cp.ordered,
+               plan=cp.plan, lowered=cp.lowered)
+
+
+# ---------------------------------------------------------------------------
+# Plumbing: report()["deps"], per-check timing, the llama floor
+# ---------------------------------------------------------------------------
+
+def test_deps_report_in_plan_report(lenet_cp):
+    r = lenet_cp.report()
+    d = r["deps"]
+    assert d["n_ops"] == len(lenet_cp.lowered.ops)
+    assert set(d["edges"]) == {"data", "fence", "reuse"}
+    assert d["fusion"]["dispatch_calls"] < d["n_ops"]
+    assert d["min_prefetch_slack_phases"] >= 0
+
+
+def test_deps_knob_off_skips_analysis():
+    import dataclasses
+    cp = compile_plan(ZOO["lenet5"](),
+                      dataclasses.replace(DEPS_CFG, deps=False), batch=8)
+    assert cp.deps_report is None
+    assert "deps" not in cp.report()
+
+
+def test_per_check_wall_time_graph_path(lenet_cp):
+    v = lenet_cp.report()["verify"]
+    assert set(v["check_wall_time_s"]) == set(v["checks_run"])
+    assert "deps" in v["check_wall_time_s"]
+    assert all(t >= 0.0 for t in v["check_wall_time_s"].values())
+
+
+def test_per_check_wall_time_model_path():
+    from repro.configs import ARCHS
+    cp = compile_plan(ARCHS["llama3.2-3b"],
+                      MemoryPlanConfig(remat=True,
+                                       remat_budget_bytes=1 << 20),
+                      batch_tokens=512)
+    v = cp.report()["verify"]
+    assert v["check_wall_time_s"] == {"budget": v["wall_time_s"]}
+
+
+def test_llama_mlp_stack_dispatch_reduction():
+    """Acceptance floor: the proven fusion plan cuts Python-level dispatch
+    calls >= 5x vs per-op dispatch on the llama3.2-3b MLP trunk."""
+    g = transformer_mlp_stack()
+    cp = compile_plan(
+        g, MemoryPlanConfig(planner="bestfit", host_planner="segregated",
+                            min_idle_phases=6, min_bytes=1 << 20,
+                            cooptimize=False, hbm_budget_bytes=6 << 20),
+        batch=32)
+    assert cp.lowered.transfers(), "the trunk plan must move data"
+    d = cp.deps_report
+    reduction = d["n_ops"] / d["fusion"]["dispatch_calls"]
+    assert reduction >= 5.0, reduction
+    fp = plan_fusion(cp.lowered, cp.ordered, cp.plan)
+    assert not any(x.severity == "error"
+                   for x in verify_fusion(fp, cp.lowered, cp.ordered,
+                                          cp.plan))
+    rep = schedules_equivalent(cp.lowered, replay_stream(cp.lowered, fp),
+                               ordered=cp.ordered, plan=cp.plan)
+    assert rep.ok

@@ -366,11 +366,12 @@ def test_planner_cross_product_verifies_clean_on_lenet5(planner,
 def test_verify_report_summary_shape():
     report = VerifyReport(diagnostics=(), checks_run=("heap",),
                           ops_scanned=3, placements_scanned=2,
-                          wall_time_s=0.01)
+                          wall_time_s=0.01, check_seconds={"heap": 0.01})
     s = report.summary()
     assert s == {"ok": True, "errors": 0, "warnings": 0,
                  "checks_run": ["heap"], "ops_scanned": 3,
-                 "placements_scanned": 2, "wall_time_s": 0.01}
+                 "placements_scanned": 2, "wall_time_s": 0.01,
+                 "check_wall_time_s": {"heap": 0.01}}
 
 
 def test_warnings_do_not_fail_a_report():

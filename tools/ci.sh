@@ -17,6 +17,11 @@ else
     echo "ruff not installed; skipping lint gate" >&2
 fi
 
+# invariant lint: AST rules ruff cannot express — no src/ call site may
+# reach a backend's run() without verify admission, and no src/ module may
+# import the deprecated repro.core re-exports or the planned_exec shim.
+python tools/lint_invariants.py
+
 python -m pytest -q -m "not slow" "$@"
 
 # compile_plan smoke: the facade must take a zoo model from graph to a
@@ -68,13 +73,16 @@ for hp in ("sorting", "bestfit", "segregated", "buddy"):
           f"host_hw={stats.host_high_water} "
           f"inplace={cp.inplace_prefetch_count}")
 
-# executor-backend gate: BOTH registered backends (sim synchronous replay,
-# async real device-stream transfers) must replay the lowered op list
-# verbatim, agree on transfer accounting, and match jax.grad; the async
-# backend must report its achieved overlap vs the planned
-# peak_inflight_prefetch.
+# executor-backend gate: EVERY registered backend must execute the
+# compiled plan end-to-end, agree on transfer accounting, and match
+# jax.grad.  Replay semantics are per-backend: sim/async replay the op
+# list verbatim; jit_blocks replays a proven-equivalent fused permutation
+# (same multiset, every dependence edge preserved — schedules_equivalent
+# gates it) with strictly fewer Python-level dispatch calls than ops.
+from collections import Counter
 from repro.core.exec import BACKENDS
 from repro.core.exec.layers import reference_loss_and_grads
+from repro.core.verify import schedules_equivalent
 import numpy as np
 
 _, grads_ref = reference_loss_and_grads(g, params, x, y)
@@ -85,8 +93,18 @@ for ex in sorted(BACKENDS):
                       batch=8)
     _, grads, stats = cp.loss_and_grads(params, x, y)
     assert stats.backend == ex
-    assert stats.replayed_ops == cp.lowered.ops, \
-        f"executor={ex}: replay diverged from compiled schedule"
+    if ex == "jit_blocks":
+        assert Counter(stats.replayed_ops) == Counter(cp.lowered.ops), \
+            "executor=jit_blocks: replayed op multiset diverged"
+        schedules_equivalent(cp.lowered, stats.replayed_ops,
+                             ordered=cp.ordered,
+                             plan=cp.plan).raise_if_errors()
+        assert stats.dispatch_calls < len(cp.lowered.ops), \
+            "jit_blocks must fuse at least one block"
+    else:
+        assert stats.replayed_ops == cp.lowered.ops, \
+            f"executor={ex}: replay diverged from compiled schedule"
+        assert stats.dispatch_calls == len(stats.replayed_ops), ex
     assert stats.late_swap_ins == 0, ex
     assert stats.host_high_water <= cp.host_pool_bytes, ex
     for a, b in zip(jax.tree_util.tree_leaves(grads),
@@ -102,11 +120,15 @@ for ex in sorted(BACKENDS):
         extra = (f" overlap={stats.achieved_overlap:.2f}"
                  f" inflight_hw={stats.inflight_high_water}"
                  f"/{cp.schedule.peak_inflight_prefetch}")
+    if ex == "jit_blocks":
+        extra = f" dispatch={stats.dispatch_calls}/{len(cp.lowered.ops)}"
     print(f"backend gate lenet5/{ex}: dma={stats.dma_bytes} "
           f"swaps={stats.swap_outs}/{stats.prefetches}{extra}")
-assert per_backend["sim"].dma_bytes == per_backend["async"].dma_bytes
-assert per_backend["sim"].host_high_water \
-    == per_backend["async"].host_high_water
+# all backends executed the same schedule: identical transfer accounting
+for ex in sorted(set(BACKENDS) - {"sim"}):
+    assert per_backend["sim"].dma_bytes == per_backend[ex].dma_bytes, ex
+    assert per_backend["sim"].host_high_water \
+        == per_backend[ex].host_high_water, ex
 
 # model-config joint-plan smoke: a tight budget must force evictions down
 # both priced lanes, and the plan's DMA traffic must be visible end-to-end.
@@ -199,7 +221,7 @@ EOF
 # producing the machine-readable perf-trajectory file, now including the
 # per-planner host-pool fragmentation sweep.
 PYTHONPATH=src python -m benchmarks.run \
-    --only swap_tradeoff,swap_model,host_planner,swap_exec,verify,serve \
+    --only swap_tradeoff,swap_model,host_planner,swap_exec,verify,fusion,serve \
     --bench-json results/BENCH_swap.json > /dev/null
 test -s results/BENCH_swap.json
 PYTHONPATH=src python - <<'EOF'
@@ -219,14 +241,25 @@ assert all("host_utilization" in r and "legacy_host_bytes" in r
 # pack-every-copy bytes somewhere in the sweep
 assert any(r["host_pool_bytes"] < r["legacy_host_bytes"]
            for r in host_rows if r["host_planner"] in ("segregated", "buddy"))
-# executor overlap rows: every registered backend ran end-to-end, replayed
-# the compiled op list verbatim, and the async rows carry the measured
+# executor overlap rows: every registered backend ran end-to-end with its
+# own replay semantics honoured (verbatim for sim/async, proven-equivalent
+# fused permutation for jit_blocks), and the async rows carry the measured
 # overlap (achieved fraction, in-flight high water, DMA bytes)
 exec_rows = [r for r in recs if r["bench"] == "swap_exec"]
 assert exec_rows, "BENCH_swap.json must carry swap_exec rows"
-assert {r["executor"] for r in exec_rows} == {"sim", "async"}
+assert {r["executor"] for r in exec_rows} == {"sim", "async", "jit_blocks"}
 assert all(r["replay_matches_compiled"] for r in exec_rows)
 assert all(r["late_swap_ins"] == 0 for r in exec_rows)
+for r in exec_rows:
+    assert r["dispatch_calls"] > 0 and r["schedule_op_count"] > 0, r
+    if r["executor"] == "jit_blocks":
+        # the whole point: fewer Python-level dispatches than ops
+        assert r["replay_equivalent_modulo_fusion"], r
+        assert r["dispatch_calls"] < r["schedule_op_count"], r
+    else:
+        assert r["dispatch_calls"] == r["schedule_op_count"], r
+    # the compile-time dependence analysis rides every graph-path row
+    assert "deps" in r and r["deps"]["fusion"]["n_blocks"] >= 1, r
 async_rows = [r for r in exec_rows if r["executor"] == "async"]
 overlapped = [r for r in async_rows if r["prefetches"] > 0]
 assert overlapped, "at least one async row must issue real transfers"
@@ -250,7 +283,24 @@ for r in verify_rows:
     assert r["ok"] and r["errors"] == 0, r
     assert r["ops_scanned"] > 0 and r["placements_scanned"] > 0
     assert r["wall_time_s"] >= 0.0
-    assert len(r["checks_run"]) >= 6
+    assert len(r["checks_run"]) >= 7
+    # per-check wall time: every registered pass accounts its own cost,
+    # including the dependence prover
+    assert set(r["check_wall_time_s"]) == set(r["checks_run"]), r
+    assert "deps" in r["check_wall_time_s"], r
+    assert all(t >= 0.0 for t in r["check_wall_time_s"].values()), r
+# fusion-prover scaling row: on the llama3.2-3b MLP trunk the proven
+# fusion plan must cut Python-level dispatch calls >= 5x vs per-op
+# dispatch, with the fused stream proven dependence-equivalent and the
+# plan re-proven legal by verify_fusion
+fusion_rows = [r for r in recs if r["bench"] == "fusion"]
+assert fusion_rows, "BENCH_swap.json must carry the fusion row"
+for r in fusion_rows:
+    assert r["dispatch_reduction"] >= 5.0, r["dispatch_reduction"]
+    assert r["replay_equivalent"] and r["fusion_legal"], r
+    assert r["fused_dispatch_calls"] < r["per_op_dispatch_calls"], r
+    assert r["deps"]["fusion"]["splits"]["fence"] >= 1, \
+        "the fusion bench must exercise real transfer fences"
 # multi-tenant serving rows: N sessions over bucketed traffic, plans
 # shared through the compile cache, aggregate throughput strictly above
 # the per-user-recompile baseline, every session inside its arena share

@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""AST lint for repo invariants ruff cannot express.
+
+Two rules, both over every ``.py`` file under ``src/``:
+
+admission
+    No src/ code path may call an executor backend's ``run`` entry
+    (recognised as ``<anything>.run(..., schedule=...)`` — the
+    ``ExecutorBackend`` signature) outside the admitted call sites
+    (``repro.core.plan`` routing through ``_apply_verify`` and
+    ``repro.core.exec.backends`` itself, whose ``run`` performs the
+    verify admission).  A new call site would bypass the static
+    verifier: schedules must be proven before they reach a device
+    stream.  The admitted modules are additionally required to still
+    contain the ``is_verified`` admission tripwire, so deleting the
+    admission block fails the lint rather than silently unguarding
+    every call site.
+
+deprecated-import
+    No src/ module may import the deprecated ``repro.core``
+    package-level re-exports (the ``_DEPRECATED`` table in
+    ``repro/core/__init__.py`` — read from its AST, so the rule tracks
+    the table) or anything from the ``repro.core.planned_exec``
+    compatibility shim.  The shims exist for *external* callers; code
+    inside src/ must import from the real modules.
+
+Run as a script: prints one ``path:line: [rule] message`` per finding
+and exits non-zero on any.  Wired into ``tools/ci.sh`` beside ruff.
+"""
+
+import ast
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+CORE_INIT = SRC / "repro" / "core" / "__init__.py"
+SHIM_MODULE = "repro.core.planned_exec"
+
+# modules whose backend-run call sites are admission-checked (relative
+# to src/) -> the admission token each must still contain: backends.py
+# gates run() on is_verified; plan.py marks schedules verified through
+# _apply_verify before any run
+RUN_ALLOWLIST = {
+    "repro/core/plan.py": "mark_verified",
+    "repro/core/exec/backends.py": "is_verified",
+}
+# modules allowed to mention the shim / deprecated table (the shims
+# themselves and the package __init__ that hosts the table)
+SHIM_ALLOWLIST = {
+    "repro/core/__init__.py",
+    "repro/core/planned_exec.py",
+}
+
+
+def deprecated_names() -> set:
+    """Keys of repro.core._DEPRECATED, read from the AST (no import)."""
+    tree = ast.parse(CORE_INIT.read_text(), filename=str(CORE_INIT))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "_DEPRECATED" \
+                        and isinstance(node.value, ast.Dict):
+                    return {k.value for k in node.value.keys
+                            if isinstance(k, ast.Constant)}
+    raise AssertionError(f"_DEPRECATED table not found in {CORE_INIT}")
+
+
+def lint_file(path: Path, rel: str, deprecated: set) -> list:
+    findings = []
+    tree = ast.parse(path.read_text(), filename=str(path))
+    for node in ast.walk(tree):
+        # ---- admission: <expr>.run(..., schedule=...) -----------------
+        if isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "run" \
+                and any(kw.arg == "schedule" for kw in node.keywords):
+            if rel not in RUN_ALLOWLIST:
+                findings.append((
+                    node.lineno, "admission",
+                    "backend .run(schedule=...) outside the admitted call "
+                    "sites — route through compile_plan(...).loss_and_grads"
+                    " so the schedule passes verify admission"))
+        # ---- deprecated-import ----------------------------------------
+        if isinstance(node, ast.ImportFrom) and rel not in SHIM_ALLOWLIST:
+            mod = node.module or ""
+            if mod == SHIM_MODULE:
+                findings.append((
+                    node.lineno, "deprecated-import",
+                    f"import from the {SHIM_MODULE} shim — import from "
+                    f"repro.core.exec instead"))
+            elif mod == "repro.core":
+                bad = sorted({a.name for a in node.names} & deprecated)
+                if bad:
+                    findings.append((
+                        node.lineno, "deprecated-import",
+                        f"deprecated repro.core re-export(s) "
+                        f"{', '.join(bad)} — import from the real module "
+                        f"(see repro.core._DEPRECATED)"))
+        if isinstance(node, ast.Import) and rel not in SHIM_ALLOWLIST:
+            for a in node.names:
+                if a.name == SHIM_MODULE:
+                    findings.append((
+                        node.lineno, "deprecated-import",
+                        f"import of the {SHIM_MODULE} shim — import from "
+                        f"repro.core.exec instead"))
+    return findings
+
+
+def main() -> int:
+    deprecated = deprecated_names()
+    n = 0
+    files = sorted(SRC.rglob("*.py"))
+    for path in files:
+        rel = path.relative_to(SRC).as_posix()
+        for lineno, rule, msg in lint_file(path, rel, deprecated):
+            print(f"{path.relative_to(SRC.parent)}:{lineno}: [{rule}] {msg}")
+            n += 1
+    # tripwire: the admitted modules must still perform admission
+    for rel, token in sorted(RUN_ALLOWLIST.items()):
+        text = (SRC / rel).read_text()
+        if token not in text:
+            print(f"src/{rel}:1: [admission] admitted module lost its "
+                  f"{token} admission check")
+            n += 1
+    if n:
+        print(f"FAIL {n} invariant violation(s)")
+        return 1
+    print(f"invariant lint clean: {len(files)} files, "
+          f"{len(deprecated)} deprecated names tracked")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

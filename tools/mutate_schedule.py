@@ -23,7 +23,21 @@ budget_overflow     prefetch target beyond   budget
                     the packed arena peak
 misalign            offset off the ALIGN     alignment
                     grid
+hoist_compute       Compute hoisted before   dep_transfer_fence
+                    the Prefetch feeding it
+drop_dep_edge       SwapOut permuted ahead   dep_edge
+                    of its producing Compute
+fuse_across_swap    forged FusedBlock        fusion_fence
+                    spanning a SwapOut
 ==================  =======================  ==========================
+
+The first seven corrupt op *metadata* (offsets, phases, multiset) with
+positions intact — the residency/aliasing checkers' beat.  The last three
+corrupt op *positions* (or a fusion plan) with metadata intact — the
+dependence prover's beat (``repro.core.verify.deps``): a checker suite
+blind to either axis would pass one of the two families.
+``fuse_across_swap`` forges a :class:`FusionPlan` rather than an op list,
+so it is judged by ``verify_fusion`` instead of ``verify_schedule``.
 
 Run as a script (CI gate: exits non-zero on any missed corruption) or
 import ``MUTATIONS`` / ``forge`` from tests.
@@ -35,9 +49,11 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.core import MemoryPlanConfig, compile_plan   # noqa: E402
-from repro.core.plan import ExecutionSchedule, Free, Prefetch  # noqa: E402
+from repro.core.plan import (Compute, ExecutionSchedule, Free,  # noqa: E402
+                             Prefetch, SwapOut)
 from repro.core.planner import ALIGN  # noqa: E402
-from repro.core.verify import verify_schedule  # noqa: E402
+from repro.core.verify import (FusedBlock, FusionPlan,  # noqa: E402
+                               verify_fusion, verify_schedule)
 from repro.core.zoo import ZOO  # noqa: E402
 
 
@@ -104,6 +120,50 @@ def mutate_misalign(ops):
         p, device_offset=p.device_offset + 3))
 
 
+def mutate_hoist_compute(ops):
+    """A Compute hoisted before the Prefetch feeding it.
+
+    Phase metadata is untouched — every eo/offset/nbytes field still
+    reads like the clean schedule — only the op's *position* moves, so
+    the residency checkers (which walk metadata) stay silent and the
+    dependence prover's fence edge (Prefetch -> Compute at its read
+    phase) is the one that must fire."""
+    p = _first(ops, Prefetch)
+    pi = ops.index(p)
+    c = next(o for o in ops if isinstance(o, Compute) and o.eo == p.read_eo)
+    rest = [o for o in ops if o is not c]
+    rest.insert(pi, c)          # lands just before the Prefetch feeding it
+    return tuple(rest)
+
+
+def mutate_drop_dep_edge(ops):
+    """A SwapOut permuted to the list front, ahead of its producing
+    Compute — a dependence-edge-dropping permutation (same op multiset,
+    one data edge inverted)."""
+    out = _first(ops, SwapOut)
+    return (out,) + tuple(o for o in ops if o is not out)
+
+
+def forge_illegal_fusion(cp) -> FusionPlan:
+    """A forged FusedBlock spanning a SwapOut of one of its inputs.
+
+    ``plan_fusion`` would never emit this — blocks split at every
+    transfer — so it exercises :func:`verify_fusion`'s independent
+    re-proof: the SwapOut inside the block span must be flagged as
+    ``fusion_fence``."""
+    ops = cp.lowered.ops
+    si = ops.index(_first(ops, SwapOut))
+    before = max(i for i in range(si) if isinstance(ops[i], Compute))
+    after = min(i for i in range(si + 1, len(ops))
+                if isinstance(ops[i], Compute))
+    block = FusedBlock(index=0, op_indices=(before, si, after),
+                       compute_indices=(before, after), free_indices=())
+    return FusionPlan(blocks=(block,), n_ops=len(ops),
+                      n_computes=sum(isinstance(o, Compute) for o in ops),
+                      fence_splits=0, hazard_splits=0, inplace_splits=0,
+                      peak_splits=0)
+
+
 def reference_plan(model: str = "lenet5"):
     """A known-good compiled plan with real data-moving swaps."""
     cp = compile_plan(
@@ -127,7 +187,16 @@ def mutations(cp):
         "budget_overflow": ("budget",
                             mutate_budget_overflow(cp.plan.arena_bytes)),
         "misalign": ("alignment", mutate_misalign),
+        "hoist_compute": ("dep_transfer_fence", mutate_hoist_compute),
+        "drop_dep_edge": ("dep_edge", mutate_drop_dep_edge),
     }
+
+
+# Fusion-plan corruption classes: judged by verify_fusion, not
+# verify_schedule — forge() does not apply (there is no op list to forge).
+FUSION_MUTATIONS = {
+    "fuse_across_swap": ("fusion_fence", forge_illegal_fusion),
+}
 
 
 def forge(cp, name: str) -> ExecutionSchedule:
@@ -156,6 +225,16 @@ def main() -> int:
         status = "caught" if caught else "MISSED"
         print(f"{status:>7} {name}: expected={expected} got={got} "
               f"({len(report.errors())} error(s))")
+        if not caught:
+            missed += 1
+    for name, (expected, forge_fn) in FUSION_MUTATIONS.items():
+        diags = verify_fusion(forge_fn(cp), cp.lowered, cp.ordered, cp.plan)
+        got = sorted({d.check for d in diags})
+        caught = expected in got and any(
+            d.severity == "error" for d in diags)
+        status = "caught" if caught else "MISSED"
+        print(f"{status:>7} {name}: expected={expected} got={got} "
+              f"({len(diags)} diagnostic(s))")
         if not caught:
             missed += 1
     if missed:
