@@ -5,6 +5,9 @@ prove it memory-safe with the static verifier (``repro.core.verify``,
 on by default via ``MemoryPlanConfig(verify="error")``), and replay it
 on the async device-stream executor backend
 (``MemoryPlanConfig(executor="async")``), printing the overlap report.
+Then compile vgg16 with planner-managed optimizer-state offload
+(``MemoryPlanConfig(optim_offload=True)``) and print the plan summary:
+AdamW moments packed into their own arenas with int8 host copies.
 Finally, serve N simulated users through the multi-tenant
 personalization service (``repro.serve``): shared compiled plans per
 batch bucket, admission-controlled arena shares, pad-to-bucket batching.
@@ -129,6 +132,44 @@ def async_exec_demo() -> None:
     assert stats.replayed_ops == cp.lowered.ops
 
 
+def optim_offload_demo() -> None:
+    """Planner-managed optimizer-state offload: the AdamW moments are
+    first-class in the memory plan — tagged as ``O:<layer>`` slots in the
+    EO graph, priced by the joint cost model, packed into their own
+    device/host arenas, and lowered to typed OptPrefetch/OptSwapOut ops.
+    The host copy is int8 block-scaled with error feedback, so the device
+    keeps only a small rotating working region instead of the full fp32
+    moment tree."""
+    from repro.core import MemoryPlanConfig, compile_plan
+    from repro.core.plan import OptPrefetch, OptSwapOut
+    from repro.core.zoo import ZOO
+
+    MIB = 2 ** 20
+    cp = compile_plan(
+        ZOO["vgg16"](),
+        MemoryPlanConfig(optim_offload=True, min_idle_phases=3,
+                         min_bytes=1 << 12),
+        batch=4)
+    s = cp.optim_plan.summary()
+    print("== vgg16 optimizer-state offload (AdamW moments) ==")
+    print(f"slots={s['n_slots']} "
+          f"resident={s['resident_bytes'] / MIB:.1f} MiB -> "
+          f"device working region {s['device_peak_bytes'] / MIB:.1f} MiB "
+          f"({s['reduction_x']:.2f}x reduction)")
+    print(f"host copies: int8+scales {s['host_pool_bytes'] / MIB:.1f} MiB "
+          f"vs fp32 {s['host_fp32_bytes'] / MIB:.1f} MiB, "
+          f"dma/step={s['dma_bytes_per_step'] / MIB:.1f} MiB "
+          f"(est {s['est_dma_s_per_step'] * 1e3:.2f} ms)")
+    n_pre = sum(isinstance(op, OptPrefetch) for op in cp.lowered.ops)
+    n_out = sum(isinstance(op, OptSwapOut) for op in cp.lowered.ops)
+    v = cp.report()["verify"]
+    print(f"lowered: {n_pre} OptPrefetch + {n_out} OptSwapOut ops, "
+          f"verified ok={v['ok']} "
+          f"({len(v['checks_run'])} checks incl. optim_region)")
+    assert cp.optim_plan.reduction_x >= 3.0
+    assert v["ok"] and "optim_region" in v["checks_run"]
+
+
 def serve_demo() -> None:
     """Serve N users: multi-tenant personalization over one device arena.
     Every user shares the frozen base tree and one compiled plan per batch
@@ -187,6 +228,7 @@ def main() -> None:
     graph_plan_demo()
     verify_demo()
     async_exec_demo()
+    optim_offload_demo()
     serve_demo()
 
 

@@ -224,6 +224,18 @@ class _ComputeEnv:
                     self.derivs[inp] = dx
 
 
+def _check_opt_high_water(plan, stats: SwapExecStats) -> None:
+    """Assert the replayed optimizer residency against the packed region
+    (the optimizer-lane analogue of the activation residency-peak gate)."""
+    optim = getattr(plan, "optim", None)
+    if optim is not None \
+            and stats.opt_device_high_water > optim.device_peak_bytes:
+        raise AssertionError(
+            f"optimizer working region exceeded the packed peak: "
+            f"{stats.opt_device_high_water} > {optim.device_peak_bytes} "
+            f"bytes")
+
+
 class _ReplayBackend:
     """Shared interpreter: walk the compiled op list, account residency.
 
@@ -253,8 +265,8 @@ class _ReplayBackend:
             plan=None, lowered=None, mask=None):
         import time as _time
 
-        from repro.core.plan import (Compute, Free, Prefetch, SwapOut,
-                                     lower_schedule)
+        from repro.core.plan import (Compute, Free, OptPrefetch, OptSwapOut,
+                                     Prefetch, SwapOut, lower_schedule)
         from repro.core.verify import (StaticResidencyModel, is_verified,
                                        mark_verified, verify_schedule)
         if ordered is None:
@@ -283,11 +295,30 @@ class _ReplayBackend:
                           put=store.put)
         replayed: List[Any] = []
         inflight = 0
+        opt_resident = 0                  # optimizer working-region bytes
         done_at: Dict[int, int] = {}      # read EO -> prefetched bytes retiring
         retired_eo = -1
 
         for op_index, op in enumerate(lowered.ops):
-            if isinstance(op, Prefetch):
+            if isinstance(op, OptPrefetch):
+                # optimizer working state lands in its own device region;
+                # the numerical dance (dequantize, AdamW update, EF
+                # requantize) runs in repro.core.optim_offload — here the
+                # replay accounts residency and bus traffic so op-list
+                # equality gates cover the optimizer lane too
+                opt_resident += op.nbytes
+                stats.opt_device_high_water = max(
+                    stats.opt_device_high_water, opt_resident)
+                stats.opt_prefetches += 1
+                stats.opt_dma_bytes += op.host_nbytes
+                replayed.append(op)
+            elif isinstance(op, OptSwapOut):
+                opt_resident -= op.nbytes
+                stats.opt_swap_outs += 1
+                stats.opt_dma_bytes += op.nbytes
+                stats.opt_compressed_bytes += op.host_nbytes
+                replayed.append(op)
+            elif isinstance(op, Prefetch):
                 if op.tensor in store.alive:
                     continue  # late swap-in already brought it back
                 store.swap_in(op.tensor, stats)
@@ -339,6 +370,7 @@ class _ReplayBackend:
                     f"swap executor exceeded the packed host pool: "
                     f"{stats.host_high_water} > {stats.planned_host_pool} "
                     f"bytes")
+        _check_opt_high_water(plan, stats)
         return env.loss_val, env.grads, stats
 
     def _finalize_stats(self, stats: SwapExecStats,
@@ -366,6 +398,11 @@ class _ReplayBackend:
             "dispatch_calls": s.dispatch_calls,
             "replayed_op_count": len(s.replayed_ops),
             "wall_time_s": s.wall_time_s,
+            "opt_swap_outs": s.opt_swap_outs,
+            "opt_prefetches": s.opt_prefetches,
+            "opt_dma_bytes": s.opt_dma_bytes,
+            "opt_compressed_bytes": s.opt_compressed_bytes,
+            "opt_device_high_water": s.opt_device_high_water,
         }
 
 
@@ -560,8 +597,8 @@ class JitBlocksBackend(AsyncDeviceBackend):
             plan=None, lowered=None, mask=None):
         import time as _time
 
-        from repro.core.plan import (Compute, Free, Prefetch, SwapOut,
-                                     lower_schedule)
+        from repro.core.plan import (Compute, Free, OptPrefetch, OptSwapOut,
+                                     Prefetch, SwapOut, lower_schedule)
         from repro.core.verify import (ScheduleVerificationError,
                                        StaticResidencyModel, is_verified,
                                        mark_verified, plan_fusion,
@@ -609,6 +646,7 @@ class JitBlocksBackend(AsyncDeviceBackend):
 
         replayed: List[Any] = []
         inflight = 0
+        opt_resident = 0
         done_at: Dict[int, int] = {}
         retired_eo = -1
 
@@ -647,7 +685,24 @@ class JitBlocksBackend(AsyncDeviceBackend):
                 continue
             if op_index in covered:
                 continue        # replayed as part of its block
-            if isinstance(op, Prefetch):
+            if isinstance(op, OptPrefetch):
+                # optimizer ops never fuse (they are fences to the
+                # dependence prover): eager accounting, one dispatch each
+                opt_resident += op.nbytes
+                stats.opt_device_high_water = max(
+                    stats.opt_device_high_water, opt_resident)
+                stats.opt_prefetches += 1
+                stats.opt_dma_bytes += op.host_nbytes
+                replayed.append(op)
+                stats.dispatch_calls += 1
+            elif isinstance(op, OptSwapOut):
+                opt_resident -= op.nbytes
+                stats.opt_swap_outs += 1
+                stats.opt_dma_bytes += op.nbytes
+                stats.opt_compressed_bytes += op.host_nbytes
+                replayed.append(op)
+                stats.dispatch_calls += 1
+            elif isinstance(op, Prefetch):
                 if op.tensor in store.alive:
                     continue
                 store.swap_in(op.tensor, stats)
@@ -698,6 +753,7 @@ class JitBlocksBackend(AsyncDeviceBackend):
                     f"swap executor exceeded the packed host pool: "
                     f"{stats.host_high_water} > {stats.planned_host_pool} "
                     f"bytes")
+        _check_opt_high_water(plan, stats)
         return env.loss_val, env.grads, stats
 
     def _exec_block(self, block, ops, graph, store, env, stats,

@@ -72,6 +72,13 @@ class SwapExecStats:
     # per-step timing the serving layer aggregates into per-session
     # steps/sec (0.0 until a run completes)
     wall_time_s: float = 0.0
+    # ---- optimizer-state offload (repro.core.optim_offload) ----
+    opt_swap_outs: int = 0         # OptSwapOut ops replayed
+    opt_prefetches: int = 0        # OptPrefetch ops replayed
+    # optimizer DMA: fp32 working state D2H + compressed host copy H2D
+    opt_dma_bytes: int = 0
+    opt_compressed_bytes: int = 0  # host-side bytes after quantization
+    opt_device_high_water: int = 0 # peak resident optimizer working bytes
 
 
 class HbmTracker:

@@ -92,6 +92,16 @@ knob (default)          meaning
                         before DAG, plan legal compute fusion and measure
                         per-transfer slack; summary lands in
                         ``report()["deps"]`` (False skips the analysis)
+``optim_offload``       make optimizer state (AdamW moments) a planned
+(False)                 resource: per-layer ``O:`` slots packed into their
+                        own device region + compressed host pool, lowered
+                        to ``OptPrefetch``/``OptSwapOut`` ops both
+                        executor backends replay (see
+                        ``repro.core.optim_offload``)
+``optim_compress``      quantize offloaded optimizer host copies to int8
+(True)                  block-scaled form (``optim/compression.py``
+                        ``_q``/``_deq`` with error feedback); False keeps
+                        fp32 host copies (exact, ~4x the host bytes)
 ======================  =====================================================
 
 Static verification
@@ -173,6 +183,17 @@ class MemoryPlanConfig:
                          backend would execute, and per-transfer prefetch
                          slack, folded into ``report()["deps"]``.  See
                          ``repro.core.verify.deps``.
+    ``optim_offload``    plan optimizer state (AdamW moments, 2x params)
+                         as first-class ``O:`` slots: packed into a
+                         separate device working region + compressed host
+                         pool and lowered to typed ``OptPrefetch``/
+                         ``OptSwapOut`` ops (default False — optimizer
+                         state stays outside the plan, the historical
+                         behaviour).  See ``repro.core.optim_offload``.
+    ``optim_compress``   int8 block-scaled host copies for offloaded
+                         optimizer slots, with error feedback keeping
+                         updates unbiased (default True); False keeps
+                         exact fp32 host copies
 
     Remat / offload knobs (model-config path — the joint planner):
 
@@ -208,6 +229,8 @@ class MemoryPlanConfig:
     executor: str = "sim"
     verify: str = "error"
     deps: bool = True
+    optim_offload: bool = False
+    optim_compress: bool = True
 
     remat: Optional[bool] = None
     remat_budget_bytes: Optional[int] = None
@@ -287,11 +310,54 @@ class Free:
     device_offset: int
 
 
-# Within one EO phase: prefetches start the phase, compute runs, the
-# background swap-out drains at the end, then expired tensors are freed.
-_OP_RANK = {Prefetch: 0, Compute: 1, SwapOut: 2, Free: 3}
+@dataclasses.dataclass(frozen=True)
+class OptPrefetch:
+    """H2D DMA issued at phase ``eo``: copy ``tensor``'s (an ``O:<layer>``
+    optimizer slot) compressed host copy — ``host_nbytes`` int8+scale bytes
+    at host offset ``host_offset`` — into the optimizer working region at
+    ``device_offset`` and dequantize into the ``nbytes`` fp32 working
+    buffer; must be consumable by the layer's CG phase ``read_eo`` (where
+    the optimizer update reads the moments).
 
-ScheduleOp = Union[Compute, SwapOut, Prefetch, Free]
+    Deliberately NOT a :class:`Prefetch` subclass: optimizer slots live in
+    their own device region and host pool, so every activation-arena sweep
+    (reuse edges, residency checks, transfer accounting) must stay blind to
+    them — ``isinstance`` walks over the activation op types skip these by
+    construction."""
+    eo: int
+    tensor: str
+    nbytes: int
+    device_offset: int
+    host_offset: int
+    host_nbytes: int
+    read_eo: int
+
+
+@dataclasses.dataclass(frozen=True)
+class OptSwapOut:
+    """D2H DMA during phase ``eo`` (the phase after the layer's CG update):
+    copy the updated ``nbytes`` fp32 optimizer working state at
+    ``device_offset`` back to the host, where it is re-quantized (with
+    error feedback) into the ``host_nbytes`` compressed slot at
+    ``host_offset``, then release the working-region bytes."""
+    eo: int
+    tensor: str
+    nbytes: int
+    device_offset: int
+    host_offset: int
+    host_nbytes: int
+
+
+# Within one EO phase: prefetches start the phase (activation, then
+# optimizer), compute runs, the background swap-outs drain at the end
+# (optimizer state right after the update, then activations), then expired
+# tensors are freed.  Only the relative order matters; the integers for
+# the PR-4 op types keep their original relative order so every existing
+# lowered op list sorts identically.
+_OP_RANK = {Prefetch: 0, OptPrefetch: 1, Compute: 2, OptSwapOut: 3,
+            SwapOut: 4, Free: 5}
+
+ScheduleOp = Union[Compute, SwapOut, Prefetch, Free, OptPrefetch, OptSwapOut]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -375,6 +441,24 @@ def lower_schedule(ordered: OrderedTensors, schedule: OffloadSchedule,
         if t.name.startswith("X:"):
             ops.append(Free(eo=t.max_eo, tensor=t.name, nbytes=t.nbytes,
                             device_offset=device_offset(t.name, post=True)))
+    optim = getattr(plan, "optim", None)
+    if optim is not None:
+        # optimizer slots: one prefetch (compressed host copy -> fp32
+        # working buffer, ready by the layer's CG update) and one swap-out
+        # (updated state re-quantized back to the host slot) per slot; the
+        # offsets index the optimizer plan's OWN device region / host pool,
+        # not the activation arenas
+        for s in optim.slots:
+            dev = optim.device.placements[s.name].offset
+            host = optim.host.placements[s.name + "@host"].offset
+            ops.append(OptPrefetch(
+                eo=s.prefetch_eo, tensor=s.name, nbytes=s.nbytes,
+                device_offset=dev, host_offset=host,
+                host_nbytes=s.host_nbytes, read_eo=s.read_eo))
+            ops.append(OptSwapOut(
+                eo=s.swapout_eo, tensor=s.name, nbytes=s.nbytes,
+                device_offset=dev, host_offset=host,
+                host_nbytes=s.host_nbytes))
     ops.sort(key=lambda op: (op.eo, _OP_RANK[type(op)],
                              getattr(op, "tensor", ""),
                              getattr(op, "layer", "")))
@@ -464,6 +548,22 @@ class CompiledMemoryPlan:
         """Swaps whose bytes survived in place: no host slot, no DMA."""
         return self.plan.inplace_prefetch_count \
             if isinstance(self.plan, SwapAwarePlan) else 0
+
+    @property
+    def optim_plan(self):
+        """The packed optimizer-state offload plan
+        (:class:`repro.core.optim_offload.OptimPlan`), or None when
+        ``config.optim_offload`` is off."""
+        return getattr(self.plan, "optim", None)
+
+    @property
+    def optim_device_bytes(self) -> int:
+        """Device bytes the optimizer state needs under this plan: the
+        packed working-region peak when offloaded, 0 when the plan does not
+        manage optimizer state (the historical behaviour — optimizer state
+        then lives outside every arena and budget)."""
+        op = self.optim_plan
+        return op.device_peak_bytes if op is not None else 0
 
     @property
     def device_utilization(self) -> Optional[float]:
@@ -567,6 +667,8 @@ class CompiledMemoryPlan:
                 out["host_utilization"] = self.host_utilization
             if self.lowered is not None:
                 out["schedule_ops"] = self.lowered.counts()
+            if self.optim_plan is not None:
+                out["optim"] = self.optim_plan.summary()
             if self.exec_report is not None:
                 # what the last execution measured, incl. the async
                 # backend's achieved overlap vs peak_inflight_prefetch
@@ -727,8 +829,14 @@ def _compile_graph_plan(graph: LayerGraph, config: MemoryPlanConfig,
     ordered = compute_execution_order(graph, batch)
     baseline = get_planner(config.planner).plan(ordered)
 
+    optim_plan = None
+    if config.optim_offload:
+        from repro.core.optim_offload import plan_optim_offload
+        optim_plan = plan_optim_offload(graph, ordered, config)
+
     if not config.swap:
         empty = make_schedule(())
+        baseline.optim = optim_plan
         return _apply_verify(CompiledMemoryPlan(
             config=config, source="graph", graph=graph, ordered=ordered,
             schedule=empty, plan=baseline, baseline=baseline, batch=batch,
@@ -755,6 +863,7 @@ def _compile_graph_plan(graph: LayerGraph, config: MemoryPlanConfig,
                            single_pass_peak_bytes=single_peak,
                            single_pass_dma_bytes=single_dma)
 
+    plan.optim = optim_plan
     return _apply_verify(CompiledMemoryPlan(
         config=config, source="graph", graph=graph, ordered=ordered,
         schedule=plan.schedule, plan=plan, baseline=baseline, coopt=coopt,

@@ -40,6 +40,11 @@ registry pass           invariant proven (check ids emitted)
 ``inplace_prefetch``    an in-place prefetch moves no data (no DMA ops) and
                         no conflicting writer touched its bytes in the
                         vacated window (``inplace_prefetch``)
+``optim_region``        optimizer-state transfers replay the optimizer
+                        plan's packed offsets, stay inside the opt
+                        device/host arenas, honour ALIGN, and every slot
+                        pairs one ``OptPrefetch`` with one later
+                        ``OptSwapOut`` (``optim_region``, ``alignment``)
 ``deps``                the op list is a linear extension of its own
                         happens-before dependence DAG (:mod:`.deps`): every
                         data / arena-reuse edge respected (``dep_edge``),
@@ -75,6 +80,7 @@ from repro.core.verify.checks import (CHECKS, SEV_ERROR, SEV_WARNING,
                                       StaticResidencyModel, _walk_residency,
                                       check_arena_alias, check_budget,
                                       check_heap, check_inplace_prefetch,
+                                      check_optim_region,
                                       check_transfer_race,
                                       check_use_before_resident, is_verified,
                                       mark_verified,
@@ -110,6 +116,7 @@ __all__ = [
     "check_deps",
     "check_heap",
     "check_inplace_prefetch",
+    "check_optim_region",
     "check_transfer_race",
     "check_use_before_resident",
     "deps_summary",

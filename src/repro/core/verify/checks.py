@@ -527,6 +527,111 @@ def check_inplace_prefetch(ctx: CheckContext) -> List[Diagnostic]:
     return diags
 
 
+def check_optim_region(ctx: CheckContext) -> List[Diagnostic]:
+    """Optimizer-state transfer ops must replay exactly what the optimizer
+    plan packed: offsets match the opt device/host placements, stay inside
+    the opt arenas, honour ALIGN, and every slot pairs one ``OptPrefetch``
+    with one later ``OptSwapOut`` (the working buffer is read before it is
+    re-quantized back out — the reverse of the activation pairing)."""
+    from repro.core.plan import OptPrefetch, OptSwapOut
+    diags: List[Diagnostic] = []
+    opt_ops = [(i, op) for i, op in enumerate(ctx.ops)
+               if isinstance(op, (OptPrefetch, OptSwapOut))]
+    if not opt_ops:
+        return diags
+    optim = getattr(ctx.plan, "optim", None)
+    if optim is None:
+        diags.append(Diagnostic(
+            SEV_ERROR, "optim_region",
+            f"{len(opt_ops)} optimizer transfer op(s) but the plan carries "
+            f"no optimizer plan to validate them against",
+            op_index=opt_ops[0][0], tensor=opt_ops[0][1].tensor))
+        return diags
+    per_tensor: Dict[str, Dict[str, Tuple[int, Any]]] = {}
+    for i, op in opt_ops:
+        kind = "in" if isinstance(op, OptPrefetch) else "out"
+        per_tensor.setdefault(op.tensor, {})[kind] = (i, op)
+        # placement consistency: device working buffer + host slot
+        dpl = optim.device.placements.get(op.tensor)
+        if dpl is None:
+            diags.append(Diagnostic(
+                SEV_ERROR, "optim_region",
+                "no packed optimizer device placement for this slot",
+                op_index=i, tensor=op.tensor))
+            continue
+        if op.device_offset != dpl.offset:
+            diags.append(Diagnostic(
+                SEV_ERROR, "optim_region",
+                f"{type(op).__name__} device offset {op.device_offset} "
+                f"diverges from the packed opt placement ({dpl.offset})",
+                op_index=i, tensor=op.tensor,
+                offsets=(op.device_offset, dpl.offset)))
+        hpl = optim.host.placements.get(op.tensor + "@host")
+        if hpl is None:
+            diags.append(Diagnostic(
+                SEV_ERROR, "optim_region",
+                "no packed optimizer host slot for this tensor",
+                op_index=i, tensor=op.tensor))
+            continue
+        if op.host_offset != hpl.offset:
+            diags.append(Diagnostic(
+                SEV_ERROR, "optim_region",
+                f"{type(op).__name__} host offset {op.host_offset} "
+                f"diverges from the packed opt host slot ({hpl.offset})",
+                op_index=i, tensor=op.tensor,
+                offsets=(op.host_offset, hpl.offset)))
+        if op.host_nbytes > hpl.nbytes:
+            diags.append(Diagnostic(
+                SEV_ERROR, "optim_region",
+                f"compressed copy ({op.host_nbytes} B) overflows its "
+                f"packed host slot ({hpl.nbytes} B)",
+                op_index=i, tensor=op.tensor,
+                offsets=(op.host_offset,)))
+        # bounds + alignment against the *opt* arenas (their own address
+        # spaces — never mixed with the activation arenas)
+        if op.device_offset + _align(op.nbytes) > optim.device.arena_bytes:
+            diags.append(Diagnostic(
+                SEV_ERROR, "optim_region",
+                f"working buffer end "
+                f"{op.device_offset + _align(op.nbytes)} exceeds the opt "
+                f"device arena ({optim.device.arena_bytes} B)",
+                op_index=i, tensor=op.tensor, offsets=(op.device_offset,)))
+        if op.host_offset + _align(op.host_nbytes) > optim.host.arena_bytes:
+            diags.append(Diagnostic(
+                SEV_ERROR, "optim_region",
+                f"host slot end {op.host_offset + _align(op.host_nbytes)} "
+                f"exceeds the opt host pool ({optim.host.arena_bytes} B)",
+                op_index=i, tensor=op.tensor, offsets=(op.host_offset,)))
+        for off in (op.device_offset, op.host_offset):
+            if off > 0 and off % ALIGN != 0:
+                diags.append(Diagnostic(
+                    SEV_ERROR, "alignment",
+                    f"opt offset {off} violates ALIGN={ALIGN}",
+                    op_index=i, tensor=op.tensor, offsets=(off,)))
+    # pairing: one prefetch strictly before one swap-out per slot
+    for name, pair in sorted(per_tensor.items()):
+        if "in" not in pair:
+            i, _ = pair["out"]
+            diags.append(Diagnostic(
+                SEV_ERROR, "optim_region",
+                "OptSwapOut with no OptPrefetch admitting the working "
+                "state it re-quantizes", op_index=i, tensor=name))
+        elif "out" not in pair:
+            i, _ = pair["in"]
+            diags.append(Diagnostic(
+                SEV_ERROR, "optim_region",
+                "OptPrefetch with no OptSwapOut retiring the working "
+                "buffer", op_index=i, tensor=name))
+        elif pair["in"][0] > pair["out"][0]:
+            diags.append(Diagnostic(
+                SEV_ERROR, "optim_region",
+                f"OptSwapOut at op[{pair['out'][0]}] precedes its "
+                f"OptPrefetch at op[{pair['in'][0]}]: the swap-out would "
+                f"re-quantize an unwritten working buffer",
+                op_index=pair["out"][0], tensor=name))
+    return diags
+
+
 # The checker registry: independent passes, run in order.  Mirrors the
 # PLANNERS / BACKENDS registries — register a new invariant by adding an
 # entry; verify_schedule runs every pass (or the caller's subset).
@@ -537,6 +642,7 @@ CHECKS: Dict[str, Callable[[CheckContext], List[Diagnostic]]] = {
     "heap": check_heap,
     "budget": check_budget,
     "inplace_prefetch": check_inplace_prefetch,
+    "optim_region": check_optim_region,
 }
 
 

@@ -151,8 +151,17 @@ def build_dependence_graph(schedule_or_ops, ordered=None,
     without them only the ranges the transfer/free ops themselves carry
     are used.  Every edge is oriented by the canonical lowering key, so
     the DAG is acyclic by construction and a canonically lowered op list
-    is always one of its linear extensions."""
-    from repro.core.plan import Compute, Free, Prefetch, SwapOut
+    is always one of its linear extensions.
+
+    Optimizer-slot ops (``OptPrefetch``/``OptSwapOut``) get their own edge
+    families — prefetch before the consuming CG compute, the CG compute
+    before the swap-out, prefetch before swap-out (WAR on the working
+    buffer), and working-region byte reuse between slots — but never mix
+    with the activation-arena reuse scans: their offsets index a separate
+    device region, so byte comparisons across the two families would be
+    meaningless."""
+    from repro.core.plan import (Compute, Free, OptPrefetch, OptSwapOut,
+                                 Prefetch, SwapOut)
     ops = _ops_of(schedule_or_ops)
     edges: List[DepEdge] = []
     key = [_canon_key(op) for op in ops]
@@ -179,7 +188,7 @@ def build_dependence_graph(schedule_or_ops, ordered=None,
     # of its scheduled phase (the swap drains at the end of the phase, the
     # free runs after the last access)
     for i, op in enumerate(ops):
-        if isinstance(op, (SwapOut, Free)):
+        if isinstance(op, (SwapOut, Free, OptSwapOut)):
             ci = phase_compute(op.eo)
             if ci is not None:
                 edges.append(DepEdge(
@@ -205,6 +214,53 @@ def build_dependence_graph(schedule_or_ops, ordered=None,
                     i, ri, "fence", "dep_transfer_fence", tensor=op.tensor,
                     why=f"consumer at EO {op.read_eo} fences this "
                         f"prefetch"))
+
+    # -- fence/data: optimizer slot ops.  Within one step the prefetch
+    # comes FIRST (dequantized state feeds the CG update, then the updated
+    # state drains): OptPrefetch(t) -> consuming CG compute, CG compute ->
+    # OptSwapOut(t), and OptPrefetch(t) -> OptSwapOut(t) (WAR on the
+    # working buffer and on the host slot both ops address).
+    opt_in_of: Dict[str, int] = {}
+    for i, op in enumerate(ops):
+        if isinstance(op, OptPrefetch):
+            opt_in_of[op.tensor] = i
+            ri = compute_at_eo.get(op.read_eo)
+            if ri is not None:
+                edges.append(DepEdge(
+                    i, ri, "fence", "dep_transfer_fence", tensor=op.tensor,
+                    why=f"the optimizer update at EO {op.read_eo} reads "
+                        f"this slot's dequantized state"))
+        elif isinstance(op, OptSwapOut):
+            pi = opt_in_of.get(op.tensor)
+            if pi is not None:
+                edges.append(DepEdge(
+                    pi, i, "fence", "dep_transfer_fence", tensor=op.tensor,
+                    why="swap-out overwrites the working buffer and host "
+                        "slot its prefetch read"))
+
+    # -- reuse: optimizer working-region bytes between slots (their own
+    # address space — never compared against activation-arena offsets)
+    def opt_range(op) -> Optional[Tuple[int, int]]:
+        if op.device_offset < 0:
+            return None
+        return (op.device_offset, op.device_offset + _align(op.nbytes))
+
+    opt_evictors = [(i, op.tensor, opt_range(op))
+                    for i, op in enumerate(ops)
+                    if isinstance(op, OptSwapOut) and opt_range(op)]
+    opt_writers = [(i, op.tensor, opt_range(op))
+                   for i, op in enumerate(ops)
+                   if isinstance(op, OptPrefetch) and opt_range(op)]
+    for ei, etensor, (elo, ehi) in opt_evictors:
+        for wi, wtensor, (wlo, whi) in opt_writers:
+            if wtensor == etensor or key[wi] <= key[ei]:
+                continue
+            if not (whi <= elo or ehi <= wlo):
+                edges.append(DepEdge(
+                    ei, wi, "reuse", "dep_edge", tensor=wtensor,
+                    why=f"optimizer working bytes "
+                        f"[{max(elo, wlo)},{min(ehi, whi)}) of {etensor} "
+                        f"are reused by {wtensor}"))
 
     # -- reuse: arena byte-range WAR/WAW.  Device: an evictor's vacated
     # range must precede any later writer of overlapping bytes; host: a
@@ -445,9 +501,13 @@ def plan_fusion(schedule_or_ops, ordered=None, plan=None, *,
 
     ``Free`` ops inside a surviving block are absorbed and replayed at
     the block end; runs shorter than ``min_block`` computes stay eager.
+    Optimizer-slot transfers (``OptPrefetch``/``OptSwapOut``) are fences
+    exactly like activation transfers — their issue point around the CG
+    update is the overlap the plan priced — so a run never spans one.
     The result always satisfies :func:`schedules_equivalent` against the
     original (see :func:`replay_stream`)."""
-    from repro.core.plan import Compute, Free, Prefetch, SwapOut
+    from repro.core.plan import (Compute, Free, OptPrefetch, OptSwapOut,
+                                 Prefetch, SwapOut)
     ops = _ops_of(schedule_or_ops)
     produced_at, inplace_eos, peak = _fusion_env(ops, ordered, plan)
 
@@ -474,7 +534,12 @@ def plan_fusion(schedule_or_ops, ordered=None, plan=None, *,
 
     n_computes = 0
     for i, op in enumerate(ops):
-        if isinstance(op, (SwapOut, Prefetch)):
+        if isinstance(op, (OptSwapOut, OptPrefetch)):
+            # optimizer transfers fence like activation transfers, but
+            # touch neither the activation residency counter nor the
+            # deferred-free ranges (separate device region)
+            flush("fence")
+        elif isinstance(op, (SwapOut, Prefetch)):
             flush("fence")
             nb = (ordered.tensors[op.tensor].nbytes
                   if ordered is not None and op.tensor in ordered.tensors
@@ -548,7 +613,8 @@ def verify_fusion(fusion: FusionPlan, schedule_or_ops, ordered=None,
     producer in its block or crosses an in-place re-admission
     (``fusion_hazard``), and deferred residency never exceeds the packed
     peak (``fusion_peak``, overridable via ``peak_bytes`` for tests)."""
-    from repro.core.plan import Compute, Free, Prefetch, SwapOut
+    from repro.core.plan import (Compute, Free, OptPrefetch, OptSwapOut,
+                                 Prefetch, SwapOut)
     ops = _ops_of(schedule_or_ops)
     produced_at, inplace_eos, peak = _fusion_env(ops, ordered, plan)
     if peak_bytes is not None:
@@ -566,7 +632,7 @@ def verify_fusion(fusion: FusionPlan, schedule_or_ops, ordered=None,
             if i in members:
                 continue
             op = ops[i]
-            if isinstance(op, (SwapOut, Prefetch)):
+            if isinstance(op, (SwapOut, Prefetch, OptSwapOut, OptPrefetch)):
                 diags.append(Diagnostic(
                     SEV_ERROR, "fusion_fence",
                     f"block {b.index} [{lo},{hi}] spans {_describe(op)}: "

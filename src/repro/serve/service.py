@@ -11,9 +11,13 @@ Benchmark drivers use ``enqueue``/``drain`` directly to build queue depth.
 Warm-up (lazy on first enqueue, or explicit via ``warmup()``) compiles one
 plan per bucket and replays it on dummy data, so live traffic never pays
 jit-compile latency.  When ``device_budget_bytes`` is omitted the budget
-is *derived*: share = the largest bucket's packed peak under the service
-config, budget = share x ``max_live_sessions`` — i.e. "exactly enough
-arena for every slot to train the biggest bucket".  Passing a smaller
+is *derived*: share = the largest bucket's packed peak plus the session's
+optimizer tenancy (the packed working region under
+``config.optim_offload``, zero extra otherwise), budget = share x
+``max_live_sessions`` — i.e. "exactly enough arena for every slot to
+train the biggest bucket".  With offloaded moments the share shrinks vs
+the all-resident counterfactual, so the same physical arena admits more
+sessions (``report()["optim_offload"]["sessions_per_arena_x"]``).  Passing a smaller
 budget squeezes tenants: plans re-pack down the swap escalation ladder,
 and sessions whose plans cannot fit are rejected, not overcommitted.
 
@@ -93,6 +97,9 @@ class PersonalizationService:
         self._device_budget_bytes = device_budget_bytes
         self._queue: Deque[Request] = deque()
         self._warm = False
+        # populated by warmup() when the budget is derived and the plans
+        # carry an optimizer-offload plan (config.optim_offload)
+        self._optim_accounting: Optional[Dict[str, Any]] = None
 
     # -- warm-up ----------------------------------------------------------
 
@@ -110,7 +117,15 @@ class PersonalizationService:
         if self._device_budget_bytes is None:
             probes = {b: compile_plan(self.graph, self.config, batch=b)
                       for b in self.buckets}
-            share = max(cp.peak_bytes for cp in probes.values())
+            # A session's device footprint is its activation arena peak
+            # plus its optimizer tenancy.  Under optim_offload that
+            # tenancy is the packed working region (optim_device_bytes),
+            # not the all-resident moments — the share shrinks and the
+            # same physical arena admits more sessions.
+            share = max(cp.peak_bytes + cp.optim_device_bytes
+                        for cp in probes.values())
+            self._optim_accounting = self._derive_optim_accounting(
+                probes, share)
             self.admission = AdmissionController(
                 max_live_sessions=self._max_live_sessions,
                 device_budget_bytes=share * self._max_live_sessions)
@@ -131,6 +146,32 @@ class PersonalizationService:
             x, y = dummy_batch(self.graph, b)
             cp.loss_and_grads(self.servable.base_params, x, y)
         self._warm = True
+
+    def _derive_optim_accounting(self, probes, share: int
+                                 ) -> Optional[Dict[str, Any]]:
+        """How much arena the optimizer offload bought back per session.
+
+        ``share_resident`` is the counterfactual share with the moments
+        fully device-resident; ``sessions_per_arena_x`` is how many more
+        sessions the same physical arena (``share_resident x slots``)
+        admits at the offloaded share."""
+        opts = [cp.optim_plan for cp in probes.values()
+                if cp.optim_plan is not None]
+        if not opts:
+            return None
+        resident = max(op.resident_bytes for op in opts)
+        share_resident = max(cp.peak_bytes for cp in probes.values()) \
+            + resident
+        arena = share_resident * self._max_live_sessions
+        return {
+            "share_bytes": share,
+            "share_resident_bytes": share_resident,
+            "optim_device_bytes": max(op.device_peak_bytes for op in opts),
+            "optim_resident_bytes": resident,
+            "sessions_in_resident_arena": arena // max(1, share),
+            "sessions_per_arena_x": (arena // max(1, share))
+            / self._max_live_sessions,
+        }
 
     # -- the request loop -------------------------------------------------
 
@@ -243,4 +284,6 @@ class PersonalizationService:
         }
         if self.admission is not None:
             rep["admission"] = self.admission.report()
+        if self._optim_accounting is not None:
+            rep["optim_offload"] = dict(self._optim_accounting)
         return rep

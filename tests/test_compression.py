@@ -1,0 +1,162 @@
+"""The int8 block-quantised compression core (``repro.optim.compression``)
+and the optimizer-state quantiser's zero-absmax guard
+(``repro.optim.optimizers._quantize``).
+
+These primitives back two subsystems — cross-pod gradient compression and
+the planner-managed optimizer-state offload's host copies — so their
+contracts are pinned here: round-trip error bounds, error-feedback
+residual algebra, the padded tail when n is not a CBLOCK multiple, and
+the all-zero block that must not divide by zero.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.compression import (CBLOCK, _deq, _q, compress_gradients,
+                                     decompress_gradients,
+                                     error_feedback_update, init_residual)
+from repro.optim.optimizers import _dequantize, _quantize
+
+
+# ---------------------------------------------------------------------------
+# _q / _deq round-trip bounds
+# ---------------------------------------------------------------------------
+
+def test_q_deq_roundtrip_error_bounded_per_block():
+    # absmax int8: |x - deq(q(x))| <= scale/2 = max|block| / 254 per block
+    x = jax.random.normal(jax.random.PRNGKey(0), (4 * CBLOCK,))
+    q, scale = _q(x)
+    back = _deq(q, scale, x.shape)
+    assert back.shape == x.shape
+    err = np.abs(np.asarray(x - back)).reshape(4, CBLOCK)
+    bound = np.max(np.abs(np.asarray(x).reshape(4, CBLOCK)),
+                   axis=1, keepdims=True) / 254.0
+    assert np.all(err <= bound + 1e-7)
+
+
+def test_q_deq_exact_on_representable_values():
+    # multiples of absmax/127 are exactly representable
+    scale_true = 0.5
+    x = jnp.arange(-127, 129, dtype=jnp.float32) * scale_true
+    x = x.at[-1].set(0.0)  # keep absmax at 127*scale so the grid matches
+    q, scale = _q(x)
+    np.testing.assert_allclose(np.asarray(_deq(q, scale, x.shape)),
+                               np.asarray(x), atol=1e-6)
+
+
+def test_q_deq_padded_tail_not_multiple_of_cblock():
+    # n % CBLOCK != 0: the pad must stay internal — shape and values of
+    # the tail round-trip, and the pad zeros never leak into the output
+    n = CBLOCK + 37
+    x = jax.random.normal(jax.random.PRNGKey(1), (n,)) * 3.0
+    q, scale = _q(x)
+    assert q.shape == (2, CBLOCK)          # padded to 2 blocks
+    back = _deq(q, scale, (n,))
+    assert back.shape == (n,)
+    assert float(jnp.max(jnp.abs(x - back))) <= float(
+        jnp.max(jnp.abs(x))) / 127.0
+
+
+def test_q_deq_multidim_shape_restored():
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 5, 7))
+    q, scale = _q(x)
+    back = _deq(q, scale, x.shape)
+    assert back.shape == (3, 5, 7)
+    assert float(jnp.max(jnp.abs(x - back))) < float(jnp.max(jnp.abs(x)))
+
+
+def test_q_all_zero_block_yields_unit_scale_and_zero_roundtrip():
+    x = jnp.zeros((CBLOCK * 2,))
+    q, scale = _q(x)
+    assert np.all(np.asarray(scale) == 1.0)      # guard, not 0/0
+    assert np.all(np.asarray(_deq(q, scale, x.shape)) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# error feedback
+# ---------------------------------------------------------------------------
+
+def test_error_feedback_residual_is_exact_quantisation_error():
+    g = {"w": jax.random.normal(jax.random.PRNGKey(3), (CBLOCK,))}
+    e0 = init_residual(g)
+    c, e1 = error_feedback_update(g, e0)
+    deq = _deq(c["w"]["q"], c["w"]["scale"], g["w"].shape)
+    np.testing.assert_allclose(np.asarray(e1["w"]),
+                               np.asarray(g["w"] - deq), atol=1e-7)
+
+
+def test_error_feedback_accumulates_unbiased_over_steps():
+    # a constant gradient stream: with EF the *sum* of dequantised
+    # emissions tracks the sum of true gradients to within one step's
+    # quantisation error — the residual never grows without bound
+    g = {"w": jax.random.normal(jax.random.PRNGKey(4), (CBLOCK,)) * 1e-3}
+    e = init_residual(g)
+    emitted = jnp.zeros_like(g["w"])
+    steps = 16
+    for _ in range(steps):
+        c, e = error_feedback_update(g, e)
+        emitted = emitted + _deq(c["w"]["q"], c["w"]["scale"], g["w"].shape)
+    true_sum = g["w"] * steps
+    one_step_bound = float(jnp.max(jnp.abs(g["w"]))) / 127.0 * 2
+    assert float(jnp.max(jnp.abs(emitted - true_sum))) \
+        <= one_step_bound + float(jnp.max(jnp.abs(e["w"])))
+    # and the residual itself stays at quantisation-noise scale
+    assert float(jnp.max(jnp.abs(e["w"]))) \
+        <= float(jnp.max(jnp.abs(g["w"] + e["w"]))) / 127.0 + 1e-7
+
+
+def test_error_feedback_recovers_subquantisation_signal():
+    # a signal too small for one quantisation step is dropped at step 1
+    # but the residual accumulates it until it crosses the grid: the EF
+    # path must emit nonzero mass where a memoryless quantiser never would
+    big = 1.0
+    tiny = big / 500.0                     # < absmax/127 — rounds to 0
+    g = {"w": jnp.concatenate([jnp.array([big]),
+                               jnp.full((CBLOCK - 1,), tiny)])}
+    e = init_residual(g)
+    emitted = jnp.zeros_like(g["w"])
+    for _ in range(8):
+        c, e = error_feedback_update(g, e)
+        emitted = emitted + _deq(c["w"]["q"], c["w"]["scale"], g["w"].shape)
+    assert float(jnp.max(emitted[1:])) > 0.0
+
+
+def test_compress_decompress_tree_roundtrip():
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(5), (10, 30)),
+            "b": {"c": jax.random.normal(jax.random.PRNGKey(6), (7,))}}
+    out = decompress_gradients(compress_gradients(tree), tree)
+    for k, leaf in (("a", tree["a"]), ("c", tree["b"]["c"])):
+        got = out[k] if k == "a" else out["b"]["c"]
+        assert got.shape == leaf.shape
+        assert float(jnp.max(jnp.abs(got - leaf))) \
+            <= float(jnp.max(jnp.abs(leaf))) / 127.0 + 1e-7
+
+
+# ---------------------------------------------------------------------------
+# optimizers._quantize zero-absmax guard (regression)
+# ---------------------------------------------------------------------------
+
+def test_quantize_zero_init_state_regression():
+    # freshly-initialised optimizer state is all zeros; quantising it must
+    # not divide by zero (scale guard) and must round-trip to exact zeros,
+    # or the first offloaded AdamW step would start from NaN moments
+    m = jnp.zeros((1000,))
+    qm = _quantize(m)
+    back = _dequantize(qm, m.shape)
+    assert not bool(jnp.any(jnp.isnan(back)))
+    assert np.all(np.asarray(back) == 0.0)
+    assert back.shape == m.shape
+
+
+def test_quantize_mixed_zero_and_live_blocks():
+    # one all-zero block next to a live block: the guard must only touch
+    # the degenerate block's scale, leaving the live block's values intact
+    from repro.optim.optimizers import QBLOCK
+    x = jnp.concatenate([jnp.zeros((QBLOCK,)),
+                         jax.random.normal(jax.random.PRNGKey(7), (QBLOCK,))])
+    back = _dequantize(_quantize(x), x.shape)
+    assert np.all(np.asarray(back[:QBLOCK]) == 0.0)
+    live_err = float(jnp.max(jnp.abs(back[QBLOCK:] - x[QBLOCK:])))
+    assert live_err <= float(jnp.max(jnp.abs(x[QBLOCK:]))) / 127.0 + 1e-7

@@ -1,0 +1,273 @@
+"""Planner-managed optimizer-state offload: slot tagging, the packed
+opt arenas, lowering to OptPrefetch/OptSwapOut, backend replay, the
+check_optim_region verifier lane, update numerics vs the resident AdamW
+reference, and the serving admission accounting.
+"""
+
+import collections
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import MemoryPlanConfig, compile_plan
+from repro.core.optim_offload import (OptimRuntime, compressed_nbytes,
+                                      offloaded_update, optim_slot_specs,
+                                      plan_optim_offload)
+from repro.core.plan import Compute, ExecutionSchedule, OptPrefetch, OptSwapOut
+from repro.core.verify import (CHECKS, schedules_equivalent, verify_schedule)
+from repro.core.zoo import ZOO
+from repro.optim.optimizers import adamw
+
+CFG = dict(min_idle_phases=3, min_bytes=1 << 12)
+
+
+def _compile(model="lenet5", batch=8, **kw):
+    return compile_plan(ZOO[model](),
+                        MemoryPlanConfig(optim_offload=True, **CFG, **kw),
+                        batch=batch)
+
+
+def _batch(g, n, seed=0, classes=10):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (n,) + tuple(g.input_shape))
+    y = jax.nn.one_hot(jax.random.randint(ky, (n,), 0, classes), classes)
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# the plan: slots, arenas, pricing
+# ---------------------------------------------------------------------------
+
+def test_default_config_carries_no_optimizer_plan():
+    cp = compile_plan(ZOO["lenet5"](), MemoryPlanConfig(**CFG), batch=8)
+    assert cp.optim_plan is None
+    assert cp.optim_device_bytes == 0
+    assert not any(isinstance(op, (OptPrefetch, OptSwapOut))
+                   for op in cp.lowered.ops)
+    assert "optim" not in cp.report()
+
+
+def test_slots_cover_every_trainable_layer():
+    cp = _compile()
+    g = ZOO["lenet5"]()
+    opt = cp.optim_plan
+    owners = {l.name for l in g.layers
+              if l.trainable and l.weight_shapes()
+              and not l.shares_weights_with}
+    assert {s.layer for s in opt.slots} == owners
+    for s in opt.slots:
+        l = g.layer(s.layer)
+        assert s.name == f"O:{s.layer}"
+        assert s.nbytes == 2 * l.weight_nbytes()       # m and v, fp32
+        assert s.n_elems == s.nbytes // 4
+        assert s.host_nbytes == compressed_nbytes(s.n_elems)
+        assert s.prefetch_eo <= s.read_eo < s.swapout_eo
+
+
+def test_frozen_layers_get_no_slot():
+    cp = compile_plan(ZOO["resnet18_transfer"](),
+                      MemoryPlanConfig(optim_offload=True, **CFG), batch=8)
+    g = ZOO["resnet18_transfer"]()
+    frozen = {l.name for l in g.layers if not l.trainable}
+    assert frozen, "transfer model must freeze its backbone"
+    assert not frozen & {s.layer for s in cp.optim_plan.slots}
+
+
+def test_plan_reduction_and_compressed_host_pool():
+    cp = _compile("vgg16", batch=4)
+    opt = cp.optim_plan
+    opt.validate()
+    # the acceptance floor is measured on vgg16: working region vs all-
+    # resident moments, and int8+scales host copies vs the fp32 baseline
+    assert opt.reduction_x >= 3.0
+    assert opt.host_pool_bytes < opt.host_fp32_bytes
+    assert opt.ef_residual_host_bytes > 0          # EF stays host-side
+    assert opt.dma_bytes_per_step == sum(s.nbytes + s.host_nbytes
+                                         for s in opt.slots)
+    assert cp.report()["optim"]["reduction_x"] == opt.reduction_x
+
+
+def test_uncompressed_plan_prices_fp32_host_copies():
+    cp = compile_plan(ZOO["lenet5"](),
+                      MemoryPlanConfig(optim_offload=True,
+                                       optim_compress=False, **CFG), batch=8)
+    opt = cp.optim_plan
+    assert not opt.compress
+    for s in opt.slots:
+        assert s.host_nbytes == s.nbytes
+    assert opt.ef_residual_host_bytes == 0
+    assert opt.compress_flops_per_step == 0
+
+
+# ---------------------------------------------------------------------------
+# lowering + verification
+# ---------------------------------------------------------------------------
+
+def test_lowered_schedule_pairs_and_orders_opt_ops():
+    cp = _compile()
+    ops = cp.lowered.ops
+    pre = [op for op in ops if isinstance(op, OptPrefetch)]
+    out = [op for op in ops if isinstance(op, OptSwapOut)]
+    assert len(pre) == len(out) == len(cp.optim_plan.slots)
+    for p in pre:
+        o = next(o for o in out if o.tensor == p.tensor)
+        assert ops.index(p) < ops.index(o)
+        # the prefetch is resident across the CG update that reads it
+        assert p.eo <= p.read_eo < o.eo
+        assert p.host_nbytes <= p.nbytes            # compressed H2D payload
+
+
+def test_verifier_has_optim_region_check_and_passes():
+    assert "optim_region" in CHECKS
+    cp = _compile()
+    rep = verify_schedule(cp.ordered, cp.schedule, cp.plan, cp.lowered)
+    assert rep.ok and "optim_region" in rep.checks_run
+
+
+def test_corrupt_opt_offset_caught_only_by_optim_region():
+    cp = _compile()
+    p = next(op for op in cp.lowered.ops if isinstance(op, OptPrefetch))
+    from repro.core.planner import ALIGN
+    forged = ExecutionSchedule(ops=tuple(
+        dataclasses.replace(op, device_offset=op.device_offset + 2 * ALIGN)
+        if op is p else op for op in cp.lowered.ops))
+    rep = verify_schedule(cp.ordered, cp.schedule, cp.plan, forged)
+    assert not rep.ok
+    assert set(rep.check_ids()) == {"optim_region"}
+
+
+# ---------------------------------------------------------------------------
+# backend replay
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", ["sim", "async", "jit_blocks"])
+def test_backends_replay_opt_ops(executor):
+    cp = _compile()
+    g = ZOO["lenet5"]()
+    params = cp.init_params(jax.random.PRNGKey(0))
+    x, y = _batch(g, 8)
+    _, _, stats = cp.loss_and_grads(params, x, y, executor=executor)
+    n_slots = len(cp.optim_plan.slots)
+    assert stats.opt_prefetches == n_slots
+    assert stats.opt_swap_outs == n_slots
+    assert stats.opt_dma_bytes == sum(s.nbytes + s.host_nbytes
+                                      for s in cp.optim_plan.slots)
+    assert stats.opt_device_high_water <= cp.optim_plan.device_peak_bytes
+    if executor == "jit_blocks":
+        assert (collections.Counter(stats.replayed_ops)
+                == collections.Counter(cp.lowered.ops))
+        assert schedules_equivalent(cp.lowered, stats.replayed_ops,
+                                    ordered=cp.ordered, plan=cp.plan).ok
+        n_comp = sum(isinstance(op, Compute) for op in cp.lowered.ops)
+        assert stats.dispatch_calls < len(cp.lowered.ops)
+        assert stats.dispatch_calls >= len(cp.lowered.ops) - n_comp
+    else:
+        assert stats.replayed_ops == cp.lowered.ops
+
+
+# ---------------------------------------------------------------------------
+# update numerics vs the resident AdamW reference
+# ---------------------------------------------------------------------------
+
+def test_offloaded_update_tracks_reference_within_tolerance():
+    # compressed host copies with error feedback: both optimizers consume
+    # the same gradient stream; the drift is pure compression error
+    cp = _compile()
+    g = ZOO["lenet5"]()
+    params = cp.init_params(jax.random.PRNGKey(0))
+    rt = OptimRuntime(cp.optim_plan, g)
+    opt = adamw()
+    state = opt.init(params)
+    ref_p = off_p = params
+    for step in range(8):
+        x, y = _batch(g, 8, seed=100 + step)
+        _, grads, _ = cp.loss_and_grads(ref_p, x, y, executor="sim")
+        ref_p, state = opt.update(grads, state, ref_p)
+        off_p = offloaded_update(rt, off_p, grads)
+    drift = max(float(jnp.max(jnp.abs(ref_p[ln][wn] - off_p[ln][wn])))
+                for ln in ref_p for wn in ref_p[ln])
+    assert drift <= 2e-2, drift
+
+
+def test_first_offloaded_step_decodes_exact_zero_state():
+    # the host copy is stored in encoded (log-v) space: the first
+    # prefetch must decode to exact zero moments, or step 1 already
+    # diverges from the reference by O(1) in the v estimate
+    cp = _compile()
+    g = ZOO["lenet5"]()
+    params = cp.init_params(jax.random.PRNGKey(0))
+    rt = OptimRuntime(cp.optim_plan, g)
+    x, y = _batch(g, 8, seed=7)
+    _, grads, _ = cp.loss_and_grads(params, x, y, executor="sim")
+    opt = adamw()
+    ref_p, _ = opt.update(grads, opt.init(params), params)
+    off_p = offloaded_update(rt, params, grads)
+    err = max(float(jnp.max(jnp.abs(ref_p[ln][wn] - off_p[ln][wn])))
+              for ln in ref_p for wn in ref_p[ln])
+    assert err <= 1e-6, err
+
+
+def test_uncompressed_offload_matches_reference_to_float_noise():
+    cp = compile_plan(ZOO["lenet5"](),
+                      MemoryPlanConfig(optim_offload=True,
+                                       optim_compress=False, **CFG), batch=8)
+    g = ZOO["lenet5"]()
+    params = cp.init_params(jax.random.PRNGKey(0))
+    rt = OptimRuntime(cp.optim_plan, g)
+    opt = adamw()
+    state = opt.init(params)
+    ref_p = off_p = params
+    for step in range(3):
+        x, y = _batch(g, 8, seed=200 + step)
+        _, grads, _ = cp.loss_and_grads(ref_p, x, y, executor="sim")
+        ref_p, state = opt.update(grads, state, ref_p)
+        off_p = offloaded_update(rt, off_p, grads)
+    err = max(float(jnp.max(jnp.abs(ref_p[ln][wn] - off_p[ln][wn])))
+              for ln in ref_p for wn in ref_p[ln])
+    assert err <= 1e-5, err
+
+
+def test_offloaded_update_counts_stats():
+    from repro.core.exec.store import SwapExecStats
+    cp = _compile()
+    g = ZOO["lenet5"]()
+    params = cp.init_params(jax.random.PRNGKey(0))
+    rt = OptimRuntime(cp.optim_plan, g)
+    stats = SwapExecStats()
+    x, y = _batch(g, 8)
+    _, grads, _ = cp.loss_and_grads(params, x, y, executor="sim")
+    offloaded_update(rt, params, grads, stats)
+    n = len(cp.optim_plan.slots)
+    assert stats.opt_prefetches == n and stats.opt_swap_outs == n
+    assert stats.opt_dma_bytes == cp.optim_plan.dma_bytes_per_step
+    assert stats.opt_compressed_bytes == sum(
+        s.host_nbytes for s in cp.optim_plan.slots)
+
+
+# ---------------------------------------------------------------------------
+# serving admission accounting
+# ---------------------------------------------------------------------------
+
+def test_serve_derives_optim_accounting():
+    from repro.serve import PersonalizationService
+    g = ZOO["lenet5"]()
+    svc = PersonalizationService(
+        g, buckets=(8,), max_live_sessions=4,
+        config=MemoryPlanConfig(optim_offload=True, **CFG))
+    svc.warmup()
+    acct = svc.report()["optim_offload"]
+    assert acct["share_bytes"] < acct["share_resident_bytes"]
+    assert acct["sessions_in_resident_arena"] >= 4
+    assert acct["sessions_per_arena_x"] >= 1.0
+    assert acct["optim_device_bytes"] < acct["optim_resident_bytes"]
+
+
+def test_serve_without_offload_reports_no_optim_accounting():
+    from repro.serve import PersonalizationService
+    g = ZOO["lenet5"]()
+    svc = PersonalizationService(g, buckets=(8,), max_live_sessions=2,
+                                 config=MemoryPlanConfig(**CFG))
+    svc.warmup()
+    assert "optim_offload" not in svc.report()

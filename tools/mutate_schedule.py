@@ -23,6 +23,9 @@ budget_overflow     prefetch target beyond   budget
                     the packed arena peak
 misalign            offset off the ALIGN     alignment
                     grid
+corrupt_opt_offset  OptPrefetch working      optim_region
+                    buffer off its packed
+                    opt-arena slot
 hoist_compute       Compute hoisted before   dep_transfer_fence
                     the Prefetch feeding it
 drop_dep_edge       SwapOut permuted ahead   dep_edge
@@ -31,8 +34,11 @@ fuse_across_swap    forged FusedBlock        fusion_fence
                     spanning a SwapOut
 ==================  =======================  ==========================
 
-The first seven corrupt op *metadata* (offsets, phases, multiset) with
-positions intact — the residency/aliasing checkers' beat.  The last three
+The first eight corrupt op *metadata* (offsets, phases, multiset) with
+positions intact — the residency/aliasing checkers' beat
+(``corrupt_opt_offset`` targets the optimizer-offload lane: the reference
+plan compiles with ``optim_offload=True`` so its schedule carries real
+``OptPrefetch``/``OptSwapOut`` ops).  The last three
 corrupt op *positions* (or a fusion plan) with metadata intact — the
 dependence prover's beat (``repro.core.verify.deps``): a checker suite
 blind to either axis would pass one of the two families.
@@ -50,7 +56,7 @@ sys.path.insert(0, "src")
 
 from repro.core import MemoryPlanConfig, compile_plan   # noqa: E402
 from repro.core.plan import (Compute, ExecutionSchedule, Free,  # noqa: E402
-                             Prefetch, SwapOut)
+                             OptPrefetch, Prefetch, SwapOut)
 from repro.core.planner import ALIGN  # noqa: E402
 from repro.core.verify import (FusedBlock, FusionPlan,  # noqa: E402
                                verify_fusion, verify_schedule)
@@ -120,6 +126,18 @@ def mutate_misalign(ops):
         p, device_offset=p.device_offset + 3))
 
 
+def mutate_opt_offset(ops):
+    """OptPrefetch working buffer lands off its packed opt-arena slot.
+
+    The optimizer slots pack into their *own* device region, so the
+    activation-arena checkers (arena_alias walks ``X:`` placements) are
+    structurally blind to this — only ``check_optim_region``'s
+    op<->opt-placement comparison can fire."""
+    p = _first(ops, OptPrefetch)
+    return _replace_op(ops, p, dataclasses.replace(
+        p, device_offset=p.device_offset + 2 * ALIGN))
+
+
 def mutate_hoist_compute(ops):
     """A Compute hoisted before the Prefetch feeding it.
 
@@ -170,9 +188,11 @@ def reference_plan(model: str = "lenet5"):
         ZOO[model](),
         MemoryPlanConfig(planner="bestfit", host_planner="segregated",
                          min_idle_phases=3, min_bytes=1 << 12,
-                         cooptimize=False),
+                         cooptimize=False, optim_offload=True),
         batch=8)
     assert cp.lowered.transfers(), "reference plan must move data"
+    assert any(isinstance(op, OptPrefetch) for op in cp.lowered.ops), \
+        "reference plan must carry optimizer-offload ops"
     return cp
 
 
@@ -187,6 +207,7 @@ def mutations(cp):
         "budget_overflow": ("budget",
                             mutate_budget_overflow(cp.plan.arena_bytes)),
         "misalign": ("alignment", mutate_misalign),
+        "corrupt_opt_offset": ("optim_region", mutate_opt_offset),
         "hoist_compute": ("dep_transfer_fence", mutate_hoist_compute),
         "drop_dep_edge": ("dep_edge", mutate_drop_dep_edge),
     }
