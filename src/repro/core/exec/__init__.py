@@ -19,8 +19,8 @@ package.
 """
 
 from repro.core.exec.backends import (BACKENDS, AsyncDeviceBackend,
-                                      ExecutorBackend, SimulatedBackend,
-                                      get_backend,
+                                      ExecutorBackend, ScheduleCursor,
+                                      SimulatedBackend, get_backend,
                                       swap_planned_loss_and_grads)
 from repro.core.exec.layers import (init_params, layer_calc_derivative,
                                     layer_calc_gradient, layer_forward,
@@ -29,16 +29,18 @@ from repro.core.exec.layers import (init_params, layer_calc_derivative,
                                     reference_forward,
                                     reference_loss_and_grads, sgd_update)
 from repro.core.exec.store import (ActivationStore, DeviceStreamEngine,
-                                   HbmTracker, SwapExecStats, SyncHostEngine,
+                                   HbmTracker, SessionScopedEngine,
+                                   SwapExecStats, SyncHostEngine,
                                    TransferEngine)
 
 __all__ = [
     # backends
     "ExecutorBackend", "SimulatedBackend", "AsyncDeviceBackend",
     "BACKENDS", "get_backend", "swap_planned_loss_and_grads",
+    "ScheduleCursor",
     # store + engines
     "ActivationStore", "HbmTracker", "SwapExecStats", "TransferEngine",
-    "SyncHostEngine", "DeviceStreamEngine",
+    "SyncHostEngine", "DeviceStreamEngine", "SessionScopedEngine",
     # layer math
     "init_params", "layer_forward", "layer_calc_gradient",
     "layer_calc_derivative", "loss_forward", "loss_derivative",

@@ -236,6 +236,226 @@ def _check_opt_high_water(plan, stats: SwapExecStats) -> None:
             f"bytes")
 
 
+class ScheduleCursor:
+    """Resumable replay of one lowered schedule, preemptible at phase
+    boundaries.
+
+    Produced by :meth:`_ReplayBackend.start` (which runs the same verified
+    admission as :meth:`run` — a cursor never exists for an unverified
+    plan-backed schedule).  :meth:`advance` executes exactly one *phase*
+    (every op sharing one EO: prefetches, the compute, swap-outs, frees)
+    and returns True while phases remain; the phase boundary is the
+    natural preemption point the serve-layer :class:`StepScheduler`
+    round-robins sessions at, because all of this phase's DMA has been
+    *issued* but need not be *fenced* until a later phase computes.
+
+    After the last phase, :meth:`result` returns ``(loss, grads, stats)``
+    with the same end-of-run drain, high-water assertions and stats
+    finalisation ``run()`` has always performed.  :meth:`abort` abandons a
+    step mid-flight: this cursor's in-flight transfers are fenced (so a
+    shared engine holds no dangling references into the dead store) and
+    every activation reference is dropped, making the session's arena
+    share immediately reusable.
+
+    ``stats.wall_time_s`` accumulates only the time spent *inside*
+    ``advance``/``result`` — under interleaving, the wall-clock a session
+    spends preempted is other tenants' compute, not this step's cost.
+    """
+
+    def __init__(self, backend: "_ReplayBackend", graph: LayerGraph,
+                 params, x, label, *, schedule: OffloadSchedule,
+                 ordered: OrderedTensors, plan, lowered, mask,
+                 engine: TransferEngine, sanitizer, tag: str = ""):
+        import time as _time
+
+        self._clock = _time.perf_counter
+        self.backend = backend
+        self.graph = graph
+        self.schedule = schedule
+        self.ordered = ordered
+        self.plan = plan
+        self.lowered = lowered
+        self.tag = tag
+        self.engine = engine
+        self.sanitizer = sanitizer
+        self.stats = SwapExecStats(backend=backend.name)
+        self.stats.inplace_prefetches = sum(
+            1 for d in schedule.decisions if d.inplace)
+        self.hbm = HbmTracker()
+        self.store = ActivationStore(ordered, self.hbm, engine=engine)
+        self.store.device["__input__"] = x
+        self.env = _ComputeEnv(graph, params, label, mask,
+                               get=lambda n: self.store.get(n, self.stats),
+                               put=self.store.put)
+        self._replayed: List[Any] = []
+        self._inflight = 0
+        self._opt_resident = 0
+        self._done_at: Dict[int, int] = {}
+        self._opt_fence_at: Dict[int, List[str]] = {}
+        self._retired_eo = -1
+        # phase groups: runs of ops sharing one EO, in schedule order
+        self._phases: List[List[Tuple[int, Any]]] = []
+        cur_eo = None
+        for i, op in enumerate(lowered.ops):
+            if cur_eo is None or op.eo != cur_eo:
+                self._phases.append([])
+                cur_eo = op.eo
+            self._phases[-1].append((i, op))
+        self._next_phase = 0
+        self._finished = False
+        self.aborted = False
+        self.last_advance_s = 0.0
+        self._result: Optional[Tuple] = None
+
+    # ------------------------------------------------------------ driving
+    @property
+    def phases_total(self) -> int:
+        return len(self._phases)
+
+    @property
+    def phases_done(self) -> int:
+        return self._next_phase
+
+    @property
+    def has_inflight_dma(self) -> bool:
+        """True while this cursor has issued-but-unfenced transfers —
+        the condition under which another session's compute hides them."""
+        return bool(getattr(self.engine, "has_inflight", False)
+                    or getattr(self.engine, "inflight_bytes", 0)
+                    or getattr(self.engine, "opt_inflight_bytes", 0))
+
+    def advance(self) -> bool:
+        """Execute one phase; True while more phases remain."""
+        if self._finished:
+            return False
+        t0 = self._clock()
+        for op_index, op in self._phases[self._next_phase]:
+            self._exec_op(op, op_index)
+        self._next_phase += 1
+        self.last_advance_s = self._clock() - t0
+        self.stats.wall_time_s += self.last_advance_s
+        if self._next_phase >= len(self._phases):
+            self._finish()
+            return False
+        return True
+
+    def result(self):
+        """``(loss, grads, stats)`` — only after the cursor is exhausted."""
+        if not self._finished or self._result is None:
+            raise RuntimeError(
+                "ScheduleCursor.result() before the cursor finished"
+                + (" (aborted)" if self.aborted else ""))
+        return self._result
+
+    def abort(self) -> None:
+        """Abandon the step at a phase boundary (mid-step kill): fence this
+        session's in-flight transfers and release every activation
+        reference.  The cursor yields no result."""
+        if self._finished:
+            return
+        self.engine.drain(self.stats)
+        self.store.device.clear()
+        self.store.host.clear()
+        self.store.alive.clear()
+        self._finished = True
+        self.aborted = True
+
+    # ----------------------------------------------------------- op body
+    def _exec_op(self, op, op_index: int) -> None:
+        from repro.core.plan import (Compute, Free, OptPrefetch, OptSwapOut,
+                                     Prefetch, SwapOut)
+
+        stats, store = self.stats, self.store
+        if isinstance(op, OptPrefetch):
+            # optimizer working state lands in its own device region; the
+            # numerical dance (dequantize, AdamW update, EF requantize)
+            # runs in repro.core.optim_offload — the replay accounts
+            # residency/bus traffic and, on real-stream engines, issues
+            # the H2D of the compressed host copy *now* and fences it at
+            # the first Compute of its read EO, so the opt DMA hides
+            # behind the compute dispatched in between
+            self._opt_resident += op.nbytes
+            stats.opt_device_high_water = max(
+                stats.opt_device_high_water, self._opt_resident)
+            stats.opt_prefetches += 1
+            stats.opt_dma_bytes += op.host_nbytes
+            self.engine.opt_swap_in(op.tensor, op.nbytes, op.host_nbytes,
+                                    stats)
+            self._opt_fence_at.setdefault(op.read_eo, []).append(op.tensor)
+            self._replayed.append(op)
+        elif isinstance(op, OptSwapOut):
+            self._opt_resident -= op.nbytes
+            stats.opt_swap_outs += 1
+            stats.opt_dma_bytes += op.nbytes
+            stats.opt_compressed_bytes += op.host_nbytes
+            self._replayed.append(op)
+        elif isinstance(op, Prefetch):
+            if op.tensor in store.alive:
+                return  # late swap-in already brought it back
+            store.swap_in(op.tensor, stats)
+            self._inflight += op.nbytes
+            self._done_at[op.read_eo] = \
+                self._done_at.get(op.read_eo, 0) + op.nbytes
+            stats.peak_inflight_prefetch = max(
+                stats.peak_inflight_prefetch, self._inflight)
+            self._replayed.append(op)
+        elif isinstance(op, Compute):
+            # prefetches issued at earlier phases complete by their read
+            # EO: retire their double-buffer slots at the phase boundary,
+            # and fence optimizer slots whose read EO has arrived
+            if op.eo > self._retired_eo:
+                for eo in list(self._done_at):
+                    if eo <= op.eo:
+                        self._inflight -= self._done_at.pop(eo)
+                for eo in list(self._opt_fence_at):
+                    if eo <= op.eo:
+                        for owner in self._opt_fence_at.pop(eo):
+                            self.engine.opt_fence(owner, stats)
+                self._retired_eo = op.eo
+            self.env.step(op)
+            self._replayed.append(op)
+        elif isinstance(op, SwapOut):
+            if op.tensor in store.alive:
+                store.swap_out(op.tensor, stats)
+                self._replayed.append(op)
+        elif isinstance(op, Free):
+            store.free_owner(op.tensor)
+            self._replayed.append(op)
+        if self.sanitizer is not None:
+            self.sanitizer.step(op)
+            self.sanitizer.cross_check(store.alive, op_index)
+            stats.sanitizer_checks += 1
+
+    # ---------------------------------------------------------- finalise
+    def _finish(self) -> None:
+        t0 = self._clock()
+        stats, plan = self.stats, self.plan
+        self.engine.drain(stats)
+        stats.wall_time_s += self._clock() - t0
+        stats.hbm_high_water = self.hbm.high_water
+        stats.host_high_water = self.store.host_pool.high_water
+        stats.replayed_ops = tuple(self._replayed)
+        stats.dispatch_calls = len(self._replayed)
+        self.backend._finalize_stats(stats, self.engine)
+        self.backend._last_stats = stats
+        self.backend._planned_inflight = self.schedule.peak_inflight_prefetch
+        if plan is not None:
+            stats.planned_peak = plan.activation_residency_peak()
+            stats.planned_host_pool = plan.host_pool_bytes
+            if stats.hbm_high_water > stats.planned_peak:
+                raise AssertionError(
+                    f"swap executor exceeded the planned residency peak: "
+                    f"{stats.hbm_high_water} > {stats.planned_peak} bytes")
+            if stats.host_high_water > stats.planned_host_pool:
+                raise AssertionError(
+                    f"swap executor exceeded the packed host pool: "
+                    f"{stats.host_high_water} > {stats.planned_host_pool} "
+                    f"bytes")
+        _check_opt_high_water(plan, stats)
+        self._finished = True
+        self._result = (self.env.loss_val, self.env.grads, stats)
+
+
 class _ReplayBackend:
     """Shared interpreter: walk the compiled op list, account residency.
 
@@ -258,15 +478,23 @@ class _ReplayBackend:
     def make_engine(self) -> TransferEngine:
         raise NotImplementedError
 
-    # ------------------------------------------------------------------ run
-    def run(self, graph: LayerGraph, params, x, label, *,
-            schedule: OffloadSchedule,
-            ordered: Optional[OrderedTensors] = None,
-            plan=None, lowered=None, mask=None):
-        import time as _time
+    # ---------------------------------------------------------------- start
+    def start(self, graph: LayerGraph, params, x, label, *,
+              schedule: OffloadSchedule,
+              ordered: Optional[OrderedTensors] = None,
+              plan=None, lowered=None, mask=None,
+              engine: Optional[TransferEngine] = None,
+              tag: str = "") -> ScheduleCursor:
+        """Admit a schedule and return a resumable :class:`ScheduleCursor`.
 
-        from repro.core.plan import (Compute, Free, OptPrefetch, OptSwapOut,
-                                     Prefetch, SwapOut, lower_schedule)
+        This is the preemptible entry point the phase-interleaved serve
+        scheduler drives: the same verified admission as :meth:`run`, but
+        the caller chooses when each phase executes (and may supply a
+        shared ``engine`` — e.g. a session-scoped view over one
+        :class:`DeviceStreamEngine` — so several cursors' DMAs interleave
+        on one device stream).
+        """
+        from repro.core.plan import lower_schedule
         from repro.core.verify import (StaticResidencyModel, is_verified,
                                        mark_verified, verify_schedule)
         if ordered is None:
@@ -281,97 +509,25 @@ class _ReplayBackend:
                             lowered).raise_if_errors()
             mark_verified(lowered)
         sanitizer = StaticResidencyModel(ordered) if self.sanitize else None
-        t_run0 = _time.perf_counter()
-        stats = SwapExecStats(backend=self.name)
-        stats.inplace_prefetches = sum(
-            1 for d in schedule.decisions if d.inplace)
-        engine = self.make_engine()
-        hbm = HbmTracker()
-        store = ActivationStore(ordered, hbm, engine=engine)
-        store.device["__input__"] = x
+        if engine is None:
+            engine = self.make_engine()
+        return ScheduleCursor(self, graph, params, x, label,
+                              schedule=schedule, ordered=ordered, plan=plan,
+                              lowered=lowered, mask=mask, engine=engine,
+                              sanitizer=sanitizer, tag=tag)
 
-        env = _ComputeEnv(graph, params, label, mask,
-                          get=lambda n: store.get(n, stats),
-                          put=store.put)
-        replayed: List[Any] = []
-        inflight = 0
-        opt_resident = 0                  # optimizer working-region bytes
-        done_at: Dict[int, int] = {}      # read EO -> prefetched bytes retiring
-        retired_eo = -1
-
-        for op_index, op in enumerate(lowered.ops):
-            if isinstance(op, OptPrefetch):
-                # optimizer working state lands in its own device region;
-                # the numerical dance (dequantize, AdamW update, EF
-                # requantize) runs in repro.core.optim_offload — here the
-                # replay accounts residency and bus traffic so op-list
-                # equality gates cover the optimizer lane too
-                opt_resident += op.nbytes
-                stats.opt_device_high_water = max(
-                    stats.opt_device_high_water, opt_resident)
-                stats.opt_prefetches += 1
-                stats.opt_dma_bytes += op.host_nbytes
-                replayed.append(op)
-            elif isinstance(op, OptSwapOut):
-                opt_resident -= op.nbytes
-                stats.opt_swap_outs += 1
-                stats.opt_dma_bytes += op.nbytes
-                stats.opt_compressed_bytes += op.host_nbytes
-                replayed.append(op)
-            elif isinstance(op, Prefetch):
-                if op.tensor in store.alive:
-                    continue  # late swap-in already brought it back
-                store.swap_in(op.tensor, stats)
-                inflight += op.nbytes
-                done_at[op.read_eo] = done_at.get(op.read_eo, 0) + op.nbytes
-                stats.peak_inflight_prefetch = max(
-                    stats.peak_inflight_prefetch, inflight)
-                replayed.append(op)
-            elif isinstance(op, Compute):
-                # prefetches issued at earlier phases complete by their read
-                # EO: retire their double-buffer slots at the phase boundary
-                if op.eo > retired_eo:
-                    for eo in list(done_at):
-                        if eo <= op.eo:
-                            inflight -= done_at.pop(eo)
-                    retired_eo = op.eo
-                env.step(op)
-                replayed.append(op)
-            elif isinstance(op, SwapOut):
-                if op.tensor in store.alive:
-                    store.swap_out(op.tensor, stats)
-                    replayed.append(op)
-            elif isinstance(op, Free):
-                store.free_owner(op.tensor)
-                replayed.append(op)
-            if sanitizer is not None:
-                sanitizer.step(op)
-                sanitizer.cross_check(store.alive, op_index)
-                stats.sanitizer_checks += 1
-
-        engine.drain(stats)
-        stats.wall_time_s = _time.perf_counter() - t_run0
-        stats.hbm_high_water = hbm.high_water
-        stats.host_high_water = store.host_pool.high_water
-        stats.replayed_ops = tuple(replayed)
-        stats.dispatch_calls = len(replayed)
-        self._finalize_stats(stats, engine)
-        self._last_stats = stats
-        self._planned_inflight = schedule.peak_inflight_prefetch
-        if plan is not None:
-            stats.planned_peak = plan.activation_residency_peak()
-            stats.planned_host_pool = plan.host_pool_bytes
-            if stats.hbm_high_water > stats.planned_peak:
-                raise AssertionError(
-                    f"swap executor exceeded the planned residency peak: "
-                    f"{stats.hbm_high_water} > {stats.planned_peak} bytes")
-            if stats.host_high_water > stats.planned_host_pool:
-                raise AssertionError(
-                    f"swap executor exceeded the packed host pool: "
-                    f"{stats.host_high_water} > {stats.planned_host_pool} "
-                    f"bytes")
-        _check_opt_high_water(plan, stats)
-        return env.loss_val, env.grads, stats
+    # ------------------------------------------------------------------ run
+    def run(self, graph: LayerGraph, params, x, label, *,
+            schedule: OffloadSchedule,
+            ordered: Optional[OrderedTensors] = None,
+            plan=None, lowered=None, mask=None,
+            engine: Optional[TransferEngine] = None):
+        cursor = self.start(graph, params, x, label, schedule=schedule,
+                            ordered=ordered, plan=plan, lowered=lowered,
+                            mask=mask, engine=engine)
+        while cursor.advance():
+            pass
+        return cursor.result()
 
     def _finalize_stats(self, stats: SwapExecStats,
                         engine: TransferEngine) -> None:
@@ -444,12 +600,17 @@ class AsyncDeviceBackend(_ReplayBackend):
 
     def _finalize_stats(self, stats: SwapExecStats,
                         engine: TransferEngine) -> None:
-        assert isinstance(engine, DeviceStreamEngine)
-        stats.inflight_high_water = engine.inflight_high_water
-        stats.fences = engine.fences
-        stats.stalled_fences = engine.stalled_fences
-        stats.achieved_overlap = (engine.ready_fences / engine.fences
-                                  if engine.fences else None)
+        # fences/stalled_fences accumulate per call on the stats record
+        # (so a session-scoped view over a shared engine still yields
+        # per-session numbers); the engine contributes its in-flight
+        # high-water marks — a SessionScopedEngine reports per-session
+        # marks, a raw DeviceStreamEngine the whole stream's
+        stats.inflight_high_water = getattr(engine, "inflight_high_water", 0)
+        stats.opt_inflight_high_water = getattr(
+            engine, "opt_inflight_high_water", 0)
+        stats.achieved_overlap = (
+            (stats.fences - stats.stalled_fences) / stats.fences
+            if stats.fences else None)
 
     def report(self) -> Dict[str, Any]:
         out = super().report()
@@ -466,6 +627,18 @@ class AsyncDeviceBackend(_ReplayBackend):
             # <= 1.0 means the stream never held more than planned
             "inflight_vs_planned": (s.inflight_high_water / planned
                                     if planned else None),
+            # measured bus-time split: seconds the activation DMAs ran
+            # hidden under dispatched compute vs seconds consumer fences
+            # actually blocked — and the same split for the optimizer
+            # lane, whose OptPrefetch H2D now streams on the real engine
+            "hidden_dma_s": s.hidden_dma_s,
+            "exposed_dma_s": s.exposed_dma_s,
+            "opt_hidden_dma_s": s.opt_hidden_dma_s,
+            "opt_exposed_dma_s": s.opt_exposed_dma_s,
+            "opt_fences": s.opt_fences,
+            "opt_stalled_fences": s.opt_stalled_fences,
+            "opt_inflight_high_water": s.opt_inflight_high_water,
+            "cross_hidden_dma_s": s.cross_hidden_dma_s,
         })
         return out
 

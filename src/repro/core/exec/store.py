@@ -79,6 +79,23 @@ class SwapExecStats:
     opt_dma_bytes: int = 0
     opt_compressed_bytes: int = 0  # host-side bytes after quantization
     opt_device_high_water: int = 0 # peak resident optimizer working bytes
+    # ---- measured bus-time split (device-stream engines only) ----
+    # activation lane: seconds each prefetch spent in flight before its
+    # consumer fence (hidden behind dispatched compute) vs seconds the
+    # fence actually blocked (exposed on the critical path)
+    hidden_dma_s: float = 0.0
+    exposed_dma_s: float = 0.0
+    # optimizer lane, same split: OptPrefetch H2D issued at its scheduled
+    # EO and fenced at the first Compute of its read EO
+    opt_hidden_dma_s: float = 0.0
+    opt_exposed_dma_s: float = 0.0
+    opt_fences: int = 0            # optimizer-lane consumer fences
+    opt_stalled_fences: int = 0    # opt fences that actually had to block
+    opt_inflight_high_water: int = 0  # peak issued-but-unfenced opt bytes
+    # portion of hidden_dma_s that elapsed while *another* session held
+    # the compute slot — credited by the phase-interleaved StepScheduler
+    # (repro.serve.scheduler); 0.0 for single-session runs
+    cross_hidden_dma_s: float = 0.0
 
 
 class HbmTracker:
@@ -118,6 +135,15 @@ class TransferEngine(Protocol):
 
     def drain(self, stats: SwapExecStats) -> None: ...
 
+    # Optimizer-lane streaming (optional: engines without real streams
+    # implement both as no-ops).  ``opt_swap_in`` issues the H2D copy of
+    # one slot's compressed host bytes at its scheduled EO;
+    # ``opt_fence`` blocks at the consuming Compute.
+    def opt_swap_in(self, owner: str, nbytes: int, host_nbytes: int,
+                    stats: SwapExecStats) -> None: ...
+
+    def opt_fence(self, owner: str, stats: SwapExecStats) -> None: ...
+
 
 class SyncHostEngine:
     """Synchronous host round trips (simulated DMA, bit-for-bit stable).
@@ -125,22 +151,58 @@ class SyncHostEngine:
     ``np.asarray`` blocks until the device buffer is materialised on host;
     ``jnp.asarray`` blocks the other way.  Nothing is ever in flight, so
     fences are free and the measured overlap is undefined (None).
+
+    ``bus_gbps`` (default None = off) applies the same emulated-bus model
+    as :class:`DeviceStreamEngine`, but synchronously: a blocking engine
+    occupies the bus for the transfer's full duration *at the transfer*,
+    so every byte of bus time is exposed wall-clock.  This is the honest
+    baseline cost the async engines exist to hide.  Numerics untouched.
     """
 
     name = "sync_host"
 
+    def __init__(self, bus_gbps=None, bus_latency_s=0.0):
+        import time as _time
+        if bus_gbps is not None and bus_gbps <= 0:
+            raise ValueError("bus_gbps must be positive (or None = off)")
+        if bus_latency_s < 0:
+            raise ValueError("bus_latency_s must be non-negative")
+        self.bus_gbps = bus_gbps
+        self.bus_latency_s = bus_latency_s
+        self._sleep = _time.sleep
+
+    def _bus_block(self, nbytes: int) -> None:
+        # a blocking engine is queue-depth-1 storage I/O: every access
+        # pays the full device latency, then the serial transfer
+        if self.bus_gbps is not None and nbytes > 0:
+            self._sleep(self.bus_latency_s
+                        + nbytes / (self.bus_gbps * 1e9))
+
     def swap_out(self, owner: str, members: Dict[str, jax.Array],
                  nbytes: int) -> Dict[str, Any]:
-        return {m: np.asarray(a) for m, a in members.items()}
+        out = {m: np.asarray(a) for m, a in members.items()}
+        self._bus_block(nbytes)
+        return out
 
     def swap_in(self, owner: str, members: Dict[str, Any],
                 nbytes: int) -> Dict[str, jax.Array]:
-        return {m: jnp.asarray(h) for m, h in members.items()}
+        arrays = {m: jnp.asarray(h) for m, h in members.items()}
+        self._bus_block(nbytes)
+        return arrays
 
     def fence(self, owner: str, stats: SwapExecStats) -> None:
         pass
 
     def drain(self, stats: SwapExecStats) -> None:
+        pass
+
+    def opt_swap_in(self, owner: str, nbytes: int, host_nbytes: int,
+                    stats: SwapExecStats) -> None:
+        # nothing is ever in flight, but the blocking bus still carries
+        # the compressed optimizer image synchronously when paced
+        self._bus_block(host_nbytes)
+
+    def opt_fence(self, owner: str, stats: SwapExecStats) -> None:
         pass
 
 
@@ -177,11 +239,33 @@ class DeviceStreamEngine:
     * ``ready_fences / fences`` — the achieved overlap fraction: a fence
       that finds its transfer complete means the DMA fully hid behind the
       compute dispatched since the issue EO.
+
+    ``bus_gbps`` (default None = off) emulates the paper's narrow
+    storage/host bus on hardware that has none (a CPU host, where
+    ``device_put`` is a memcpy): every transfer occupies one serialized
+    bus for ``nbytes / bus_gbps`` seconds from issue, and a fence that
+    arrives before its transfer's completion time sleeps out the
+    remainder (landing in ``exposed_dma_s``, exactly like a real stall).
+    A fence that arrives *after* completion pays nothing — so compute
+    dispatched between issue and fence, whether the session's own or
+    another session's under the phase-interleaved scheduler, genuinely
+    hides the bus time in wall-clock terms.  The sim/async numerics are
+    untouched; only the clock is.
     """
 
     name = "device_stream"
 
-    def __init__(self, device=None):
+    def __init__(self, device=None, bus_gbps=None, bus_latency_s=0.0):
+        import time as _time
+        self._clock = _time.perf_counter
+        self._sleep = _time.sleep
+        if bus_gbps is not None and bus_gbps <= 0:
+            raise ValueError("bus_gbps must be positive (or None = off)")
+        if bus_latency_s < 0:
+            raise ValueError("bus_latency_s must be non-negative")
+        self.bus_gbps = bus_gbps
+        self.bus_latency_s = bus_latency_s
+        self._bus_free_at = 0.0      # emulated serialized-bus availability
         self.device = device if device is not None else jax.devices()[0]
         kind = _host_memory_kind(self.device)
         Single = jax.sharding.SingleDeviceSharding
@@ -189,7 +273,9 @@ class DeviceStreamEngine:
         self.host_sharding = (Single(self.device, memory_kind=kind)
                               if kind else Single(self.device))
         self.host_memory_kind = kind
-        self._inflight: Dict[str, Tuple[int, List[jax.Array]]] = {}
+        # owner -> (nbytes, arrays, issue timestamp, emulated ready time)
+        self._inflight: Dict[str, Tuple[int, List[jax.Array], float,
+                                        float]] = {}
         self.inflight_bytes = 0
         self.inflight_high_water = 0
         self.fences = 0
@@ -197,6 +283,30 @@ class DeviceStreamEngine:
         self.stalled_fences = 0
         self.d2h_issued = 0
         self.h2d_issued = 0
+        # optimizer lane: one reusable host-resident byte image per slot
+        # (sized like the compressed copy the codec would store) so the
+        # H2D prefetch moves real bus bytes at the scheduled EO
+        self._opt_host: Dict[str, jax.Array] = {}
+        self._opt_inflight: Dict[str, Tuple[int, jax.Array, float,
+                                            float]] = {}
+        self.opt_inflight_bytes = 0
+        self.opt_inflight_high_water = 0
+
+    def _bus_schedule(self, nbytes: int) -> float:
+        """Reserve the emulated bus for ``nbytes``; returns the completion
+        time (0.0 with pacing off).  The bus is serialized: a transfer
+        starts when the previous one finishes, like one DMA queue.
+
+        ``bus_latency_s`` models the storage access latency: a transfer
+        issued to an *idle* bus pays it in full, but one queued behind
+        an earlier transfer overlaps its access setup with that
+        transfer's data movement — the amortization a deep DMA/NCQ queue
+        buys and a blocking (queue-depth-1) engine never gets."""
+        if self.bus_gbps is None:
+            return 0.0
+        start = max(self._clock() + self.bus_latency_s, self._bus_free_at)
+        self._bus_free_at = start + nbytes / (self.bus_gbps * 1e9)
+        return self._bus_free_at
 
     # ------------------------------------------------------------- issue
     def swap_out(self, owner: str, members: Dict[str, jax.Array],
@@ -205,6 +315,9 @@ class DeviceStreamEngine:
         for m, a in members.items():
             out[m] = jax.device_put(a, self.host_sharding, donate=True)
             self.d2h_issued += 1
+        # the d2h copy occupies the emulated bus too; its cost surfaces
+        # through the completion times of the transfers queued behind it
+        self._bus_schedule(nbytes)
         return out
 
     def swap_in(self, owner: str, members: Dict[str, Any],
@@ -214,33 +327,181 @@ class DeviceStreamEngine:
             arrays[m] = jax.device_put(h, self.device_sharding)
             self.h2d_issued += 1
         if arrays:
-            self._inflight[owner] = (nbytes, list(arrays.values()))
+            self._inflight[owner] = (nbytes, list(arrays.values()),
+                                     self._clock(),
+                                     self._bus_schedule(nbytes))
             self.inflight_bytes += nbytes
             self.inflight_high_water = max(self.inflight_high_water,
                                            self.inflight_bytes)
         return arrays
+
+    def opt_swap_in(self, owner: str, nbytes: int, host_nbytes: int,
+                    stats: SwapExecStats) -> None:
+        if owner in self._opt_inflight:      # already streaming this slot
+            return
+        host = self._opt_host.get(owner)
+        if host is None or host.nbytes != host_nbytes:
+            host = jax.device_put(
+                np.zeros(max(1, host_nbytes), np.uint8), self.host_sharding)
+            self._opt_host[owner] = host
+        arr = jax.device_put(host, self.device_sharding)
+        self.h2d_issued += 1
+        self._opt_inflight[owner] = (host_nbytes, arr, self._clock(),
+                                     self._bus_schedule(host_nbytes))
+        self.opt_inflight_bytes += host_nbytes
+        self.opt_inflight_high_water = max(self.opt_inflight_high_water,
+                                           self.opt_inflight_bytes)
 
     # ------------------------------------------------------------- fence
     def fence(self, owner: str, stats: SwapExecStats) -> None:
         entry = self._inflight.pop(owner, None)
         if entry is None:
             return
-        nbytes, arrays = entry
+        nbytes, arrays, issued, ready_at = entry
+        t0 = self._clock()
         ready = all(a.is_ready() for a in arrays
-                    if hasattr(a, "is_ready"))
+                    if hasattr(a, "is_ready")) and t0 >= ready_at
         jax.block_until_ready(arrays)
+        if ready_at > 0.0:
+            left = ready_at - self._clock()
+            if left > 0:
+                self._sleep(left)        # emulated bus stall -> exposed
         self.inflight_bytes -= nbytes
         self.fences += 1
+        stats.fences += 1
+        stats.hidden_dma_s += t0 - issued
+        stats.exposed_dma_s += self._clock() - t0
         if ready:
             self.ready_fences += 1
         else:
             self.stalled_fences += 1
-        stats.fences = self.fences
-        stats.stalled_fences = self.stalled_fences
+            stats.stalled_fences += 1
+
+    def opt_fence(self, owner: str, stats: SwapExecStats) -> None:
+        entry = self._opt_inflight.pop(owner, None)
+        if entry is None:
+            return
+        host_nbytes, arr, issued, ready_at = entry
+        t0 = self._clock()
+        ready = (arr.is_ready() if hasattr(arr, "is_ready") else True) \
+            and t0 >= ready_at
+        jax.block_until_ready(arr)
+        if ready_at > 0.0:
+            left = ready_at - self._clock()
+            if left > 0:
+                self._sleep(left)
+        self.opt_inflight_bytes -= host_nbytes
+        stats.opt_fences += 1
+        stats.opt_hidden_dma_s += t0 - issued
+        stats.opt_exposed_dma_s += self._clock() - t0
+        if not ready:
+            stats.opt_stalled_fences += 1
 
     def drain(self, stats: SwapExecStats) -> None:
         for owner in list(self._inflight):
             self.fence(owner, stats)
+        for owner in list(self._opt_inflight):
+            self.opt_fence(owner, stats)
+
+
+class SessionScopedEngine:
+    """Per-session view over one shared :class:`DeviceStreamEngine`.
+
+    The phase-interleaved scheduler (:mod:`repro.serve.scheduler`) runs N
+    sessions' cursors through a *single* device-stream engine so one
+    tenant's DMA can hide under another's compute.  Every session replays
+    the same compiled plan, so owner names collide across sessions; this
+    wrapper namespaces them with the session scope and tracks which
+    transfers belong to this session, so ``drain`` (end of step, or an
+    abort after a mid-step kill) fences only this session's in-flight
+    copies and never another tenant's.
+
+    Per-session ``inflight_bytes`` / high-water marks are kept here — the
+    shared engine's counters aggregate the whole device, which is the
+    wrong denominator for a per-session stats record.
+    """
+
+    name = "session_scoped"
+
+    def __init__(self, inner: DeviceStreamEngine, scope: str):
+        self.inner = inner
+        self.scope = scope
+        self.host_memory_kind = getattr(inner, "host_memory_kind", None)
+        self._sizes: Dict[str, int] = {}       # outstanding owner -> bytes
+        self._opt_sizes: Dict[str, int] = {}
+        self.inflight_bytes = 0
+        self.inflight_high_water = 0
+        self.opt_inflight_bytes = 0
+        self.opt_inflight_high_water = 0
+
+    def _k(self, owner: str) -> str:
+        return f"{self.scope}\x1f{owner}"
+
+    def swap_out(self, owner: str, members: Dict[str, jax.Array],
+                 nbytes: int) -> Dict[str, Any]:
+        return self.inner.swap_out(self._k(owner), members, nbytes)
+
+    def swap_in(self, owner: str, members: Dict[str, Any],
+                nbytes: int) -> Dict[str, jax.Array]:
+        arrays = self.inner.swap_in(self._k(owner), members, nbytes)
+        if arrays:
+            self._sizes[owner] = nbytes
+            self.inflight_bytes += nbytes
+            self.inflight_high_water = max(self.inflight_high_water,
+                                           self.inflight_bytes)
+        return arrays
+
+    def fence(self, owner: str, stats: SwapExecStats) -> None:
+        self.inner.fence(self._k(owner), stats)
+        nbytes = self._sizes.pop(owner, None)
+        if nbytes is not None:
+            self.inflight_bytes -= nbytes
+
+    def opt_swap_in(self, owner: str, nbytes: int, host_nbytes: int,
+                    stats: SwapExecStats) -> None:
+        if owner in self._opt_sizes:
+            return
+        self.inner.opt_swap_in(self._k(owner), nbytes, host_nbytes, stats)
+        self._opt_sizes[owner] = host_nbytes
+        self.opt_inflight_bytes += host_nbytes
+        self.opt_inflight_high_water = max(self.opt_inflight_high_water,
+                                           self.opt_inflight_bytes)
+
+    def opt_fence(self, owner: str, stats: SwapExecStats) -> None:
+        self.inner.opt_fence(self._k(owner), stats)
+        host_nbytes = self._opt_sizes.pop(owner, None)
+        if host_nbytes is not None:
+            self.opt_inflight_bytes -= host_nbytes
+
+    def drain(self, stats: SwapExecStats) -> None:
+        """Fence everything *this session* still has in flight."""
+        for owner in list(self._sizes):
+            self.fence(owner, stats)
+        for owner in list(self._opt_sizes):
+            self.opt_fence(owner, stats)
+
+    @property
+    def has_inflight(self) -> bool:
+        return bool(self._sizes or self._opt_sizes)
+
+    @property
+    def next_ready_at(self) -> float:
+        """Emulated-bus completion time of this session's *oldest*
+        in-flight transfer (0.0 when nothing is pacing): the scheduler's
+        stall-risk signal.  Prefetches are issued and consumed in EO
+        order, so the next fence this session hits is approximately its
+        oldest outstanding transfer — if that one is complete, the next
+        phase advance cannot stall, however deep the issue-ahead is."""
+        oldest = float("inf")
+        for owner in self._sizes:
+            entry = self.inner._inflight.get(self._k(owner))
+            if entry is not None:
+                oldest = min(oldest, entry[3])
+        for owner in self._opt_sizes:
+            entry = self.inner._opt_inflight.get(self._k(owner))
+            if entry is not None:
+                oldest = min(oldest, entry[3])
+        return 0.0 if oldest == float("inf") else oldest
 
 
 class ActivationStore:

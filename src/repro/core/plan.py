@@ -599,7 +599,8 @@ class CompiledMemoryPlan:
         from repro.core.exec.layers import init_params
         return init_params(self.graph, rng)
 
-    def loss_and_grads(self, params, x, label, *, executor=None, mask=None):
+    def loss_and_grads(self, params, x, label, *, executor=None, mask=None,
+                       engine=None):
         """One layer-basis training iteration under this plan.
 
         Replays the lowered op list on the configured executor backend
@@ -615,11 +616,17 @@ class CompiledMemoryPlan:
         ``peak_inflight_prefetch``) lands in ``self.exec_report`` and is
         folded into :meth:`report`.  Returns ``(loss, grads,
         SwapExecStats)``.
+
+        ``engine`` optionally injects a :class:`TransferEngine` into the
+        replay backends (``"sim"``/``"async"``) — e.g. a bus-paced engine
+        for emulated-hardware benchmarks; the jit-fused backend manages
+        its own engine and rejects the override.
         """
         self._require_graph("loss_and_grads")
         from repro.core.exec.backends import get_backend
         backend = get_backend(
             executor if executor is not None else self.config.executor)
+        extra = {} if engine is None else {"engine": engine}
         out = backend.run(
             self.graph, params, x, label,
             schedule=self.schedule,
@@ -627,6 +634,7 @@ class CompiledMemoryPlan:
             plan=self.plan if isinstance(self.plan, SwapAwarePlan) else None,
             lowered=self.lowered,
             mask=mask,
+            **extra,
         )
         self.exec_report = backend.report()
         return out

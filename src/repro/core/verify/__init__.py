@@ -77,6 +77,7 @@ op by op.
 from repro.core.verify.checks import (CHECKS, SEV_ERROR, SEV_WARNING,
                                       CheckContext, Diagnostic,
                                       ScheduleVerificationError, VerifyReport,
+                                      SessionArenaSlice,
                                       StaticResidencyModel, _walk_residency,
                                       check_arena_alias, check_budget,
                                       check_heap, check_inplace_prefetch,
@@ -85,8 +86,8 @@ from repro.core.verify.checks import (CHECKS, SEV_ERROR, SEV_WARNING,
                                       check_use_before_resident, is_verified,
                                       mark_verified,
                                       plan_aliasing_diagnostics,
-                                      verify_model_plan, verify_plan,
-                                      verify_schedule)
+                                      verify_interleaving, verify_model_plan,
+                                      verify_plan, verify_schedule)
 from repro.core.verify.deps import (DepEdge, DependenceGraph, FusedBlock,
                                     FusionPlan, build_dependence_graph,
                                     check_deps, deps_summary, plan_fusion,
@@ -108,6 +109,7 @@ __all__ = [
     "FusedBlock",
     "FusionPlan",
     "ScheduleVerificationError",
+    "SessionArenaSlice",
     "StaticResidencyModel",
     "VerifyReport",
     "build_dependence_graph",
@@ -128,6 +130,7 @@ __all__ = [
     "schedules_equivalent",
     "transfer_slack",
     "verify_fusion",
+    "verify_interleaving",
     "verify_model_plan",
     "verify_plan",
     "verify_schedule",

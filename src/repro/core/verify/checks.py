@@ -836,6 +836,80 @@ def verify_plan(cp, *, checks: Optional[Iterable[str]] = None
 
 
 # ---------------------------------------------------------------------------
+# Cross-session interleaving legality
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SessionArenaSlice:
+    """One admitted session's claim on the shared device arena.
+
+    The phase-interleaved scheduler (:mod:`repro.serve.scheduler`) runs N
+    sessions' plans concurrently over one physical arena; each session's
+    plan packs its own offsets from 0 inside a share starting at
+    ``base_offset``.  Interleaving is alias-free iff the shares are
+    pairwise disjoint intervals and every plan fits inside its share —
+    exactly what :func:`verify_interleaving` proves.
+    """
+
+    session: str                 # session/user id
+    qos: str                     # admission QoS class name
+    base_offset: int             # share start in the physical arena
+    share_bytes: int             # share size (admission-priced)
+    peak_bytes: int              # the session plan's packed device peak
+
+    @property
+    def end(self) -> int:
+        return self.base_offset + self.share_bytes
+
+
+def verify_interleaving(slices) -> VerifyReport:
+    """Prove N admitted sessions may interleave on one device arena.
+
+    Emits ``cross_session_arena`` diagnostics when any share starts at a
+    negative offset, any session's packed peak exceeds its share (its ops
+    would write past the share's end), or any two shares' byte intervals
+    overlap (one session's swaps would alias another's live activations).
+    This check judges the *admission state*, not a single lowered
+    schedule, so it lives outside the per-schedule :data:`CHECKS`
+    registry — the scheduler runs it over the live slice set before any
+    cursor advances, and the mutation harness forges overlapping slices
+    against it (class 12).
+    """
+    t0 = time.perf_counter()
+    sl = sorted(slices, key=lambda s: (s.base_offset, s.session))
+    diags: List[Diagnostic] = []
+    for s in sl:
+        if s.base_offset < 0:
+            diags.append(Diagnostic(
+                SEV_ERROR, "cross_session_arena",
+                f"session {s.session!r} ({s.qos}) share starts at negative "
+                f"offset {s.base_offset}",
+                tensor=s.session, offsets=(s.base_offset,)))
+        if s.peak_bytes > s.share_bytes:
+            diags.append(Diagnostic(
+                SEV_ERROR, "cross_session_arena",
+                f"session {s.session!r} ({s.qos}) plan peak "
+                f"{s.peak_bytes} B exceeds its arena share "
+                f"{s.share_bytes} B",
+                tensor=s.session,
+                offsets=(s.base_offset, s.peak_bytes, s.share_bytes)))
+    for a, b in zip(sl, sl[1:]):
+        if b.base_offset < a.end:
+            diags.append(Diagnostic(
+                SEV_ERROR, "cross_session_arena",
+                f"arena shares overlap: {a.session!r} ({a.qos}) "
+                f"[{a.base_offset},{a.end}) vs {b.session!r} ({b.qos}) "
+                f"[{b.base_offset},{b.end})",
+                tensor=a.session,
+                offsets=(a.base_offset, a.end, b.base_offset, b.end)))
+    dt = time.perf_counter() - t0
+    return VerifyReport(
+        diagnostics=tuple(diags), checks_run=("cross_session_arena",),
+        ops_scanned=0, placements_scanned=len(sl),
+        wall_time_s=dt, check_seconds={"cross_session_arena": dt})
+
+
+# ---------------------------------------------------------------------------
 # Verified-schedule registry (the backends' admission check)
 # ---------------------------------------------------------------------------
 

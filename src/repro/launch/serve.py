@@ -35,6 +35,25 @@ from typing import List
 # personalize: the multi-tenant fine-tuning loop
 # ---------------------------------------------------------------------------
 
+def _parse_qos(spec: str):
+    """Parse ``name:weight:slots,...`` into QosClass objects plus a
+    flattened slot list used to deal users across classes in order."""
+    from repro.serve import QosClass
+
+    classes, deal = [], []
+    for part in spec.split(","):
+        fields = part.split(":")
+        if not 1 <= len(fields) <= 3 or not fields[0]:
+            raise SystemExit(f"bad --qos entry {part!r}; "
+                             "expected name[:weight[:slots]]")
+        name = fields[0]
+        weight = float(fields[1]) if len(fields) > 1 else 1.0
+        slots = int(fields[2]) if len(fields) > 2 else 1
+        classes.append(QosClass(name, weight, slots=slots))
+        deal.extend([name] * slots)
+    return tuple(classes), deal
+
+
 def run_personalize(args: argparse.Namespace) -> None:
     import numpy as np
 
@@ -56,11 +75,24 @@ def run_personalize(args: argparse.Namespace) -> None:
         injector.arm_kill(f"session:u{args.kill_user}",
                           after=args.kill_after)
 
+    qos_classes, qos_of = None, {}
+    max_live = args.max_live
+    if args.qos:
+        qos_classes, deal = _parse_qos(args.qos)
+        # deal users across the declared slots in order, wrapping so
+        # --users larger than the slot total still gets a class label
+        qos_of = {f"u{u}": deal[u % len(deal)] for u in range(args.users)}
+        # admission requires the class slots to sum to the session cap
+        max_live = len(deal)
+
     budget = args.device_budget_mb * (1 << 20) if args.device_budget_mb \
         else None
     svc = PersonalizationService(
-        graph, buckets=buckets, max_live_sessions=args.max_live,
+        graph, buckets=buckets, max_live_sessions=max_live,
         device_budget_bytes=budget, config=config, lr=args.lr,
+        qos=qos_classes, interleave=args.interleave,
+        bus_gbps=args.bus_gbps if args.bus_gbps > 0 else None,
+        bus_latency_s=args.bus_latency,
         injector=injector, seed=args.seed)
     t0 = time.time()
     svc.warmup()
@@ -72,13 +104,22 @@ def run_personalize(args: argparse.Namespace) -> None:
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     for step in range(args.steps):
+        # enqueue the whole round, then drain once: in interleaved mode
+        # the scheduler round-robins every user's cursor at phase
+        # boundaries, hiding one tenant's DMA under another's compute;
+        # with --no-interleave the same queue drains FIFO
+        reqs = []
         for u in range(args.users):
             # bucketed traffic: odd users send short batches (padded up),
             # even users fill the largest bucket
             n = int(rng.integers(1, buckets[0] + 1)) if u % 2 \
                 else buckets[-1]
             x, y = dummy_batch(graph, n, seed=step * args.users + u)
-            res = svc.submit(f"u{u}", x, y)
+            reqs.append(svc.enqueue(f"u{u}", x, y,
+                                    qos=qos_of.get(f"u{u}")))
+        svc.drain()
+        for u, req in enumerate(reqs):
+            res = req.result
             tag = f"loss={res.loss:.4f} bucket={res.bucket}" \
                 if res.ok else res.reason
             print(f"  step {step} u{u}: {res.status} {tag}")
@@ -87,6 +128,13 @@ def run_personalize(args: argparse.Namespace) -> None:
     rep = svc.report()
     rep["driver"] = {"users": args.users, "steps": args.steps,
                      "wall_time_s": round(t_total, 3)}
+    sched = rep.get("scheduler")
+    if args.interleave and sched:
+        hidden = sched["hidden_dma_s"] + sched["opt_hidden_dma_s"]
+        exposed = sched["exposed_dma_s"] + sched["opt_exposed_dma_s"]
+        print(f"interleaved drain: {hidden*1e3:.1f} ms DMA hidden under "
+              f"compute ({sched['cross_hidden_dma_s']*1e3:.1f} ms under "
+              f"*other* sessions'), {exposed*1e3:.1f} ms exposed")
     print(json.dumps(rep, indent=2, default=str))
     if args.json:
         with open(args.json, "w") as f:
@@ -182,6 +230,23 @@ def main() -> None:
     p.add_argument("--device-budget-mb", type=int, default=0,
                    help="arena budget (MiB); 0 derives it from the plans")
     p.add_argument("--executor", default="sim", choices=("sim", "async"))
+    p.add_argument("--interleave", action=argparse.BooleanOptionalAction,
+                   default=True,
+                   help="phase-interleave live sessions so one tenant's "
+                        "DMA overlaps another's compute "
+                        "(--no-interleave = synchronous FIFO drain)")
+    p.add_argument("--qos", default="",
+                   help="comma-separated QoS classes as "
+                        "name[:weight[:slots]], e.g. "
+                        "'premium:2.0:2,standard:1.0:6'; users are dealt "
+                        "across the declared slots in order")
+    p.add_argument("--bus-gbps", type=float, default=0.0,
+                   help="emulated host<->device bus bandwidth (GB/s); "
+                        "0 disables pacing")
+    p.add_argument("--bus-latency", type=float, default=0.0,
+                   help="emulated per-access bus latency (seconds); the "
+                        "sync FIFO path pays it per transfer, the async "
+                        "engine amortizes it across the queue")
     p.add_argument("--lr", type=float, default=0.05)
     p.add_argument("--kill-user", type=int, default=None,
                    help="arm a fault-injection kill for user uN")

@@ -15,9 +15,13 @@ serving stack:
 * :mod:`repro.serve.servable`  — ``ServablePersonalizer``: one frozen base
   parameter tree shared by every session + per-user trainable deltas and
   optimizer state.
-* :mod:`repro.serve.service`   — ``PersonalizationService``: the FIFO
-  request loop (``submit(user, x, y) -> StepResult``) with graceful
+* :mod:`repro.serve.service`   — ``PersonalizationService``: the request
+  loop (``submit(user, x, y, qos=...) -> StepResult``) with graceful
   rejection and fault-injection kill points.
+* :mod:`repro.serve.scheduler` — ``StepScheduler``: phase-interleaved
+  multi-session execution — N sessions' schedule cursors round-robin over
+  one shared device stream, so one tenant's DMA hides under another's
+  compute (``drain`` default; ``interleave=False`` restores FIFO).
 
 Quick start::
 
@@ -30,16 +34,19 @@ Quick start::
     print(res.status, res.loss, svc.report())
 """
 
-from repro.serve.admission import (AdmissionController, ServeStats,
-                                   SessionStats)
+from repro.serve.admission import (AdmissionController, QosClass,
+                                   QosClassStats, ServeStats, SessionStats)
 from repro.serve.buckets import (PlanCache, choose_bucket, dummy_batch,
                                  pad_to_bucket)
+from repro.serve.scheduler import SessionWork, StepOutcome, StepScheduler
 from repro.serve.servable import ServablePersonalizer, Session
 from repro.serve.service import PersonalizationService, StepResult
 
 __all__ = [
     "PersonalizationService", "StepResult",
     "ServablePersonalizer", "Session",
-    "AdmissionController", "ServeStats", "SessionStats",
+    "AdmissionController", "QosClass", "QosClassStats",
+    "ServeStats", "SessionStats",
+    "StepScheduler", "SessionWork", "StepOutcome",
     "PlanCache", "choose_bucket", "pad_to_bucket", "dummy_batch",
 ]

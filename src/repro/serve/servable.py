@@ -96,11 +96,25 @@ class ServablePersonalizer:
     def train_step(self, sess: Session, cp: CompiledMemoryPlan,
                    x: jax.Array, y: jax.Array, *,
                    mask: Optional[jax.Array] = None,
+                   engine=None,
                    ) -> Tuple[float, SwapExecStats]:
         """One planned fine-tune step: replay the plan on the merged tree,
-        then momentum-SGD the session's private slice."""
+        then momentum-SGD the session's private slice.  ``engine``
+        optionally injects a transfer engine (e.g. bus-paced) into the
+        replay."""
         loss, grads, stats = cp.loss_and_grads(
-            self.merged_params(sess), x, y, mask=mask)
+            self.merged_params(sess), x, y, mask=mask, engine=engine)
+        self.apply_update(sess, grads)
+        return float(loss), stats
+
+    def apply_update(self, sess: Session, grads: Params) -> None:
+        """Momentum-SGD the session's private slice with ``grads``.
+
+        Split from :meth:`train_step` so the phase-interleaved scheduler
+        (which drives the replay itself through a
+        :class:`~repro.core.exec.ScheduleCursor`) applies the identical
+        update when a cursor finishes.
+        """
         if sess.velocity is None:
             sess.velocity = {o: {k: jnp.zeros_like(w)
                                  for k, w in entry.items()}
@@ -115,4 +129,3 @@ class ServablePersonalizer:
                 ventry[k] = v
                 pentry[k] = pentry[k] - self.lr * v
         sess.step += 1
-        return float(loss), stats

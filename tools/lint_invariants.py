@@ -4,17 +4,19 @@
 Two rules, both over every ``.py`` file under ``src/``:
 
 admission
-    No src/ code path may call an executor backend's ``run`` entry
-    (recognised as ``<anything>.run(..., schedule=...)`` — the
-    ``ExecutorBackend`` signature) outside the admitted call sites
-    (``repro.core.plan`` routing through ``_apply_verify`` and
-    ``repro.core.exec.backends`` itself, whose ``run`` performs the
-    verify admission).  A new call site would bypass the static
-    verifier: schedules must be proven before they reach a device
-    stream.  The admitted modules are additionally required to still
-    contain the ``is_verified`` admission tripwire, so deleting the
-    admission block fails the lint rather than silently unguarding
-    every call site.
+    No src/ code path may call an executor backend's ``run`` or
+    ``start`` entry (recognised as ``<anything>.run(..., schedule=...)``
+    / ``<anything>.start(..., schedule=...)`` — the ``ExecutorBackend``
+    signatures) outside the admitted call sites (``repro.core.plan``
+    routing through ``_apply_verify``, ``repro.core.exec.backends``
+    itself, whose ``run``/``start`` perform the verify admission, and
+    ``repro.serve.scheduler``, whose cursors come only from the
+    admission-gated ``start`` and which re-asserts ``is_verified`` per
+    cursor).  A new call site would bypass the static verifier:
+    schedules must be proven before they reach a device stream.  The
+    admitted modules are additionally required to still contain the
+    ``is_verified`` admission tripwire, so deleting the admission block
+    fails the lint rather than silently unguarding every call site.
 
 deprecated-import
     No src/ module may import the deprecated ``repro.core``
@@ -36,13 +38,15 @@ SRC = Path(__file__).resolve().parent.parent / "src"
 CORE_INIT = SRC / "repro" / "core" / "__init__.py"
 SHIM_MODULE = "repro.core.planned_exec"
 
-# modules whose backend-run call sites are admission-checked (relative
-# to src/) -> the admission token each must still contain: backends.py
-# gates run() on is_verified; plan.py marks schedules verified through
-# _apply_verify before any run
+# modules whose backend-run/start call sites are admission-checked
+# (relative to src/) -> the admission token each must still contain:
+# backends.py gates run()/start() on is_verified; plan.py marks
+# schedules verified through _apply_verify before any run; the
+# interleaving scheduler re-asserts is_verified on every cursor it opens
 RUN_ALLOWLIST = {
     "repro/core/plan.py": "mark_verified",
     "repro/core/exec/backends.py": "is_verified",
+    "repro/serve/scheduler.py": "is_verified",
 }
 # modules allowed to mention the shim / deprecated table (the shims
 # themselves and the package __init__ that hosts the table)
@@ -69,16 +73,17 @@ def lint_file(path: Path, rel: str, deprecated: set) -> list:
     findings = []
     tree = ast.parse(path.read_text(), filename=str(path))
     for node in ast.walk(tree):
-        # ---- admission: <expr>.run(..., schedule=...) -----------------
+        # ---- admission: <expr>.run/.start(..., schedule=...) ----------
         if isinstance(node, ast.Call) \
                 and isinstance(node.func, ast.Attribute) \
-                and node.func.attr == "run" \
+                and node.func.attr in ("run", "start") \
                 and any(kw.arg == "schedule" for kw in node.keywords):
             if rel not in RUN_ALLOWLIST:
                 findings.append((
                     node.lineno, "admission",
-                    "backend .run(schedule=...) outside the admitted call "
-                    "sites — route through compile_plan(...).loss_and_grads"
+                    f"backend .{node.func.attr}(schedule=...) outside the "
+                    "admitted call sites — route through "
+                    "compile_plan(...).loss_and_grads or the StepScheduler"
                     " so the schedule passes verify admission"))
         # ---- deprecated-import ----------------------------------------
         if isinstance(node, ast.ImportFrom) and rel not in SHIM_ALLOWLIST:

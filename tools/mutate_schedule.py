@@ -32,6 +32,8 @@ drop_dep_edge       SwapOut permuted ahead   dep_edge
                     of its producing Compute
 fuse_across_swap    forged FusedBlock        fusion_fence
                     spanning a SwapOut
+overlap_arena_      two sessions' arena      cross_session_arena
+shares              shares alias
 ==================  =======================  ==========================
 
 The first eight corrupt op *metadata* (offsets, phases, multiset) with
@@ -44,6 +46,12 @@ dependence prover's beat (``repro.core.verify.deps``): a checker suite
 blind to either axis would pass one of the two families.
 ``fuse_across_swap`` forges a :class:`FusionPlan` rather than an op list,
 so it is judged by ``verify_fusion`` instead of ``verify_schedule``.
+``overlap_arena_shares`` corrupts neither axis of one schedule: it forges
+the *admission-time* per-session arena partition the phase-interleaved
+scheduler trusts (two sessions' base offsets overlapping), so it is
+judged by ``verify_interleaving`` — the cross-session aliasing prover
+every other checker is structurally blind to (they each see one session's
+private offsets, which remain individually clean).
 
 Run as a script (CI gate: exits non-zero on any missed corruption) or
 import ``MUTATIONS`` / ``forge`` from tests.
@@ -59,7 +67,8 @@ from repro.core.plan import (Compute, ExecutionSchedule, Free,  # noqa: E402
                              OptPrefetch, Prefetch, SwapOut)
 from repro.core.planner import ALIGN  # noqa: E402
 from repro.core.verify import (FusedBlock, FusionPlan,  # noqa: E402
-                               verify_fusion, verify_schedule)
+                               SessionArenaSlice, verify_fusion,
+                               verify_interleaving, verify_schedule)
 from repro.core.zoo import ZOO  # noqa: E402
 
 
@@ -220,6 +229,32 @@ FUSION_MUTATIONS = {
 }
 
 
+def forge_overlapping_shares(cp):
+    """Two sessions' arena shares overlapping — the admission bug the
+    phase-interleaved scheduler would otherwise silently trust.
+
+    Each forged session's *own* plan is the clean reference plan (every
+    per-schedule checker passes), and each peak fits its share — only the
+    partition is corrupt: session b's base offset starts inside session
+    a's share, so a's swap traffic would land in b's live arena bytes.
+    ``verify_interleaving`` must flag the pair (``cross_session_arena``)."""
+    share = cp.peak_bytes + cp.optim_device_bytes
+    return [
+        SessionArenaSlice(session="a", qos="standard", base_offset=0,
+                          share_bytes=share, peak_bytes=cp.peak_bytes),
+        SessionArenaSlice(session="b", qos="standard",
+                          base_offset=share // 2,   # inside a's share
+                          share_bytes=share, peak_bytes=cp.peak_bytes),
+    ]
+
+
+# Cross-session corruption classes: judged by verify_interleaving over
+# forged per-session arena slices — there is no single op list to forge.
+INTERLEAVE_MUTATIONS = {
+    "overlap_arena_shares": ("cross_session_arena", forge_overlapping_shares),
+}
+
+
 def forge(cp, name: str) -> ExecutionSchedule:
     """Apply one named corruption to ``cp``'s lowered op list."""
     _, fn = mutations(cp)[name]
@@ -256,6 +291,15 @@ def main() -> int:
         status = "caught" if caught else "MISSED"
         print(f"{status:>7} {name}: expected={expected} got={got} "
               f"({len(diags)} diagnostic(s))")
+        if not caught:
+            missed += 1
+    for name, (expected, forge_fn) in INTERLEAVE_MUTATIONS.items():
+        report = verify_interleaving(forge_fn(cp))
+        got = sorted(report.check_ids())
+        caught = expected in got and not report.ok
+        status = "caught" if caught else "MISSED"
+        print(f"{status:>7} {name}: expected={expected} got={got} "
+              f"({len(report.errors())} error(s))")
         if not caught:
             missed += 1
     if missed:
